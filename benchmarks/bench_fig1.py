@@ -1,0 +1,30 @@
+"""Figure 1 analogue: eval loss vs total sparsity, STUN vs OWL-only.
+
+The paper's headline curve (GSM8K accuracy vs sparsity for Arctic):
+unstructured-only degrades sharply past ~40%, STUN holds on longer.
+"""
+from __future__ import annotations
+
+from benchmarks.common import calib, emit, eval_loss, tiny_moe_cfg, train_tiny
+from repro.core import stun_prune, unstructured_only
+
+
+def main():
+    cfg = tiny_moe_cfg()
+    params = train_tiny(cfg, "tiny_moe")
+    batches = calib(cfg)
+    base = eval_loss(params, cfg)
+    emit("fig1/sparsity_0", 0.0, f"stun={base:.4f};owl={base:.4f}")
+    for sp in (0.3, 0.4, 0.5, 0.6, 0.7):
+        p1, c1, _, _ = stun_prune(params, cfg, batches, target_sparsity=sp,
+                                  expert_ratio=0.25, unstructured="owl")
+        l1 = eval_loss(p1, c1)
+        p2, _, _ = unstructured_only(params, cfg, batches,
+                                     target_sparsity=sp, method="owl")
+        l2 = eval_loss(p2, cfg)
+        emit(f"fig1/sparsity_{int(sp*100)}", 0.0,
+             f"stun={l1:.4f};owl={l2:.4f};stun_wins={l1 < l2}")
+
+
+if __name__ == "__main__":
+    main()

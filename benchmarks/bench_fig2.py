@@ -1,0 +1,34 @@
+"""Figure 2 analogue (RQ3): the STUN-vs-unstructured gap grows with the
+number of (smaller) experts.
+
+Paper: gap increases from Mixtral-8x22B (few large experts) to Arctic
+(128 small experts).  Here: 4/8/16-expert tiny MoEs at fixed total expert
+parameters (moe_d_ff scales inversely), same total sparsity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import calib, emit, eval_loss, tiny_moe_cfg, train_tiny
+from repro.core import stun_prune, unstructured_only
+
+
+def main():
+    for n_e, ff in ((4, 64), (8, 32), (16, 16)):
+        cfg = tiny_moe_cfg(n_experts=n_e, top_k=2)
+        cfg = dataclasses.replace(cfg, moe_d_ff=ff)
+        params = train_tiny(cfg, f"tiny_moe_e{n_e}")
+        batches = calib(cfg)
+        base = eval_loss(params, cfg)
+        p1, c1, _, _ = stun_prune(params, cfg, batches, target_sparsity=0.5,
+                                  expert_ratio=0.25, unstructured="owl")
+        l1 = eval_loss(p1, c1)
+        p2, _, _ = unstructured_only(params, cfg, batches,
+                                     target_sparsity=0.5, method="owl")
+        l2 = eval_loss(p2, cfg)
+        emit(f"fig2/experts_{n_e}", 0.0,
+             f"base={base:.4f};stun={l1:.4f};owl={l2:.4f};gap={l2-l1:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

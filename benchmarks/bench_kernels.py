@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels cannot execute compiled (interpret
+mode measures the Python interpreter, not the TPU), so we time the jitted
+jnp reference path — the same math the kernel implements — and derive
+bytes/FLOPs rates.  The TPU-side performance story for each kernel lives
+in the §Roofline/§Perf analysis (VMEM tiling budgets in each kernel's
+docstring).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import random
+
+from benchmarks.common import emit
+from repro.kernels import ref
+
+RNG = random.PRNGKey(0)
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6  # us
+
+
+def main():
+    # flash attention ref
+    B, H, S, hd = 1, 4, 1024, 64
+    q = random.normal(RNG, (B, H, S, hd), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(fn, q, q, q)
+    flops = 4 * B * H * S * S * hd
+    emit("kernels/flash_attention_ref", us,
+         f"gflops={flops/us/1e3:.2f};shape=B{B}H{H}S{S}hd{hd}")
+
+    # moe gmm ref
+    E, C, D, F = 8, 256, 256, 512
+    buf = random.normal(RNG, (E, C, D), jnp.float32)
+    w = random.normal(RNG, (E, D, F), jnp.float32)
+    fn = jax.jit(ref.moe_gmm_ref)
+    us = _time(fn, buf, w)
+    flops = 2 * E * C * D * F
+    emit("kernels/moe_gmm_ref", us, f"gflops={flops/us/1e3:.2f};E{E}C{C}D{D}F{F}")
+
+    # block sparse matmul ref (50% block density)
+    M, K, N, bk, bn = 512, 512, 512, 128, 128
+    x = random.normal(RNG, (M, K), jnp.float32)
+    wd = random.normal(RNG, (K, N), jnp.float32)
+    bm = jnp.asarray(np.random.RandomState(0).rand(K // bk, N // bn) < 0.5)
+    fn = jax.jit(lambda x, w, m: ref.block_sparse_matmul_ref(x, w, m, bk, bn))
+    us = _time(fn, x, wd, bm)
+    emit("kernels/block_sparse_ref", us,
+         f"dense_gflops={2*M*K*N/us/1e3:.2f};block_density=0.5")
+
+    # wanda mask apply ref
+    K2, N2 = 2048, 2048
+    w2 = random.normal(RNG, (K2, N2), jnp.float32)
+    xn = jnp.abs(random.normal(RNG, (K2,)))
+    th = jnp.abs(random.normal(RNG, (N2,)))
+    fn = jax.jit(ref.wanda_mask_apply_ref)
+    us = _time(fn, w2, xn, th)
+    gb = 2 * K2 * N2 * 4 / 1e9
+    emit("kernels/wanda_mask_ref", us, f"gbps={gb/(us/1e6):.2f}")
+
+    # rglru scan ref
+    B2, S2, W2 = 4, 512, 256
+    a = jax.nn.sigmoid(random.normal(RNG, (B2, S2, W2)))
+    b = random.normal(RNG, (B2, S2, W2))
+    fn = jax.jit(ref.rglru_scan_ref)
+    us = _time(fn, a, b)
+    emit("kernels/rglru_scan_ref", us,
+         f"elems_per_us={B2*S2*W2/us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The O(1)-vs-O(k^n/√n) cost claim: wall-clock of our expert pruning vs
+the combinatorial forward-pass count, as n grows (footnote 2's 2.4e37
+number for n=128 is reproduced analytically)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+from repro.core import behavioral_distance, cluster_experts, n_combinations
+from repro.core.expert_prune import representatives
+
+
+def main():
+    rs = np.random.RandomState(0)
+    for n in (16, 32, 64, 128):
+        W = rs.randn(n, 256).astype(np.float32)       # router rows
+        flat = rs.randn(n, 4096).astype(np.float32)   # expert params
+        with Timer() as t:
+            dist = behavioral_distance(W)
+            labels = cluster_experts(dist, int(n * 0.75))
+            representatives(flat, labels, kappa=3)
+        combos = n_combinations(n, 0.25)
+        emit(f"scaling/experts_{n}", t.seconds * 1e6,
+             f"ours_fwd_passes=0;combinatorial_fwd_passes={combos:.3e}")
+
+
+if __name__ == "__main__":
+    main()

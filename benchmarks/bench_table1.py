@@ -1,0 +1,46 @@
+"""Table 1 analogue: STUN vs unstructured-only at matched total sparsity.
+
+Paper: Arctic/Mixtral on GSM8K+NLU at 40–70% sparsity; here: the trained
+tiny MoE's held-out eval loss (lower = better) at 40% and 65%.  The claim
+under test: STUN (expert-prune, then Wanda/OWL) beats Wanda/OWL alone at
+the same total sparsity.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (Timer, calib, emit, eval_loss, tiny_moe_cfg,
+                               train_tiny)
+from repro.core import stun_prune, unstructured_only
+
+
+def main():
+    cfg = tiny_moe_cfg()
+    params = train_tiny(cfg, "tiny_moe")
+    batches = calib(cfg)
+    base = eval_loss(params, cfg)
+    emit("table1/unpruned", 0.0, f"eval_loss={base:.4f}")
+
+    for sparsity in (0.4, 0.65):
+        for method in ("owl", "wanda"):
+            with Timer() as t:
+                p, c, _, rep = stun_prune(params, cfg, batches,
+                                          target_sparsity=sparsity,
+                                          expert_ratio=0.25,
+                                          unstructured=method)
+            l_stun = eval_loss(p, c)
+            emit(f"table1/stun_{method}_{int(sparsity*100)}",
+                 t.seconds * 1e6,
+                 f"eval_loss={l_stun:.4f};delta={l_stun-base:+.4f}")
+
+            with Timer() as t:
+                p2, _, r2 = unstructured_only(params, cfg, batches,
+                                              target_sparsity=sparsity,
+                                              method=method)
+            l_unstr = eval_loss(p2, cfg)
+            emit(f"table1/{method}_only_{int(sparsity*100)}",
+                 t.seconds * 1e6,
+                 f"eval_loss={l_unstr:.4f};delta={l_unstr-base:+.4f};"
+                 f"stun_wins={l_stun < l_unstr}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table 3/4/5 analogue (RQ4 ablations): clustering algorithm and
+selective-reconstruction κ for the expert-pruning stage at 50% experts."""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_loss, tiny_moe_cfg, train_tiny
+from repro.core import expert_prune_moe
+
+
+def main():
+    cfg = tiny_moe_cfg()
+    params = train_tiny(cfg, "tiny_moe")
+    base = eval_loss(params, cfg)
+    emit("table3/unpruned", 0.0, f"eval_loss={base:.4f}")
+
+    # clustering ablation (Table 4)
+    for method in ("agglomerative", "dsatur"):
+        p, c, _, _ = expert_prune_moe(params, cfg, 0.5, method=method)
+        emit(f"table3/cluster_{method}", 0.0,
+             f"eval_loss={eval_loss(p, c):.4f}")
+
+    # selective reconstruction ablation (Table 5): never / selective / always
+    for name, kappa in (("never_k0", 0), ("selective_k3", 3),
+                        ("always_k99", 99)):
+        p, c, _, rep = expert_prune_moe(params, cfg, 0.5, kappa=kappa)
+        emit(f"table3/reconstruct_{name}", 0.0,
+             f"eval_loss={eval_loss(p, c):.4f};"
+             f"reconstructed_layers={sum(rep.reconstructed)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Shared benchmark substrate: a trained tiny MoE (cached), eval harness.
+
+The paper evaluates pruning on trained MoEs (Arctic/Mixtral) with
+GSM8K/NLU suites; our CPU-scale analogue trains a tiny MoE on the
+synthetic Markov LM until it clearly beats the unigram floor, then
+measures held-out eval loss after each pruning strategy.  All tables
+reuse ONE cached model so the whole suite runs in minutes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, reduced
+from repro.data.synthetic import SyntheticLM, batch_iterator, make_batch
+from repro.models import abstract_params, loss_fn
+from repro.models import param as pm
+from repro.optim import AdamWConfig
+from repro.runtime import TrainLoopConfig, train_loop
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "experiments", "cache")
+DATA_SEED = 11
+
+
+def tiny_moe_cfg(n_experts: int = 8, top_k: int = 2, n_layers: int = 2,
+                 d_model: int = 64):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=n_layers,
+                  n_experts=n_experts, top_k=top_k, d_model=d_model,
+                  vocab=256)
+    return dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                               remat_policy="full")
+
+
+def tiny_dense_cfg(n_layers: int = 2, d_model: int = 64):
+    cfg = reduced(get_config("qwen2-7b"), n_layers=n_layers, d_model=d_model,
+                  vocab=256)
+    return dataclasses.replace(cfg, dtype="float32", remat_policy="full")
+
+
+def train_tiny(cfg, name: str, steps: int = 400, batch: int = 8,
+               seq: int = 64):
+    """Train (or load cached) params for `cfg` on the synthetic LM."""
+    ckdir = os.path.join(CACHE, name)
+    if latest_step(ckdir) is not None:
+        _, tree = restore_checkpoint(ckdir)
+        return jax.tree.map(jnp.asarray, tree["params"])
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    it = batch_iterator(cfg, batch, seq, seed=DATA_SEED)
+    lc = TrainLoopConfig(total_steps=steps, checkpoint_every=10 ** 9,
+                         log_every=100, warmup_steps=20)
+    params, _, hist = train_loop(cfg, params, it, lc,
+                                 AdamWConfig(lr=1e-3, weight_decay=0.01),
+                                 log_fn=lambda *a: None)
+    save_checkpoint(ckdir, steps, {"params": jax.tree.map(np.asarray,
+                                                          params)})
+    return params
+
+
+def eval_loss(params, cfg, n_batches: int = 8, batch: int = 8,
+              seq: int = 64) -> float:
+    """Held-out eval loss (steps beyond the training range)."""
+    lm = SyntheticLM(vocab=cfg.vocab, seed=DATA_SEED)
+    fn = jax.jit(lambda p, b: loss_fn(p, cfg, b))
+    tot = 0.0
+    for i in range(n_batches):
+        b = make_batch(lm, batch, seq, step=10_000 + i,
+                       d_model=cfg.d_model, frontend_stub=cfg.frontend_stub)
+        tot += float(fn(params, b))
+    return tot / n_batches
+
+
+def calib(cfg, n: int = 4):
+    lm = SyntheticLM(vocab=cfg.vocab, seed=DATA_SEED)
+    return [make_batch(lm, 4, 64, step=5000 + i, d_model=cfg.d_model,
+                       frontend_stub=cfg.frontend_stub) for i in range(n)]
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+  table1   — STUN vs unstructured-only (paper Table 1)
+  table2   — O(1) vs Lu et al. combinatorial expert pruning (Table 2)
+  fig1     — eval loss vs sparsity curve (Figure 1)
+  fig2     — expert-count trend, RQ3 (Figure 2)
+  table3   — clustering + reconstruction ablations (Tables 3/4/5)
+  kurtosis — §5 robustness probe
+  scaling  — O(1) cost claim vs n experts (footnote 2)
+  kernels  — kernel micro-benchmarks (jnp ref path on CPU)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_fig1, bench_fig2, bench_kernels,
+                        bench_kurtosis, bench_scaling, bench_table1,
+                        bench_table2, bench_table3)
+
+ALL = {
+    "table1": bench_table1.main,
+    "table2": bench_table2.main,
+    "fig1": bench_fig1.main,
+    "fig2": bench_fig2.main,
+    "table3": bench_table3.main,
+    "kurtosis": bench_kurtosis.main,
+    "scaling": bench_scaling.main,
+    "kernels": bench_kernels.main,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in which:
+        try:
+            ALL[name]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

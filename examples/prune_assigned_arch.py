@@ -1,0 +1,54 @@
+"""Run the full STUN pipeline against any assigned architecture (reduced
+to CPU scale) — demonstrates the --arch selectable config surface.
+
+    PYTHONPATH=src python examples/prune_assigned_arch.py --arch qwen2-7b
+    PYTHONPATH=src python examples/prune_assigned_arch.py --arch olmoe-1b-7b
+
+MoE archs get expert pruning (stage 1); dense/ssm/hybrid archs get the
+RQ5 structured FFN stage (§6.2.5), exactly as DESIGN.md §Arch-applicability
+prescribes.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.core import stun_prune
+from repro.data.synthetic import calibration_batches
+from repro.models import abstract_params, loss_fn
+from repro.models import param as pm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b", choices=ASSIGNED_ARCHS)
+    ap.add_argument("--sparsity", type=float, default=0.4)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="full",
+                              moe_impl="dense")
+    print(f"arch={args.arch} family={cfg.family} "
+          f"(reduced: {cfg.n_layers}L d{cfg.d_model})")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    batches = calibration_batches(cfg, n_batches=2)
+    base = float(loss_fn(params, cfg, batches[0]))
+
+    structured = 0.25 if cfg.family == "moe" else 0.05
+    pruned, pcfg, masks, report = stun_prune(
+        params, cfg, batches, target_sparsity=args.sparsity,
+        expert_ratio=structured, unstructured="owl")
+    after = float(loss_fn(pruned, pcfg, batches[0]))
+    print(f"loss: {base:.4f} -> {after:.4f} at {args.sparsity:.0%} sparsity")
+    print(f"stage1 removed {report.structured_ratio:.1%} of prunable "
+          f"params structurally; stage2 OWL at {report.unstructured_ratio:.1%}")
+    print(f"kurtosis: {report.kurtosis_before['__all__']:.2f} -> "
+          f"{report.kurtosis_after_structured['__all__']:.2f} (structured) "
+          f"-> {report.kurtosis_after_unstructured['__all__']:.2f} (final)")
+
+
+if __name__ == "__main__":
+    main()

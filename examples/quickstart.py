@@ -1,0 +1,57 @@
+"""Quickstart: build a tiny MoE, train briefly, STUN-prune it, compare.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import stun_prune, unstructured_only
+from repro.data.synthetic import batch_iterator, calibration_batches
+from repro.models import abstract_params, loss_fn
+from repro.models import param as pm
+from repro.optim import AdamWConfig
+from repro.runtime import TrainLoopConfig, train_loop
+
+
+def main():
+    # 1. a reduced same-family config of the assigned olmoe-1b-7b
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, n_experts=8, top_k=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+    # 2. brief training on the synthetic Markov LM
+    print("== training tiny MoE (200 steps) ==")
+    params, _, _ = train_loop(
+        cfg, params, batch_iterator(cfg, 8, 64, seed=11),
+        TrainLoopConfig(total_steps=200, log_every=50, warmup_steps=20),
+        AdamWConfig(lr=1e-3))
+
+    batches = calibration_batches(cfg, n_batches=4)
+    base = float(loss_fn(params, cfg, batches[0]))
+    print(f"eval loss unpruned: {base:.4f}")
+
+    # 3. STUN at 40% total sparsity (25% experts first, then OWL)
+    pruned, pcfg, _, report = stun_prune(params, cfg, batches,
+                                         target_sparsity=0.4,
+                                         expert_ratio=0.25,
+                                         unstructured="owl")
+    l_stun = float(loss_fn(pruned, pcfg, batches[0]))
+    print(f"STUN  40%: loss={l_stun:.4f} "
+          f"(experts {cfg.n_experts}->{pcfg.n_experts}, "
+          f"then OWL at {report.unstructured_ratio:.0%})")
+
+    # 4. baseline: OWL-only at the same total sparsity
+    owl, _, _ = unstructured_only(params, cfg, batches, target_sparsity=0.4,
+                                  method="owl")
+    l_owl = float(loss_fn(owl, cfg, batches[0]))
+    print(f"OWL-only 40%: loss={l_owl:.4f}")
+    print(f"STUN wins: {l_stun < l_owl}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Sharded, atomic, resharding-tolerant checkpointing.
+
+Layout:  <dir>/step_<N>/manifest.msgpack  (tree structure, shapes, dtypes)
+         <dir>/step_<N>/shard_<host>.bin  (zstd-compressed concatenated
+                                           leaf bytes owned by this host)
+Atomicity: written to `step_<N>.tmp`, fsync'd, renamed — a crashed writer
+never leaves a readable-but-partial step.  Restore returns numpy leaves, so
+the caller can `device_put` onto *any* mesh (elastic restart: mesh shape at
+restore time may differ from save time).  On multi-host deployments each
+host writes the leaves it owns (addressable shards); this container is
+single-host so host 0 owns everything.
+"""
+from __future__ import annotations
+
+import io
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _unflatten(items):
+    root: dict = {}
+    for path, val in items:
+        keys = path.split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = val
+    return root
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    host_id: int = 0, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = list(_flatten(tree))
+    manifest = []
+    cctx = zstd.ZstdCompressor(level=3)
+    buf = io.BytesIO()
+    offset = 0
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        raw = arr.tobytes()
+        manifest.append({"path": path, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype), "offset": offset,
+                         "nbytes": len(raw), "host": host_id})
+        buf.write(raw)
+        offset += len(raw)
+    with open(os.path.join(tmp, f"shard_{host_id}.bin"), "wb") as f:
+        f.write(cctx.compress(buf.getvalue()))
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"step": step, "leaves": manifest}))
+    # atomic publish
+    for fname in os.listdir(tmp):
+        fd = os.open(os.path.join(tmp, fname), os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    os.rename(tmp, final)
+    _cleanup(directory, keep)
+    return final
+
+
+def _cleanup(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None,
+                       shardings=None) -> Tuple[int, Any]:
+    """Returns (step, tree).  With `shardings` (matching pytree of
+    NamedSharding) leaves are device_put onto the *current* mesh —
+    this is the elastic-restart reshard path."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    dctx = zstd.ZstdDecompressor()
+    blobs = {}
+    for entry in manifest["leaves"]:
+        h = entry["host"]
+        if h not in blobs:
+            with open(os.path.join(d, f"shard_{h}.bin"), "rb") as f:
+                blobs[h] = dctx.decompress(f.read())
+    items = []
+    for e in manifest["leaves"]:
+        raw = blobs[e["host"]][e["offset"]: e["offset"] + e["nbytes"]]
+        arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(
+            e["shape"]).copy()
+        items.append((e["path"], arr))
+    tree = _unflatten(items)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                            shardings)
+    return manifest["step"], tree
+
+
+class AsyncCheckpointer:
+    """Background-thread writer; `wait()` joins the in-flight save (called
+    before the next save and on SIGTERM-triggered final checkpoint)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device
+        self._thread = threading.Thread(
+            target=save_checkpoint,
+            args=(self.directory, step, host_tree),
+            kwargs={"keep": self.keep}, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED_ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_configs,
+    reduced,
+    register,
+    shape_applicable,
+)

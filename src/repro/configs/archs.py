@@ -1,0 +1,14 @@
+"""Side-effect import of every architecture config (registry population)."""
+from repro.configs import (  # noqa: F401
+    recurrentgemma_2b,
+    falcon_mamba_7b,
+    command_r_plus_104b,
+    qwen15_4b,
+    qwen2_7b,
+    deepseek_67b,
+    moonshot_v1_16b_a3b,
+    olmoe_1b_7b,
+    musicgen_medium,
+    internvl2_2b,
+    mixtral_8x7b_proxy,
+)

@@ -1,0 +1,305 @@
+"""Config system: model architectures, input shapes, runtime knobs.
+
+Every assigned architecture is a `ModelConfig` registered under its public
+id (``--arch <id>``).  The four benchmark shapes are `ShapeSpec`s.  A config
+is a plain frozen dataclass so it can be hashed into jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # --- attention ---
+    qkv_bias: bool = False
+    attn_logit_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    local_window: Optional[int] = None  # sliding-window size (hybrid local attn)
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0          # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    shared_expert: bool = False
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0           # 0 -> ceil(d_model/16)
+    # --- hybrid (recurrentgemma / griffin) ---
+    layer_pattern: Tuple[str, ...] = ()  # e.g. ("rec","rec","attn") repeating
+    lru_width: int = 0
+    # --- numerics / impl ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scan_layers: bool = True
+    remat_policy: str = "nothing"  # nothing | dots | full(no remat)
+    attn_impl: str = "chunked"     # naive | chunked | pallas
+    attn_chunk: int = 512
+    ssm_chunk: int = 128
+    moe_impl: str = "scatter"      # dense | scatter | gmm(pallas)
+    vocab_pad_to: int = 512
+    # probe mode for dry-run costing: python-unroll every inner scan so
+    # HloCostAnalysis (which visits while bodies once) counts all work
+    unroll_scans: bool = False
+    # --- beyond-paper perf: exact head padding/duplication ---
+    # Pads q heads to a multiple of `head_pad_to` (the model-axis size) and
+    # duplicates kv heads up to it, so attention shards instead of
+    # replicating / involuntarily rematerializing. Mathematically EXACT:
+    # padded q-head outputs are killed by a zero mask on wo rows, duplicated
+    # kv heads carry identical K/V. See models/transformer.pad_attention_params.
+    pad_heads: bool = False
+    head_pad_to: int = 16
+    # keep the residual-stream gradient psum in the model dtype (see
+    # models/layers.rmsnorm_bf16grad) — beyond-paper collective optimization
+    norm_bf16_grad: bool = False
+    # serving: store the KV cache in a narrower dtype ("" = model dtype).
+    # float8_e4m3fn halves the decode memory term — the TPU-idiomatic
+    # analogue of the paper's 4-bit serving quantization.
+    kv_cache_dtype: str = ""
+
+    @property
+    def heads_eff(self) -> int:
+        if not self.pad_heads:
+            return self.n_heads
+        p = self.head_pad_to
+        k_eff = self.kv_eff
+        # q heads padded to a multiple of lcm(p, k_eff) so groups divide
+        base = ((self.n_heads + p - 1) // p) * p
+        while base % k_eff != 0:
+            base += p
+        return base
+
+    @property
+    def kv_eff(self) -> int:
+        if not self.pad_heads:
+            return self.n_kv_heads
+        p = self.head_pad_to
+        K, H = self.n_kv_heads, self.n_heads
+        if K == H:                       # MHA: pad together
+            return ((H + p - 1) // p) * p
+        if K >= p or p % K != 0:
+            return K                     # already shardable / not dup-able
+        return p                         # duplicate each kv head p//K times
+
+    def head_slot_mask(self):
+        """bool [heads_eff]: True = real q head (False rows of wo are
+        zero-masked)."""
+        import numpy as _np
+        H, K = self.n_heads, max(self.n_kv_heads, 1)
+        He, Ke = self.heads_eff, max(self.kv_eff, 1)
+        mask = _np.zeros(He, bool)
+        per_real = H // K                # real q heads per real kv group
+        per_eff = He // K                # slots per real kv group
+        for g in range(K):
+            mask[g * per_eff: g * per_eff + per_real] = True
+        return mask
+    # --- modality frontend stub (audio/vlm) ---
+    frontend_stub: bool = False
+
+    # ---- derived ----
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return ((self.vocab + p - 1) // p) * p
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:  # mamba
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_actual(self) -> int:
+        return self.dt_rank or max(1, (self.d_model + 15) // 16)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode state is O(window) or O(1), not O(seq)."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.padded_vocab
+        hd = self.head_dim
+        n_attn = self.n_layers
+        total = V * d  # embedding
+        if not self.tie_embeddings:
+            total += V * d
+        if self.family == "ssm":
+            di, N, R = self.d_inner, self.ssm_state, self.dt_rank_actual
+            per = (d * 2 * di            # in_proj (x and z)
+                   + di * self.ssm_conv  # conv1d
+                   + di * (R + 2 * N)    # x_proj -> dt, B, C
+                   + R * di + di         # dt_proj
+                   + di * N + di         # A_log, D
+                   + di * d)             # out_proj
+            total += L * (per + d)       # + norm
+            return total
+        if self.family == "hybrid":
+            pat = self.effective_pattern()
+            n_rec = sum(1 for p in pat if p == "rec")
+            n_attn = sum(1 for p in pat if p == "attn")
+            w = self.lru_width or self.d_model
+            rec_per = d * 2 * w + w * self.ssm_conv + 2 * w + w * d + 2 * w  # proj,conv,gates(a/x per-chan),out,lru params
+            attn_per = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            mlp_per = 3 * d * f
+            total += n_rec * (rec_per + mlp_per + 2 * d)
+            total += n_attn * (attn_per + mlp_per + 2 * d)
+            return total
+        # dense / moe / audio / vlm transformer
+        attn_per = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.qkv_bias:
+            attn_per += (self.n_heads + 2 * self.n_kv_heads) * hd
+        if self.family == "moe":
+            mlp_per = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+            if self.shared_expert:
+                mlp_per += 3 * d * self.moe_d_ff
+        else:
+            mlp_per = 3 * d * f
+        total += n_attn * (attn_per + mlp_per + 2 * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_expert = self.n_layers * self.n_experts * 3 * d * self.moe_d_ff
+        act_expert = self.n_layers * self.top_k * 3 * d * self.moe_d_ff
+        return full - all_expert + act_expert
+
+    def effective_pattern(self) -> Tuple[str, ...]:
+        if self.family == "hybrid":
+            pat = []
+            while len(pat) < self.n_layers:
+                pat.extend(self.layer_pattern)
+            return tuple(pat[: self.n_layers])
+        if self.family == "ssm":
+            return tuple(["ssm"] * self.n_layers)
+        return tuple(["attn"] * self.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned benchmark cells)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether a benchmark cell applies to this architecture."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (O(seq) KV cache)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED_ARCHS = (
+    "recurrentgemma-2b",
+    "falcon-mamba-7b",
+    "command-r-plus-104b",
+    "qwen1.5-4b",
+    "qwen2-7b",
+    "deepseek-67b",
+    "moonshot-v1-16b-a3b",
+    "olmoe-1b-7b",
+    "musicgen-medium",
+    "internvl2-2b",
+)
+
+
+def _ensure_loaded():
+    # import side-effect registration of all arch modules
+    if _REGISTRY:
+        return
+    from repro.configs import archs  # noqa: F401
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 2 if cfg.family != "hybrid" else 3),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        vocab_pad_to=64,
+        scan_layers=cfg.scan_layers,
+        attn_chunk=32,
+        ssm_chunk=16,
+    )
+    if cfg.family == "moe":
+        small.update(n_experts=min(cfg.n_experts, 8), top_k=min(cfg.top_k, 2),
+                     moe_d_ff=32, d_ff=0)
+    if cfg.family == "ssm":
+        small.update(ssm_state=cfg.ssm_state, d_ff=0, n_heads=1, n_kv_heads=1)
+    if cfg.family == "hybrid":
+        small.update(lru_width=64, local_window=32, n_kv_heads=1)
+    small.update(overrides)
+    return replace(cfg, **small)

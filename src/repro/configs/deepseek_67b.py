@@ -1,0 +1,18 @@
+"""deepseek-67b [dense] — llama-arch, GQA kv=8.
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400
+[arXiv:2401.02954; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab=102400,
+))

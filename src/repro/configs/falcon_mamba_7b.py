@@ -1,0 +1,21 @@
+"""falcon-mamba-7b [ssm] — attention-free Mamba-1 architecture.
+
+64L d_model=4096 d_ff=0 vocab=65024, ssm_state=16
+[arXiv:2410.05355; unverified]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=1,        # unused (attention-free)
+    n_kv_heads=1,
+    head_dim=1,
+    d_ff=0,           # mamba block subsumes the MLP
+    vocab=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+))

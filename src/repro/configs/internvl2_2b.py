@@ -1,0 +1,21 @@
+"""internvl2-2b [vlm] — InternViT frontend (stub) + InternLM2 backbone.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553
+[arXiv:2404.16821; hf]
+vocab 92553 is padded to 92672 (x512) for 16-way tensor sharding; padded
+logits are masked out of loss/decoding (see DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=92553,
+    frontend_stub=True,
+))

@@ -1,0 +1,22 @@
+"""mixtral-8x7b-proxy [moe] — the paper's own comparison arch (Table 2).
+
+Not in the assigned pool; included so the Lu-et-al. combinatorial baseline
+benchmark matches the paper's 8-expert setting. 32L d_model=4096 32H (kv=8)
+per-expert d_ff=14336 vocab=32000, 8e top-2. [arXiv:2401.04088]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x7b-proxy",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    moe_d_ff=14336,
+    n_experts=8,
+    top_k=2,
+    vocab=32000,
+))

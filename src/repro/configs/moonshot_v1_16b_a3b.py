@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight family, 64 experts top-6.
+
+48L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=163840
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+(Spec gives 64e top-6 only; shared experts not in the assigned spec -> off.)
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=0,
+    moe_d_ff=1408,
+    n_experts=64,
+    top_k=6,
+    vocab=163840,
+))

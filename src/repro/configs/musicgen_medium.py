@@ -1,0 +1,20 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048
+[arXiv:2306.05284; hf]
+Backbone only; EnCodec frame embeddings arrive via the frontend stub.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    frontend_stub=True,
+))

@@ -1,0 +1,21 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8.
+
+16L d_model=2048 16H (kv=16) per-expert d_ff=1024 vocab=50304
+[arXiv:2409.02060; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=0,
+    moe_d_ff=1024,
+    n_experts=64,
+    top_k=8,
+    vocab=50304,
+))

@@ -1,0 +1,24 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1 attn : 2 rec.
+
+26L d_model=2560 10H (GQA kv=1 / MQA) d_ff=7680 vocab=256000
+[arXiv:2402.19427; hf]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab=256000,
+    local_window=2048,
+    layer_pattern=("rec", "rec", "attn"),
+    lru_width=2560,
+    rope_theta=10000.0,
+    # heterogeneous layer stack -> unrolled (26 layers, small model)
+    scan_layers=False,
+))

@@ -1,0 +1,33 @@
+"""STUN — the paper's primary contribution (see DESIGN.md §1)."""
+from repro.core.clustering import (  # noqa: F401
+    agglomerative_threshold,
+    agglomerative_to_count,
+    cluster_experts,
+    dsatur_to_count,
+)
+from repro.core.combinatorial import (  # noqa: F401
+    combinatorial_prune,
+    combinatorial_prune_layer,
+    n_combinations,
+)
+from repro.core.expert_prune import (  # noqa: F401
+    expert_prune_moe,
+    greedy_prune_sequence,
+    layer_reconstruction_loss,
+    representatives,
+)
+from repro.core.robustness import kurtosis, model_kurtosis  # noqa: F401
+from repro.core.similarity import (  # noqa: F401
+    behavioral_distance,
+    coactivation_counts,
+    router_distance,
+)
+from repro.core.structured_nonmoe import structured_prune_ffn  # noqa: F401
+from repro.core.stun import stun_prune, unstructured_only  # noqa: F401
+from repro.core.unstructured import (  # noqa: F401
+    mask_per_output,
+    nm_rounding,
+    owl_layer_sparsities,
+    sparsify_model,
+    wanda_scores,
+)

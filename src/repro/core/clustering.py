@@ -1,0 +1,144 @@
+"""Expert clustering (paper Alg. 1 + appendix DSatur alternative).
+
+Agglomerative (complete linkage, faithful to Alg. 1): visit pairs in
+increasing distance order while the closest unvisited pair is within the
+threshold t; merge two clusters only if *every* cross-pair distance is
+within t (the m_d / m_e check).  The threshold is tuned — here by binary
+search — to hit the cluster count implied by the desired pruning ratio.
+
+DSatur (appendix Eq. 15): clique partitioning — color the *complement*
+graph (edges between DISsimilar pairs); color classes are cliques of
+mutually-similar experts = clusters.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+def agglomerative_threshold(dist: np.ndarray, t: float) -> np.ndarray:
+    """Alg. 1 body for a fixed threshold. dist [E,E] -> labels [E]."""
+    E = dist.shape[0]
+    d = dist.copy().astype(np.float64)
+    iu = np.triu_indices(E, k=1)
+    labels = np.arange(E)
+
+    # visit pairs in increasing-distance order (argmin + mark-visited loop)
+    order = np.argsort(d[iu], kind="stable")
+    for idx in order:
+        i, j = iu[0][idx], iu[1][idx]
+        if d[i, j] >= t:
+            break  # "while min b < t" termination
+        ci, cj = labels[i], labels[j]
+        if ci == cj:
+            continue
+        mi = np.max(dist[i, labels == cj])           # m_d: worst cross-dist
+        mj = np.max(dist[np.ix_(labels == ci, [j])]) # m_e
+        if max(mi, mj) < t:
+            # complete-linkage safety: all pairs across both clusters
+            cross = dist[np.ix_(labels == ci, labels == cj)]
+            if cross.max() < t:
+                labels[labels == cj] = ci
+    # relabel to 0..n_clusters-1
+    _, labels = np.unique(labels, return_inverse=True)
+    return labels
+
+
+def agglomerative_to_count(dist: np.ndarray, n_keep: int,
+                           iters: int = 40) -> np.ndarray:
+    """Binary-search the Alg. 1 threshold for a target cluster count.
+
+    Merges are discrete, so an exact hit may be impossible; we return the
+    labeling with count closest to (and never below) n_keep, then force down
+    to exactly n_keep by merging the globally closest cluster pairs.
+    """
+    E = dist.shape[0]
+    n_keep = int(min(max(n_keep, 1), E))
+    lo, hi = 0.0, float(dist.max()) + 1e-9
+    best = np.arange(E)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        labels = agglomerative_threshold(dist, mid)
+        k = labels.max() + 1
+        if k > n_keep:
+            lo = mid        # too many clusters: raise threshold
+            best = labels
+        else:
+            hi = mid
+            if k == n_keep:
+                return labels
+    labels = best
+    # force remaining merges by smallest complete-linkage distance
+    while labels.max() + 1 > n_keep:
+        k = labels.max() + 1
+        bd, bp = np.inf, None
+        for a in range(k):
+            for b in range(a + 1, k):
+                cross = dist[np.ix_(labels == a, labels == b)].max()
+                if cross < bd:
+                    bd, bp = cross, (a, b)
+        a, b = bp
+        labels[labels == b] = a
+        _, labels = np.unique(labels, return_inverse=True)
+    return labels
+
+
+def dsatur_threshold(dist: np.ndarray, t: float) -> np.ndarray:
+    """DSatur clique partitioning: color complement graph (dissimilar edges)."""
+    import networkx as nx
+
+    E = dist.shape[0]
+    g = nx.Graph()
+    g.add_nodes_from(range(E))
+    for i in range(E):
+        for j in range(i + 1, E):
+            if dist[i, j] >= t:      # NOT similar enough -> complement edge
+                g.add_edge(i, j)
+    coloring = nx.coloring.greedy_color(g, strategy="DSATUR")
+    labels = np.array([coloring[i] for i in range(E)])
+    _, labels = np.unique(labels, return_inverse=True)
+    return labels
+
+
+def dsatur_to_count(dist: np.ndarray, n_keep: int, iters: int = 40) -> np.ndarray:
+    E = dist.shape[0]
+    n_keep = int(min(max(n_keep, 1), E))
+    lo, hi = 0.0, float(dist.max()) + 1e-9
+    best = np.arange(E)
+    best_k = E
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        labels = dsatur_threshold(dist, mid)
+        k = labels.max() + 1
+        if k >= n_keep:
+            lo = mid
+            if k < best_k:
+                best, best_k = labels, k
+        else:
+            hi = mid
+    if best_k > n_keep:
+        # greedy merge of smallest-max-cross-distance pairs to reach count
+        labels = best
+        while labels.max() + 1 > n_keep:
+            k = labels.max() + 1
+            bd, bp = np.inf, None
+            for a in range(k):
+                for b in range(a + 1, k):
+                    cross = dist[np.ix_(labels == a, labels == b)].max()
+                    if cross < bd:
+                        bd, bp = cross, (a, b)
+            a, b = bp
+            labels[labels == b] = a
+            _, labels = np.unique(labels, return_inverse=True)
+        return labels
+    return best
+
+
+def cluster_experts(dist: np.ndarray, n_keep: int,
+                    method: str = "agglomerative") -> np.ndarray:
+    if method == "agglomerative":
+        return agglomerative_to_count(dist, n_keep)
+    if method == "dsatur":
+        return dsatur_to_count(dist, n_keep)
+    raise ValueError(method)

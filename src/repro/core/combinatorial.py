@@ -1,0 +1,66 @@
+"""Lu et al. (2024) combinatorial expert pruning — the O(k^n/√n) baseline.
+
+Per layer, enumerate every C(n, n_prune) expert subset, evaluate the
+reconstruction loss ℰ_S (Eq. 4) with router renormalization over survivors,
+keep the argmin.  Each subset evaluation is one forward pass of the layer on
+the calibration batch — we count them to substantiate the paper's cost
+comparison (Table 2 "cost" column).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Tuple
+
+import numpy as np
+
+
+def combinatorial_prune_layer(x, layer_moe_params, cfg, n_prune: int
+                              ) -> Tuple[np.ndarray, float, int]:
+    """Returns (keep_mask [E], best ℰ_S, forward_pass_count)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.moe import moe_apply
+
+    E = cfg.n_experts
+    full = moe_apply(x, layer_moe_params, cfg)
+
+    @jax.jit
+    def recon(mask):
+        pruned = moe_apply(x, layer_moe_params, cfg, expert_mask=mask)
+        return jnp.linalg.norm((full - pruned).astype(jnp.float32))
+
+    best_loss, best_mask = np.inf, None
+    n_calls = 0
+    for S in itertools.combinations(range(E), n_prune):
+        mask = np.ones(E, np.float32)
+        mask[list(S)] = 0.0
+        loss = float(recon(jnp.asarray(mask)))
+        n_calls += 1
+        if loss < best_loss:
+            best_loss, best_mask = loss, mask
+    return best_mask, best_loss, n_calls
+
+
+def combinatorial_prune(params, cfg, x_per_layer, ratio: float):
+    """Whole-model variant: independent per-layer exhaustive search.
+
+    x_per_layer: [L, B, S, D] layer inputs captured from a calibration
+    forward pass.  Returns (keep_mask [L, E], total_forward_passes).
+    """
+    E = cfg.n_experts
+    n_prune = E - max(1, int(round(E * (1.0 - ratio))))
+    L = cfg.n_layers
+    masks, total = [], 0
+    for l in range(L):
+        import jax
+        lp = jax.tree.map(lambda w: w[l], params["layers"]["moe"])
+        m, _, c = combinatorial_prune_layer(x_per_layer[l], lp, cfg, n_prune)
+        masks.append(m)
+        total += c
+    return np.stack(masks), total
+
+
+def n_combinations(n: int, phi: float) -> float:
+    """The paper's O(k^n/√n) count: C(n, φn) forward passes per layer."""
+    from math import comb
+    return comb(n, int(round(phi * n)))

@@ -1,0 +1,205 @@
+"""O(1) expert pruning with selective reconstruction (paper §4.3–4.4, Alg 2).
+
+Per MoE layer:
+  1. distance matrix from router rows (+ optional coactivation), Eq. 8/10;
+  2. cluster to the target count (Alg. 1);
+  3. within each cluster keep the expert closest to the cluster parameter
+     mean θ̄ (1st-order Taylor argument, Eq. 11–12);
+  4. *selective reconstruction* (Alg. 2): if the layer has fewer than κ
+     clusters, overwrite the kept expert with θ̄ (minimizes Σℰ_i); otherwise
+     keep the original weights (minimizes the distribution-shift error ℰ_d).
+     The representative's router row is reconstructed the same way.
+
+Outputs either a *mask* view (full-size params + alive-mask, for cheap
+evaluation via router masking) or a *compact* view (physically smaller
+arrays, for serving).  The greedy Eq. 5–7 selection is provided explicitly
+for validation; its fixed point is exactly keep-one-representative-per-
+cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.clustering import cluster_experts
+from repro.core.similarity import behavioral_distance, expert_flat_weights
+
+
+# ---------------------------------------------------------------------------
+# Per-cluster representative selection (Taylor ranking + reconstruction)
+# ---------------------------------------------------------------------------
+
+
+def representatives(flat_w: np.ndarray, labels: np.ndarray, kappa: int
+                    ) -> Tuple[np.ndarray, bool, Dict[int, np.ndarray]]:
+    """Pick per-cluster representatives.
+
+    Returns (rep_idx [n_clusters], reconstruct?, {cluster -> θ̄ flat}).
+    reconstruct is True iff n_clusters < κ (Alg. 2 branch).
+    """
+    n_clusters = int(labels.max()) + 1
+    reconstruct = n_clusters < kappa
+    reps = np.zeros(n_clusters, np.int64)
+    means: Dict[int, np.ndarray] = {}
+    for c in range(n_clusters):
+        members = np.where(labels == c)[0]
+        mean = flat_w[members].mean(axis=0)
+        dist = np.linalg.norm(flat_w[members] - mean[None], axis=1)
+        reps[c] = members[int(np.argmin(dist))]
+        means[c] = mean
+    return reps, reconstruct, means
+
+
+def greedy_prune_sequence(labels: np.ndarray, rep_idx: np.ndarray,
+                          L: float = 10.0, p: float = 1.0) -> List[int]:
+    """Explicit greedy optimization of Eq. 6 with the Eq. 7 scoring.
+
+    P(E_i) = L if i is its cluster's representative (high reconstruction loss
+    if removed) else 0; pruning-probability score = -ℰ rank; lowered by p
+    once the rest of the cluster is already pruned.  Returns the prune order;
+    its result set equals {non-representatives}.
+    """
+    E = len(labels)
+    reps = set(int(r) for r in rep_idx)
+    pruned: List[int] = []
+    pruned_set = set()
+    target = E - (int(labels.max()) + 1)
+    for _ in range(target):
+        best, best_score = None, -np.inf
+        for i in range(E):
+            if i in pruned_set:
+                continue
+            score = -L if i in reps else 0.0   # prune-prob ~ -ℰ_i
+            others = [j for j in np.where(labels == labels[i])[0] if j != i]
+            if all(j in pruned_set for j in others):
+                score -= p                     # c(E_i) ⊆ S_k guard (Eq. 7)
+            if score > best_score:
+                best, best_score = i, score
+        pruned.append(best)
+        pruned_set.add(best)
+    return pruned
+
+
+# ---------------------------------------------------------------------------
+# Whole-model expert pruning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ExpertPruneReport:
+    n_keep: int
+    labels: List[np.ndarray]          # per layer [E]
+    rep_idx: List[np.ndarray]         # per layer [n_keep]
+    reconstructed: List[bool]         # per layer
+    router_forward_passes: int = 0    # O(1) claim: stays 0 for λ2 == 0
+
+
+def _layer_distance(router_layer, coact_layer, lam1, lam2):
+    return behavioral_distance(router_layer, coact_layer, lam1, lam2)
+
+
+def expert_prune_moe(params, cfg, ratio: float, *, kappa: int = 3,
+                     lam1: float = 1.0, lam2: float = 0.0,
+                     coact: Optional[np.ndarray] = None,
+                     method: str = "agglomerative",
+                     mode: str = "compact"):
+    """Prune a fraction ``ratio`` of experts from every MoE layer.
+
+    params: model param tree with scan-stacked layers (["layers"]["moe"]).
+    coact: [L, E, E] coactivation counts (λ2 path) or None.
+    mode: "compact" -> physically smaller arrays + updated cfg;
+          "mask"    -> full-size arrays (reps possibly reconstructed) +
+                       alive-mask [L, E] for router-mask evaluation.
+
+    Returns (new_params, new_cfg, ExpertPruneReport).
+    """
+    assert cfg.family == "moe", cfg.family
+    moe = params["layers"]["moe"]
+    router = np.asarray(moe["router"], np.float32)      # [L, E, D]
+    Lc, E, D = router.shape
+    n_keep = max(1, int(round(E * (1.0 - ratio))))
+
+    report = ExpertPruneReport(n_keep=n_keep, labels=[], rep_idx=[],
+                               reconstructed=[])
+    if lam2 != 0.0 and coact is not None:
+        report.router_forward_passes = 1  # one calibration sweep total
+
+    new_moe = {k: np.array(v, np.float32) if mode == "mask" else None
+               for k, v in moe.items()}
+    keep_mask = np.zeros((Lc, E), np.float32)
+    compact = {k: [] for k in ("router", "we_gate", "we_up", "we_down")}
+
+    for l in range(Lc):
+        dist = _layer_distance(router[l], None if coact is None else coact[l],
+                               lam1, lam2)
+        labels = cluster_experts(dist, n_keep, method)
+        flat = expert_flat_weights(moe, l)
+        reps, reconstruct, means = representatives(flat, labels, kappa)
+        report.labels.append(labels)
+        report.rep_idx.append(reps)
+        report.reconstructed.append(reconstruct)
+        keep_mask[l, reps] = 1.0
+
+        # gather representative weights (optionally cluster-mean reconstructed)
+        sel = {}
+        for key in ("we_gate", "we_up", "we_down"):
+            w = np.asarray(moe[key][l], np.float32)      # [E, ...]
+            out = w[reps].copy()
+            if reconstruct:
+                for c in range(len(reps)):
+                    out[c] = w[labels == c].mean(axis=0)
+            sel[key] = out
+        r = router[l][reps].copy()
+        if reconstruct:
+            for c in range(len(reps)):
+                r[c] = router[l][labels == c].mean(axis=0)
+        sel["router"] = r
+
+        if mode == "mask":
+            for key in ("we_gate", "we_up", "we_down", "router"):
+                tgt = new_moe[key]
+                tgt[l, reps] = sel[key]
+        else:
+            for key in compact:
+                compact[key].append(sel[key])
+
+    if mode == "mask":
+        new_params = _replace_moe(params, {k: v for k, v in new_moe.items()})
+        return new_params, cfg, keep_mask, report
+
+    new_params = _replace_moe(params, {k: np.stack(v) for k, v in
+                                       compact.items()})
+    new_cfg = dataclasses.replace(cfg, n_experts=n_keep,
+                                  top_k=min(cfg.top_k, n_keep))
+    return new_params, new_cfg, keep_mask, report
+
+
+def _replace_moe(params, new_moe):
+    out = dict(params)
+    out["layers"] = dict(params["layers"])
+    out["layers"]["moe"] = {**params["layers"]["moe"], **new_moe}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction loss (Eq. 4) — shared with the combinatorial baseline
+# ---------------------------------------------------------------------------
+
+
+def layer_reconstruction_loss(x, layer_moe_params, cfg, keep_mask,
+                              replacement=None):
+    """ℰ_S = ||M(x;θ) - M(x;θ-θ_S)||_F on a batch x [B,S,D] (Eq. 4).
+
+    keep_mask [E] 1=alive.  ``replacement`` optionally swaps in
+    reconstructed expert weights before masking.
+    """
+    import jax.numpy as jnp
+    from repro.models.moe import moe_apply
+
+    p = layer_moe_params if replacement is None else {**layer_moe_params,
+                                                      **replacement}
+    full = moe_apply(x, layer_moe_params, cfg)
+    pruned = moe_apply(x, p, cfg, expert_mask=jnp.asarray(keep_mask))
+    return float(jnp.linalg.norm((full - pruned).astype(jnp.float32)))

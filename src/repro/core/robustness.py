@@ -1,0 +1,57 @@
+"""Pruning-robustness probes (paper §5).
+
+Kurtosis K(θ) = E[((θ-μ)/σ)^4] (Eq. 14) estimates how much further
+unstructured pruning a network tolerates (Mason-Williams & Dahlqvist 2024).
+The paper's claim, which `benchmarks/bench_kurtosis.py` and a property test
+verify empirically on our models:
+  * expert (structured) pruning  ≈ preserves kurtosis;
+  * unstructured pruning         lowers kurtosis (pushes the weight
+    distribution toward bimodal, the kurtosis minimum).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def kurtosis(w: np.ndarray, exclude_zeros: bool = False) -> float:
+    x = np.asarray(w, np.float64).reshape(-1)
+    if exclude_zeros:
+        x = x[x != 0.0]
+    if x.size < 4:
+        return float("nan")
+    mu, sigma = x.mean(), x.std()
+    if sigma == 0:
+        return float("nan")
+    return float(np.mean(((x - mu) / sigma) ** 4))
+
+
+def model_kurtosis(params, paths=("we_gate", "we_up", "we_down", "w_gate",
+                                  "w_up", "w_down", "wq", "wk", "wv", "wo"),
+                   exclude_zeros: bool = True) -> Dict[str, float]:
+    """Kurtosis per prunable weight family, plus the aggregate.
+
+    ``exclude_zeros`` measures the *surviving* weight distribution (the
+    quantity §5's bimodality argument is about) so masked-out weights do not
+    masquerade as a spike at zero.
+    """
+    out: Dict[str, float] = {}
+    chunks = []
+
+    def walk(tree, prefix=()):
+        if hasattr(tree, "shape"):
+            if prefix[-1] in paths:
+                arr = np.asarray(tree, np.float32)
+                out["/".join(map(str, prefix))] = kurtosis(
+                    arr, exclude_zeros=exclude_zeros)
+                chunks.append(arr.reshape(-1))
+            return
+        for k in tree:
+            walk(tree[k], prefix + (k,))
+
+    walk(params)
+    if chunks:
+        flat = np.concatenate(chunks)
+        out["__all__"] = kurtosis(flat, exclude_zeros=exclude_zeros)
+    return out

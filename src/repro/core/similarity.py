@@ -1,0 +1,68 @@
+"""Behavioral similarity between experts (paper §4.3, Eq. 8 / Eq. 10).
+
+Eq. 8 presents b_ij = -||W_i - W_j||_F as a *similarity* (higher = more
+similar); Algorithm 1 consumes it as a *distance* visited in increasing
+order with a complete-linkage threshold.  We keep the distance convention
+internally: d_ij = λ1·||W_i - W_j||_F - λ2·a_ij  (so d = -b).
+
+Coactivation statistics a_ij count how often experts i, j appear together in
+the same token's top-k set over calibration data, normalized by the layer's
+total coactivations (paper footnote 4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def router_distance(router_w: np.ndarray) -> np.ndarray:
+    """Pairwise ||W_i - W_j||_F over router rows. router_w [E, D] -> [E, E]."""
+    W = np.asarray(router_w, np.float64)
+    sq = np.sum(W * W, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (W @ W.T)
+    d = np.sqrt(np.maximum(d2, 0.0))
+    np.fill_diagonal(d, 0.0)  # exact zeros (quadratic form rounds off)
+    return d
+
+
+def coactivation_counts(top_idx: np.ndarray, n_experts: int) -> np.ndarray:
+    """top_idx [T, k] token-wise selected experts -> raw counts a_ij [E, E].
+
+    a_ij = #tokens whose top-k contains both i and j (i != j).
+    """
+    T, k = top_idx.shape
+    onehot = np.zeros((T, n_experts), np.float64)
+    np.put_along_axis(onehot, top_idx, 1.0, axis=1)
+    a = onehot.T @ onehot
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def normalize_coactivation(a: np.ndarray) -> np.ndarray:
+    """Divide by total coactivations in the layer (footnote 4)."""
+    tot = a.sum()
+    return a / tot if tot > 0 else a
+
+
+def behavioral_distance(router_w, coact=None, lam1: float = 1.0,
+                        lam2: float = 0.0) -> np.ndarray:
+    """Distance matrix d_ij = λ1·||W_i-W_j||_F - λ2·a_ij  (= -b_ij, Eq. 10)."""
+    d = lam1 * router_distance(router_w)
+    if lam2 != 0.0 and coact is not None:
+        d = d - lam2 * normalize_coactivation(np.asarray(coact, np.float64))
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def expert_flat_weights(layer_moe_params, layer_idx=None) -> np.ndarray:
+    """Concatenate each expert's weights into one flat vector. -> [E, P].
+
+    Accepts the `moe` param subtree ({router, we_gate, we_up, we_down}); when
+    the tree is scan-stacked [L, E, ...], pass layer_idx.
+    """
+    mats = []
+    for key in ("we_gate", "we_up", "we_down"):
+        w = np.asarray(layer_moe_params[key], np.float32)
+        if layer_idx is not None:
+            w = w[layer_idx]
+        mats.append(w.reshape(w.shape[0], -1))
+    return np.concatenate(mats, axis=1)

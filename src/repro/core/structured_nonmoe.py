@@ -1,0 +1,82 @@
+"""Structured stage for non-MoE architectures (paper §6.2.5, RQ5).
+
+The paper generalizes STUN to non-MoEs by running a light structured pruning
+(LLM-Surgeon, ~5%) before unstructured pruning.  Our TPU-friendly analogue
+prunes whole d_ff *columns* (gate/up columns + matching down rows) ranked by
+a first-order saliency ||w_col|| · ||x_in|| — the same Taylor logic the
+paper applies to experts, at row/column granularity.  The result is a
+physically smaller, still-dense model (structure preserved for the MXU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def ffn_column_saliency(w_gate, w_up, w_down, xnorm) -> np.ndarray:
+    """Saliency per d_ff column: combined first-order score. -> [F]."""
+    g = np.asarray(w_gate, np.float32)
+    u = np.asarray(w_up, np.float32)
+    d = np.asarray(w_down, np.float32)
+    xn = np.asarray(xnorm, np.float32)[:, None]
+    s_in = np.linalg.norm(g * xn, axis=0) * np.linalg.norm(u * xn, axis=0)
+    s_out = np.linalg.norm(d, axis=1)
+    return s_in * s_out
+
+
+def structured_prune_ffn(params, cfg, norms: Dict, ratio: float = 0.05):
+    """Drop the lowest-saliency `ratio` of d_ff columns in every MLP.
+
+    Returns (new_params, new_cfg, kept_idx per layer). Only dense-family
+    MLPs (incl. hybrid/audio/vlm blocks) are touched.
+    """
+    assert cfg.family != "moe", "MoE uses expert pruning (stage 1) instead"
+    F = cfg.d_ff
+    if F == 0:
+        return params, cfg, {}
+    n_keep = max(8, int(round(F * (1.0 - ratio))))
+    # keep MXU-aligned sizes
+    n_keep -= n_keep % 8
+
+    kept: Dict[int, np.ndarray] = {}
+    pat = cfg.effective_pattern()
+    new_params = {**params, "layers": dict(params["layers"])
+                  if cfg.family == "hybrid" or not cfg.scan_layers
+                  else dict(params["layers"])}
+
+    def prune_one(ltree, l):
+        mlp = ltree["mlp"]
+        wg = np.asarray(mlp["w_gate"], np.float32)
+        wu = np.asarray(mlp["w_up"], np.float32)
+        wd = np.asarray(mlp["w_down"], np.float32)
+        if wg.ndim == 3:  # stacked [L, D, F]
+            wg, wu, wd = wg[l], wu[l], wd[l]
+        xn = norms.get((l, "mlp_in"), np.ones(wg.shape[0], np.float32))
+        sal = ffn_column_saliency(wg, wu, wd, xn)
+        idx = np.sort(np.argsort(-sal)[:n_keep])
+        kept[l] = idx
+        return (wg[:, idx], wu[:, idx], wd[idx, :])
+
+    import jax.numpy as jnp
+    if cfg.family == "hybrid" or not cfg.scan_layers:
+        for l, kind in enumerate(pat):
+            lt = new_params["layers"][str(l)]
+            if "mlp" not in lt:
+                continue
+            wg, wu, wd = prune_one(lt, l)
+            new_params["layers"][str(l)] = {
+                **lt, "mlp": {"w_gate": jnp.asarray(wg), "w_up": jnp.asarray(wu),
+                              "w_down": jnp.asarray(wd)}}
+    else:
+        lt = new_params["layers"]
+        if "mlp" in lt:
+            outs = [prune_one(lt, l) for l in range(cfg.n_layers)]
+            new_params["layers"] = {
+                **lt,
+                "mlp": {"w_gate": jnp.asarray(np.stack([o[0] for o in outs])),
+                        "w_up": jnp.asarray(np.stack([o[1] for o in outs])),
+                        "w_down": jnp.asarray(np.stack([o[2] for o in outs]))}}
+    new_cfg = dataclasses.replace(cfg, d_ff=n_keep)
+    return new_params, new_cfg, kept

@@ -1,0 +1,122 @@
+"""STUN pipeline: Structured-Then-UNstructured pruning (paper §4.1).
+
+  stage 1 (structured):  O(1) expert pruning (MoE) or light FFN-column
+                         pruning (non-MoE, RQ5 variant) — "until the loss is
+                         negligible" (fixed ratio per paper's Impl. Details:
+                         20% Arctic / 12.5% Mixtral-8x7B / 10% 8x22B).
+  stage 2 (unstructured): Wanda or OWL at the ratio that brings *total*
+                          sparsity to the target.
+
+Total sparsity accounting follows the paper: a target sparsity φ_total over
+the original parameter count. Stage 1 removes a fraction φ_s of prunable
+params; stage 2 then prunes φ_u of the *remaining* weights with
+φ_u = (φ_total - φ_s) / (1 - φ_s).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.calibration import (CalibStats, coactivation_tensor,
+                                    run_calibration)
+from repro.core.expert_prune import expert_prune_moe
+from repro.core.robustness import model_kurtosis
+from repro.core.structured_nonmoe import structured_prune_ffn
+from repro.core.unstructured import sparsify_model
+
+
+@dataclasses.dataclass
+class StunReport:
+    structured_ratio: float
+    unstructured_ratio: float
+    total_sparsity: float
+    kurtosis_before: Dict[str, float]
+    kurtosis_after_structured: Dict[str, float]
+    kurtosis_after_unstructured: Dict[str, float]
+    expert_report: Optional[object] = None
+    unstructured_report: Optional[dict] = None
+    forward_passes: int = 0
+
+
+def stun_prune(params, cfg, calib_batches, *, target_sparsity: float,
+               expert_ratio: float = 0.25, unstructured: str = "owl",
+               lam1: float = 1.0, lam2: float = 0.0, kappa: int = 3,
+               cluster_method: str = "agglomerative",
+               nm: Optional[tuple] = None):
+    """Full STUN. Returns (pruned_params, pruned_cfg, masks, StunReport)."""
+    kurt0 = model_kurtosis(params)
+    fwd = 0
+
+    # ---- stage 1: structured ----
+    if cfg.family == "moe":
+        coact = None
+        if lam2 != 0.0:
+            stats = run_calibration(params, cfg, calib_batches)
+            coact = coactivation_tensor(stats, cfg)
+            fwd += len(calib_batches)
+        params1, cfg1, keep_mask, erep = expert_prune_moe(
+            params, cfg, expert_ratio, kappa=kappa, lam1=lam1, lam2=lam2,
+            coact=coact, method=cluster_method, mode="compact")
+        structured_ratio = expert_ratio * _expert_param_fraction(cfg)
+    else:
+        stats0 = run_calibration(params, cfg, calib_batches)
+        fwd += len(calib_batches)
+        params1, cfg1, _kept = structured_prune_ffn(params, cfg,
+                                                    stats0.norms(),
+                                                    ratio=expert_ratio)
+        erep = None
+        structured_ratio = expert_ratio * _ffn_param_fraction(cfg)
+    kurt1 = model_kurtosis(params1)
+
+    # ---- stage 2: unstructured on the pruned network ----
+    phi_u = max(0.0, (target_sparsity - structured_ratio)
+                / max(1e-9, 1.0 - structured_ratio))
+    stats = run_calibration(params1, cfg1, calib_batches)
+    fwd += len(calib_batches)
+    params2, masks, urep = sparsify_model(params1, cfg1, stats.norms(),
+                                          phi_u, method=unstructured, nm=nm)
+    kurt2 = model_kurtosis(params2)
+
+    report = StunReport(
+        structured_ratio=structured_ratio,
+        unstructured_ratio=phi_u,
+        total_sparsity=target_sparsity,
+        kurtosis_before=kurt0,
+        kurtosis_after_structured=kurt1,
+        kurtosis_after_unstructured=kurt2,
+        expert_report=erep,
+        unstructured_report=urep,
+        forward_passes=fwd,
+    )
+    return params2, cfg1, masks, report
+
+
+def unstructured_only(params, cfg, calib_batches, *, target_sparsity: float,
+                      method: str = "owl", nm=None):
+    """The paper's baseline: Wanda/OWL directly at the target sparsity."""
+    stats = run_calibration(params, cfg, calib_batches)
+    return sparsify_model(params, cfg, stats.norms(), target_sparsity,
+                          method=method, nm=nm)
+
+
+def _expert_param_fraction(cfg) -> float:
+    """Fraction of prunable params that live in expert weights."""
+    d = cfg.d_model
+    expert = cfg.n_experts * 3 * d * cfg.moe_d_ff
+    attn = (d * cfg.n_heads * cfg.head_dim
+            + 2 * d * cfg.n_kv_heads * cfg.head_dim
+            + cfg.n_heads * cfg.head_dim * d)
+    return expert / (expert + attn)
+
+
+def _ffn_param_fraction(cfg) -> float:
+    d = cfg.d_model
+    if cfg.d_ff == 0:
+        return 0.0
+    ffn = 3 * d * cfg.d_ff
+    attn = (d * cfg.n_heads * cfg.head_dim
+            + 2 * d * cfg.n_kv_heads * cfg.head_dim
+            + cfg.n_heads * cfg.head_dim * d)
+    return ffn / (ffn + attn)

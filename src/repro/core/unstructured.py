@@ -1,0 +1,259 @@
+"""Unstructured pruning: Wanda, OWL, magnitude (paper stage 2).
+
+Wanda (Sun et al. 2024): score S = |W| · ||X_in||_2, pruned per *output*
+comparison group at uniform layer sparsity.
+OWL  (Yin et al. 2024): same scores, but per-layer sparsity reallocated by
+outlier ratio — layers with more outliers (score > M × layer-mean) keep
+more weights; ratios bounded to [S-λ, S+λ] with mean S (M=5, λ=0.08).
+Magnitude: |W| per-output groups, no activations.
+
+All masks are returned alongside the sparsified params so downstream
+consumers (kurtosis probe, block-sparse kernel, N:M re-rounding) can reuse
+them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# weight path -> (stat tap name, input axis, per_expert?)
+FAMILY_PRUNABLE = {
+    "attn": {
+        ("attn", "wq"): ("attn_in", 0, False),
+        ("attn", "wk"): ("attn_in", 0, False),
+        ("attn", "wv"): ("attn_in", 0, False),
+        ("attn", "wo"): ("attn_out", (0, 1), False),
+    },
+    "mlp": {
+        ("mlp", "w_gate"): ("mlp_in", 0, False),
+        ("mlp", "w_up"): ("mlp_in", 0, False),
+        ("mlp", "w_down"): ("mlp_mid", 0, False),
+    },
+    "moe": {
+        ("moe", "we_gate"): ("moe_expert_in", 1, True),
+        ("moe", "we_up"): ("moe_expert_in", 1, True),
+        ("moe", "we_down"): ("moe_expert_mid", 1, True),
+    },
+    "ssm": {
+        ("ssm", "w_in"): ("ssm_in", 0, False),
+        ("ssm", "w_x"): ("ssm_x", 0, False),
+        ("ssm", "w_dt"): ("ssm_dt", 0, False),
+        ("ssm", "w_out"): ("ssm_out", 0, False),
+    },
+    "rec": {
+        ("rec", "w_gate"): ("rec_in", 0, False),
+        ("rec", "w_in"): ("rec_in", 0, False),
+        ("rec", "w_a"): ("rec_gates", 0, False),
+        ("rec", "w_i"): ("rec_gates", 0, False),
+        ("rec", "w_out"): ("rec_out", 0, False),
+    },
+}
+
+
+def prunable_for(cfg, kind: str) -> Dict:
+    out = {}
+    if kind == "attn":
+        out.update(FAMILY_PRUNABLE["attn"])
+        out.update(FAMILY_PRUNABLE["moe" if cfg.family == "moe" else "mlp"])
+    elif kind == "ssm":
+        out.update(FAMILY_PRUNABLE["ssm"])
+    elif kind == "rec":
+        out.update(FAMILY_PRUNABLE["rec"])
+        out.update(FAMILY_PRUNABLE["mlp"])
+    elif kind == "local_attn":
+        out.update(FAMILY_PRUNABLE["attn"])
+        out.update(FAMILY_PRUNABLE["mlp"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scores & masks
+# ---------------------------------------------------------------------------
+
+
+def wanda_scores(W: np.ndarray, xnorm: np.ndarray, in_axis) -> np.ndarray:
+    """|W| · ||X||, xnorm broadcast over the input axis/axes."""
+    s = np.abs(np.asarray(W, np.float32))
+    if isinstance(in_axis, tuple):
+        shape = [1] * s.ndim
+        for ax in in_axis:
+            shape[ax] = s.shape[ax]
+        s = s * xnorm.reshape(shape)
+    else:
+        shape = [1] * s.ndim
+        shape[in_axis] = s.shape[in_axis]
+        s = s * xnorm.reshape(shape)
+    return s
+
+
+def mask_per_output(scores: np.ndarray, sparsity: float, in_axis
+                    ) -> np.ndarray:
+    """Prune the lowest `sparsity` fraction within each output group."""
+    axes = in_axis if isinstance(in_axis, tuple) else (in_axis,)
+    # move input axes to the front, flatten into one comparison axis
+    perm = list(axes) + [i for i in range(scores.ndim) if i not in axes]
+    s = np.transpose(scores, perm)
+    n_in = int(np.prod(s.shape[: len(axes)]))
+    flat = s.reshape(n_in, -1)
+    n_prune = int(np.floor(sparsity * n_in))
+    mask_flat = np.ones_like(flat, bool)
+    if n_prune > 0:
+        idx = np.argpartition(flat, n_prune - 1, axis=0)[:n_prune]
+        np.put_along_axis(mask_flat, idx, False, axis=0)
+    mask = mask_flat.reshape(s.shape)
+    inv = np.argsort(perm)
+    return np.transpose(mask, inv)
+
+
+def nm_rounding(scores: np.ndarray, in_axis, n: int = 2, m: int = 4
+                ) -> np.ndarray:
+    """N:M re-rounding of a score tensor (TPU/accelerator-friendly pattern):
+    keep the top-n of every m consecutive weights along the input axis."""
+    ax = in_axis if not isinstance(in_axis, tuple) else in_axis[0]
+    s = np.moveaxis(np.asarray(scores, np.float32), ax, -1)
+    orig = s.shape[-1]
+    pad = (-orig) % m
+    if pad:
+        s = np.concatenate([s, np.full(s.shape[:-1] + (pad,), -np.inf,
+                                       s.dtype)], axis=-1)
+    grp = s.reshape(s.shape[:-1] + (s.shape[-1] // m, m))
+    thresh = np.sort(grp, axis=-1)[..., m - n: m - n + 1]
+    mask = (grp >= thresh).reshape(s.shape)[..., :orig]
+    return np.moveaxis(mask, -1, ax)
+
+
+def outlier_ratio(scores: np.ndarray, M: float = 5.0) -> float:
+    mean = scores.mean()
+    return float((scores > M * mean).mean())
+
+
+def owl_layer_sparsities(ratios: List[float], target: float,
+                         lam: float = 0.08) -> np.ndarray:
+    """OWL: sparsity_i ∈ [S-λ, S+λ], decreasing in outlier ratio, mean S."""
+    r = np.asarray(ratios, np.float64)
+    if r.max() - r.min() < 1e-12:
+        return np.full(len(r), target)
+    dev = r - r.mean()
+    dev = dev / np.max(np.abs(dev))                 # [-1, 1], zero mean-ish
+    s = target - lam * dev                          # more outliers -> keep more
+    s = s + (target - s.mean())                     # exact budget
+    return np.clip(s, 0.0, 0.99)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model sparsification
+# ---------------------------------------------------------------------------
+
+
+def _get_path(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _set_path(tree, path, val):
+    out = dict(tree)
+    if len(path) == 1:
+        out[path[0]] = val
+        return out
+    out[path[0]] = _set_path(tree[path[0]], path[1:], val)
+    return out
+
+
+def _iter_layers(params, cfg):
+    """Yields (layer_idx, kind, layer_param_tree, stacked?)."""
+    pat = cfg.effective_pattern()
+    for l, kind in enumerate(pat):
+        if cfg.family == "hybrid" or not cfg.scan_layers:
+            yield l, kind, params["layers"][str(l)], False
+        else:
+            yield l, kind, params["layers"], True
+
+
+def sparsify_model(params, cfg, norms: Dict, sparsity: float,
+                   method: str = "wanda", owl_M: float = 5.0,
+                   owl_lam: float = 0.08, nm: Optional[Tuple[int, int]] = None):
+    """Apply Wanda/OWL/magnitude masks to every prunable weight.
+
+    norms: {(layer, tap) -> xnorm} from calibration (unused for magnitude).
+    Returns (new_params, masks {(layer, path) -> bool ndarray}, report).
+    """
+    import jax.numpy as jnp
+
+    # pass 1: scores (+ per-layer outlier ratios for OWL)
+    entries = []  # (l, path, stacked, in_axis, scores)
+    ratios_by_layer: Dict[int, List[float]] = {}
+    for l, kind, ltree, stacked in _iter_layers(params, cfg):
+        for path, (tap, in_axis, per_expert) in prunable_for(cfg, kind).items():
+            W = np.asarray(_get_path(ltree, path), np.float32)
+            if stacked:
+                W = W[l]
+            if method == "magnitude":
+                sc = np.abs(W)
+            else:
+                xn = norms[(l, tap)]
+                if per_expert:
+                    # xn [E, Din]; W [E, ..., ...] with in_axis counted
+                    # relative to the full tensor
+                    sc = np.abs(W) * np.expand_dims(
+                        xn, axis=tuple(i for i in range(1, W.ndim)
+                                       if i != in_axis))
+                else:
+                    sc = wanda_scores(W, xn, in_axis)
+            entries.append((l, path, stacked, in_axis, per_expert, sc))
+            ratios_by_layer.setdefault(l, []).append(outlier_ratio(sc, owl_M))
+
+    layer_ids = sorted(ratios_by_layer)
+    if method == "owl":
+        per_layer = owl_layer_sparsities(
+            [float(np.mean(ratios_by_layer[l])) for l in layer_ids],
+            sparsity, owl_lam)
+        sp_of = dict(zip(layer_ids, per_layer))
+    else:
+        sp_of = {l: sparsity for l in layer_ids}
+
+    # pass 2: masks + apply
+    new_params = params
+    masks = {}
+    total, kept = 0, 0
+    for l, path, stacked, in_axis, per_expert, sc in entries:
+        if per_expert:
+            # comparison group per (expert, output): treat expert axis as
+            # batch — compute per expert slice
+            mask = np.stack([mask_per_output(sc[e], sp_of[l],
+                                             in_axis - 1 if isinstance(in_axis, int) else in_axis)
+                             for e in range(sc.shape[0])])
+        else:
+            mask = mask_per_output(sc, sp_of[l], in_axis)
+        if nm is not None:
+            mask &= nm_rounding(sc, (in_axis if not per_expert else in_axis),
+                                *nm)
+        masks[(l, path)] = mask
+        total += mask.size
+        kept += int(mask.sum())
+        W = _get_path(new_params["layers"] if stacked
+                      else new_params["layers"][str(l)], path)
+        Wn = np.asarray(W, np.float32)
+        if stacked:
+            Wl = Wn[l] * mask
+            Wn = Wn.copy()
+            Wn[l] = Wl
+        else:
+            Wn = Wn * mask
+        sub = new_params["layers"] if stacked else new_params["layers"][str(l)]
+        sub = _set_path(sub, path, jnp.asarray(Wn, dtype=_get_path(
+            params["layers"] if stacked else params["layers"][str(l)],
+            path).dtype))
+        if stacked:
+            new_params = {**new_params, "layers": sub}
+        else:
+            new_params = {**new_params,
+                          "layers": {**new_params["layers"], str(l): sub}}
+    report = {
+        "method": method,
+        "target_sparsity": sparsity,
+        "achieved_sparsity": 1.0 - kept / max(total, 1),
+        "per_layer_sparsity": {l: float(sp_of[l]) for l in layer_ids},
+    }
+    return new_params, masks, report

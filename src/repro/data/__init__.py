@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticLM,
+    calibration_batches,
+    make_batch,
+)

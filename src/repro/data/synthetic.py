@@ -1,0 +1,98 @@
+"""Deterministic synthetic LM data pipeline (C4 stand-in).
+
+Design goals (DESIGN.md §8):
+  * *stateless-resumable*: ``batch = f(seed, step)`` is a pure function, so
+    restart/elastic-rescale needs no data-state checkpoint and stragglers
+    cannot skew the stream;
+  * *learnable*: tokens follow a fixed random order-1 Markov chain mixed
+    with a Zipf unigram — a tiny model trained on it visibly separates good
+    from bad pruning (the benchmarks' GSM8K/C4 analogue);
+  * matches the paper's calibration protocol shape-wise (128–1000 samples,
+    2048–4096 seq len) at reduced scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """A fixed random Markov language over `vocab` tokens."""
+    vocab: int
+    seed: int = 0
+    branching: int = 8          # successors per token
+    zipf_a: float = 1.2
+    mix: float = 0.85           # P(markov) vs P(unigram noise)
+
+    def __post_init__(self):
+        rs = np.random.RandomState(self.seed)
+        self.successors = rs.randint(0, self.vocab,
+                                     size=(self.vocab, self.branching))
+        probs = rs.dirichlet(np.ones(self.branching) * 0.5,
+                             size=self.vocab)
+        self.succ_probs = probs.astype(np.float64)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        z = ranks ** (-self.zipf_a)
+        self.unigram = z / z.sum()
+
+    def entropy_floor(self) -> float:
+        """Approximate per-token entropy of the Markov component (nats)."""
+        h = -np.sum(self.succ_probs * np.log(self.succ_probs + 1e-12),
+                    axis=1)
+        return float(self.mix * h.mean()
+                     - (1 - self.mix) * np.log(1.0 / self.vocab))
+
+    def sample(self, batch: int, seq: int, step: int) -> np.ndarray:
+        rs = np.random.RandomState((self.seed * 1_000_003 + step) % 2**31)
+        out = np.empty((batch, seq + 1), np.int64)
+        cur = rs.choice(self.vocab, size=batch, p=self.unigram)
+        out[:, 0] = cur
+        for t in range(1, seq + 1):
+            use_markov = rs.rand(batch) < self.mix
+            # markov step: pick successor by per-token distribution
+            u = rs.rand(batch)
+            cdf = np.cumsum(self.succ_probs[cur], axis=1)
+            idx = (u[:, None] > cdf).sum(axis=1).clip(0, self.branching - 1)
+            nxt_markov = self.successors[cur, idx]
+            nxt_noise = rs.choice(self.vocab, size=batch, p=self.unigram)
+            cur = np.where(use_markov, nxt_markov, nxt_noise)
+            out[:, t] = cur
+        return out
+
+
+def make_batch(lm: SyntheticLM, batch: int, seq: int, step: int,
+               d_model: int = 0, frontend_stub: bool = False) -> dict:
+    """(seed, step) -> batch dict. Pure & deterministic."""
+    toks = lm.sample(batch, seq, step)
+    inputs = jnp.asarray(toks[:, :-1], jnp.int32)
+    labels = jnp.asarray(toks[:, 1:], jnp.int32)
+    if frontend_stub:
+        # modality frontend stub: deterministic pseudo-embeddings per token
+        key = jax.random.fold_in(jax.random.PRNGKey(lm.seed), step)
+        table = jax.random.normal(key, (lm.vocab, d_model), jnp.bfloat16) * 0.1
+        return {"embeds": table[inputs], "labels": labels}
+    return {"tokens": inputs, "labels": labels}
+
+
+def calibration_batches(cfg, n_batches: int = 4, batch: int = 2,
+                        seq: int = 64, seed: int = 1234) -> List[dict]:
+    """Calibration set for Wanda/OWL/coactivation (paper: C4 samples)."""
+    lm = SyntheticLM(vocab=cfg.vocab, seed=seed)
+    return [make_batch(lm, batch, seq, step=i, d_model=cfg.d_model,
+                       frontend_stub=cfg.frontend_stub)
+            for i in range(n_batches)]
+
+
+def batch_iterator(cfg, batch: int, seq: int, seed: int = 0,
+                   start_step: int = 0) -> Iterator[dict]:
+    lm = SyntheticLM(vocab=cfg.vocab, seed=seed)
+    step = start_step
+    while True:
+        yield make_batch(lm, batch, seq, step, d_model=cfg.d_model,
+                         frontend_stub=cfg.frontend_stub)
+        step += 1

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    logical_to_spec,
+    named_sharding,
+    input_sharding,
+)

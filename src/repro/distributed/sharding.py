@@ -1,0 +1,104 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every tensor dim in the framework is tagged with a *logical* axis name.
+Rules map logical names to an ordered tuple of mesh axes; at spec-resolution
+time each candidate mesh axis is kept only if it exists in the mesh AND
+divides the dim size (composite candidates like ("pod","data") are kept as a
+group when the product divides).  This resolves, per-architecture, cases
+like qwen2's 28 heads on a 16-way model axis: "heads" falls back to
+unsharded while "mlp" still shards — never a silent wrong sharding, never a
+compile failure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> ordered candidates. Each candidate is a tuple of mesh axes
+# used jointly for that dim (first fitting candidate wins).
+DEFAULT_RULES = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": ((),),                      # sequence kept unsharded by default (SP is a perf knob)
+    "embed": ((),),                    # activation d_model replicated; TP reduces after proj
+    # params: tensor-parallel dims
+    "vocab": (("model",),),
+    "heads": (("model",), ()),
+    "kv_heads": (("model",), ()),
+    "mlp": (("model",),),
+    "experts": (("model",), ()),
+    "d_inner": (("model",),),          # mamba inner dim
+    "lru": (("model",),),              # rg-lru width
+    # params: FSDP dim (weight-stationary dim sharded over data axis)
+    "fsdp": (("data",), ()),
+    # never sharded
+    "head_dim": ((),),
+    "state": ((),),
+    "conv": ((),),
+    "layers": ((),),
+    "expert_mlp": ((),),               # per-expert hidden (EP shards experts instead)
+    "dt_rank": ((),),
+    None: ((),),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve_dim(logical: Optional[str], size: int, mesh: Mesh, rules) -> Tuple[str, ...]:
+    """Pick the first rule candidate whose mesh-axis product divides `size`."""
+    candidates = rules.get(logical, ((),))
+    sizes = _mesh_axis_sizes(mesh)
+    for cand in candidates:
+        axes = tuple(a for a in cand if a in sizes)
+        if not axes:
+            if cand == ():
+                return ()
+            continue
+        prod = math.prod(sizes[a] for a in axes)
+        if prod > 0 and size % prod == 0:
+            return axes
+    return ()
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                    mesh: Mesh, rules=None) -> P:
+    """Resolve logical axes (one per dim) into a PartitionSpec for `mesh`."""
+    rules = rules or DEFAULT_RULES
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    spec = []
+    for logical, size in zip(axes, shape):
+        resolved = _resolve_dim(logical, size, mesh, rules)
+        # a mesh axis may appear at most once in a PartitionSpec
+        resolved = tuple(a for a in resolved if a not in used)
+        if resolved:
+            prod = math.prod(_mesh_axis_sizes(mesh)[a] for a in resolved)
+            if size % prod != 0:
+                resolved = ()
+        used.update(resolved)
+        if len(resolved) == 0:
+            spec.append(None)
+        elif len(resolved) == 1:
+            spec.append(resolved[0])
+        else:
+            spec.append(tuple(resolved))
+    return P(*spec)
+
+
+def named_sharding(axes, shape, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+
+def input_sharding(mesh: Mesh, *axes, shape=None, rules=None) -> NamedSharding:
+    """Sharding for step inputs, e.g. input_sharding(mesh, "batch", "seq")."""
+    if shape is None:
+        # divisibility unknown -> assume divisible (inputs are sized to mesh)
+        shape = tuple(10 ** 9 if a is not None else 1 for a in axes)
+        # 1e9 divisible by any pod/data/model size in use (powers of two)
+        shape = tuple(2 ** 30 for _ in axes)
+    return named_sharding(axes, shape, mesh, rules)

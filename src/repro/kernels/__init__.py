@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module contains the `pl.pallas_call` + BlockSpec implementation;
+`ops.py` holds the jit'd public wrappers (TPU kernel / jnp fallback) and
+`ref.py` the pure-jnp oracles used by the interpret-mode allclose tests.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.block_sparse_matmul import (  # noqa: F401
+    block_sparse_matmul,
+    build_block_mask,
+)
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.moe_gmm import moe_gmm  # noqa: F401
+from repro.kernels.rglru_scan import rglru_scan  # noqa: F401
+from repro.kernels.wanda_score import wanda_mask_apply  # noqa: F401

@@ -1,0 +1,86 @@
+"""Pallas block-sparse matmul — the TPU adaptation of unstructured pruning.
+
+The paper's stage-2 masks are element-unstructured, which no TPU primitive
+accelerates (the paper's own Limitation §).  On TPU the exploitable
+structure is *block* sparsity aligned to MXU tiles: a [K/bk, N/bn] bitmap
+marks weight blocks that are entirely zero under the Wanda/OWL mask
+(common under OWL's non-uniform high layer ratios and after N:M
+re-rounding + column permutation).  The bitmap rides in scalar-prefetch
+SMEM; `pl.when` skips the dot entirely for dead blocks, saving both MXU
+time and the HBM->VMEM weight stream for those tiles.
+
+out [M,N] = x [M,K] @ w [K,N], grid (M/bm, N/bn, K/bk), fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bsmm_kernel(mask_ref, x_ref, w_ref, o_ref, acc_scr, *, n_k, n_n):
+    j_n = pl.program_id(1)
+    k_k = pl.program_id(2)
+
+    @pl.when(k_k == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(mask_ref[k_k * n_n + j_n] != 0)
+    def _compute():
+        acc_scr[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def block_sparse_matmul(x, w, block_mask, *, block_m=128, block_n=128,
+                        block_k=128, interpret=False):
+    """x [M,K] @ w [K,N] skipping blocks where block_mask[K/bk, N/bn]==0."""
+    M, K = x.shape
+    _, N = w.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k, n_n = K // block_k, N // block_n
+    assert block_mask.shape == (n_k, n_n), (block_mask.shape, (n_k, n_n))
+    mask_flat = block_mask.astype(jnp.int32).reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M // block_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k, mask: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k, mask: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, k, mask: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bsmm_kernel, n_k=n_k, n_n=n_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(mask_flat, x, w)
+
+
+def build_block_mask(mask: np.ndarray, block_k: int, block_n: int
+                     ) -> np.ndarray:
+    """Element mask [K,N] -> block bitmap [K/bk, N/bn] (1 = any nonzero)."""
+    K, N = mask.shape
+    assert K % block_k == 0 and N % block_n == 0
+    m = mask.reshape(K // block_k, block_k, N // block_n, block_n)
+    return m.any(axis=(1, 3))

@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+Grid (B*H, n_q_blocks, n_kv_blocks); the kv dimension is the minor
+(sequential) grid axis so VMEM scratch (m, l, acc) carries state across kv
+iterations.  Causal + sliding-window masking via block-level `pl.when`
+skips: fully-masked kv blocks are never computed, so causal attention does
+~half the FLOPs of the dense product and a window bounds work per q block.
+
+VMEM budget per step (bq=bk=512, hd=128, fp32 scratch):
+  q(512·128·4) + k,v(2·512·128·4) + acc(512·128·4) + s(512·512·4) ≈ 2.3 MB
+— comfortably under the ~16 MB v5e VMEM, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, block_q, block_k, n_kv, causal, window):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level skip: causal => blocks above the diagonal never computed;
+    # window => blocks entirely older than the window never computed.
+    needed = jnp.bool_(True)
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 >= q_start - (window - 1))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=512,
+                    block_k=512, interpret=False):
+    """q,k,v [B,H,S,hd] (GQA callers broadcast kv). Returns [B,H,S,hd]."""
+    B, H, S, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q, n_kv = S // block_q, S // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_attn_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, n_kv=n_kv, causal=causal,
+                               window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q.reshape(B * H, S, hd), k.reshape(B * H, S, hd),
+      v.reshape(B * H, S, hd))
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,70 @@
+"""Pallas grouped expert matmul (MoE fast path).
+
+Computes out[e] = buf[e] @ w[e] for every expert e: buf [E, C, D] is the
+capacity-bounded dispatch buffer, w [E, D, F] the per-expert weights.
+Grid (E, C/bc, F/bf, D/bd) — contraction (D) is the minor sequential axis,
+accumulated into fp32 VMEM scratch and flushed once per (e, c, f) tile.
+Tiles are MXU-aligned (128 multiples) in production; tests sweep smaller
+shapes in interpret mode.
+
+After STUN expert pruning the E axis physically shrinks (64 -> 48 @ 25%),
+which reduces both the gmm grid and the EP all-to-all payload — this kernel
+is where stage-1 pruning's serving win lands on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(buf_ref, w_ref, o_ref, acc_scr, *, n_d):
+    i_d = pl.program_id(3)
+
+    @pl.when(i_d == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        buf_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(i_d == n_d - 1)
+    def _flush():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(buf, w, *, block_c=128, block_f=128, block_d=128,
+            interpret=False):
+    """buf [E,C,D] @ w [E,D,F] -> [E,C,F]."""
+    E, C, D = buf.shape
+    _, _, F = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    n_d = D // block_d
+
+    return pl.pallas_call(
+        functools.partial(_gmm_kernel, n_d=n_d),
+        grid=(E, C // block_c, F // block_f, n_d),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda e, ic, jf, kd: (e, ic, kd)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, ic, jf, kd: (e, kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ic, jf, kd: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(buf, w)

@@ -1,0 +1,85 @@
+"""Public jit'd wrappers: kernel fast path on TPU, jnp oracle elsewhere.
+
+``use_pallas()`` decides per-call: real TPU backend -> compiled kernel;
+CPU/dry-run -> the pure-jnp reference (identical numerics to the oracle,
+bounded memory).  `force` overrides for interpret-mode validation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_sparse_matmul import block_sparse_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.wanda_score import wanda_mask_apply
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention_op(q, k, v, *, causal=True, window=None, force=None):
+    """q,k,v [B,H,S,hd]; GQA callers broadcast kv heads first."""
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window)
+    if mode == "interpret":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=True, block_q=64, block_k=64)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def gmm_op(buf, w, *, force=None):
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode == "pallas":
+        return moe_gmm(buf, w)
+    if mode == "interpret":
+        return moe_gmm(buf, w, block_c=32, block_f=32, block_d=32,
+                       interpret=True)
+    return ref.moe_gmm_ref(buf, w)
+
+
+def sparse_matmul_op(x, w, block_mask, *, block_k=128, block_n=128,
+                     force=None):
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode == "pallas":
+        return block_sparse_matmul(x, w, block_mask, block_k=block_k,
+                                   block_n=block_n)
+    if mode == "interpret":
+        return block_sparse_matmul(x, w, block_mask, block_m=32,
+                                   block_n=block_n, block_k=block_k,
+                                   interpret=True)
+    return ref.block_sparse_matmul_ref(x, w, block_mask, block_k, block_n)
+
+
+def wanda_prune_op(w, xnorm, sparsity: float, *, force=None):
+    """Fused Wanda prune of one weight matrix: threshold in jnp, mask apply
+    in the kernel."""
+    K, N = w.shape
+    score = jnp.abs(w.astype(jnp.float32)) * xnorm.astype(jnp.float32)[:, None]
+    k_prune = int(sparsity * K)
+    if k_prune == 0:
+        return w
+    thresh = jnp.sort(score, axis=0)[k_prune - 1, :]     # per output column
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode == "pallas":
+        return wanda_mask_apply(w, xnorm, thresh)
+    if mode == "interpret":
+        return wanda_mask_apply(w, xnorm, thresh, block_k=64, block_n=64,
+                                interpret=True)
+    return ref.wanda_mask_apply_ref(w, xnorm, thresh)
+
+
+def lru_scan_op(a, b, *, force=None):
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode == "pallas":
+        return rglru_scan(a, b)
+    if mode == "interpret":
+        return rglru_scan(a, b, block_w=32, sub=32, interpret=True)
+    return ref.rglru_scan_ref(a, b)

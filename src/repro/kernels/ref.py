@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q,k,v [B,H,S,hd] (kv pre-broadcast to H). fp32 reference."""
+    B, H, S, hd = q.shape
+    scale = scale or hd ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def moe_gmm_ref(buf, w):
+    """buf [E,C,D] @ w [E,D,F] -> [E,C,F] (per-expert matmul)."""
+    return jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(buf.dtype)
+
+
+def block_sparse_matmul_ref(x, w, block_mask, bk, bn):
+    """x [M,K] @ (w [K,N] with [K/bk, N/bn] block mask) -> [M,N]."""
+    K, N = w.shape
+    mask = jnp.repeat(jnp.repeat(block_mask, bk, axis=0), bn, axis=1)
+    wm = w * mask[:K, :N].astype(w.dtype)
+    return (x.astype(jnp.float32) @ wm.astype(jnp.float32)).astype(x.dtype)
+
+
+def wanda_mask_apply_ref(w, xnorm, thresh):
+    """w [K,N], xnorm [K], thresh [N] -> w masked where |w|·xnorm <= thresh."""
+    score = jnp.abs(w.astype(jnp.float32)) * xnorm.astype(jnp.float32)[:, None]
+    return jnp.where(score > thresh.astype(jnp.float32)[None, :], w,
+                     jnp.zeros_like(w))
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t, h_0 = 0. a,b [B,S,W] fp32."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, jnp.zeros(a[:, 0].shape, jnp.float32),
+                         (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,75 @@
+"""Pallas blocked linear-recurrence scan (RG-LRU / SSM inner loop).
+
+h_t = a_t ⊙ h_{t-1} + b_t over time, per (batch, width-block) tile.  The
+whole [S, bw] tile sits in VMEM (S=4096, bw=128, fp32 -> 2 MB/input); the
+kernel walks time in *sub-chunks*, running a log-depth Blelloch-style
+associative combine inside each sub-chunk on the VPU and carrying the
+[1, bw] state across sub-chunks — the TPU-native reshape of the paper-era
+CUDA sequential scan (see DESIGN.md §3).
+
+Grid (B, W/bw): embarrassingly parallel over both axes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, o_ref, h_scr, *, seq_len, sub):
+    @pl.when(pl.program_id(0) >= 0)  # always; keeps structure uniform
+    def _run():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    n_sub = seq_len // sub
+
+    def outer(i, _):
+        a = a_ref[0, pl.ds(i * sub, sub)].astype(jnp.float32)  # [sub, bw]
+        b = b_ref[0, pl.ds(i * sub, sub)].astype(jnp.float32)
+
+        # log-depth inclusive scan of the affine maps within the sub-chunk
+        def combine(c, step):
+            ca, cb = c
+            sa = jnp.roll(ca, step, axis=0).at[:step].set(1.0)
+            sb = jnp.roll(cb, step, axis=0).at[:step].set(0.0)
+            return (ca * sa, cb + ca * sb), None
+
+        ca, cb = a, b
+        step = 1
+        while step < sub:
+            (ca, cb), _ = combine((ca, cb), step)
+            step *= 2
+        # apply incoming carry: h_t = ca_t * h_in + cb_t
+        h_in = h_scr[...]
+        h_all = ca * h_in + cb
+        o_ref[0, pl.ds(i * sub, sub)] = h_all.astype(o_ref.dtype)
+        h_scr[...] = h_all[-1:]
+        return 0
+
+    jax.lax.fori_loop(0, n_sub, outer, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "sub", "interpret"))
+def rglru_scan(a, b, *, block_w=128, sub=64, interpret=False):
+    """a, b [B, S, W] -> h [B, S, W] with h_t = a_t h_{t-1} + b_t."""
+    B, S, W = a.shape
+    block_w = min(block_w, W)
+    sub = min(sub, S)
+    assert W % block_w == 0 and S % sub == 0
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, seq_len=S, sub=sub),
+        grid=(B, W // block_w),
+        in_specs=[
+            pl.BlockSpec((1, S, block_w), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, S, block_w), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, S, block_w), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b)

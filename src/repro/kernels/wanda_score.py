@@ -1,0 +1,53 @@
+"""Pallas fused Wanda score-and-mask kernel.
+
+Offline pruning hot-spot: for a weight tile W [bk, bn], the Wanda score is
+|W| · ||X||₂ (input-feature norms broadcast down columns); weights whose
+score falls at or below the per-output threshold are zeroed in place.
+Fusing |W|·norm, compare and select into one pass keeps the weight stream
+at exactly one HBM read + one write — the op is purely memory-bound, so
+this is the roofline-optimal shape for it.
+
+Threshold computation (a per-column k-th order statistic) stays in jnp on
+the host path (`ops.wanda_prune`): a quantile over K elements per column is
+cheap and awkward on the MXU/VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wanda_kernel(w_ref, xn_ref, th_ref, o_ref):
+    w = w_ref[...]
+    score = jnp.abs(w.astype(jnp.float32)) * xn_ref[...].astype(jnp.float32)[:, None]
+    keep = score > th_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = jnp.where(keep, w, jnp.zeros_like(w))
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n",
+                                             "interpret"))
+def wanda_mask_apply(w, xnorm, thresh, *, block_k=256, block_n=256,
+                     interpret=False):
+    """w [K,N], xnorm [K], thresh [N] -> masked w."""
+    K, N = w.shape
+    block_k = min(block_k, K)
+    block_n = min(block_n, N)
+    assert K % block_k == 0 and N % block_n == 0
+    return pl.pallas_call(
+        _wanda_kernel,
+        grid=(K // block_k, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_k, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_k,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_k, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(w, xnorm, thresh)

@@ -1,0 +1,62 @@
+"""Offline STUN pruning CLI: checkpoint in -> pruned checkpoint out.
+
+    python -m repro.launch.prune --arch olmoe-1b-7b \
+        --checkpoint-dir /ckpt/in --out-dir /ckpt/pruned \
+        --sparsity 0.4 --expert-ratio 0.25 --unstructured owl
+
+Mirrors the paper's deployment recipe: the whole decision is host-side
+(router weights only for λ=(1,0)) — one machine, no accelerator required,
+O(1) in the number of experts.
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.core import stun_prune
+from repro.data.synthetic import calibration_batches
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--checkpoint-dir", required=True)
+    ap.add_argument("--out-dir", required=True)
+    ap.add_argument("--sparsity", type=float, default=0.4)
+    ap.add_argument("--expert-ratio", type=float, default=0.25)
+    ap.add_argument("--unstructured", default="owl",
+                    choices=["owl", "wanda", "magnitude"])
+    ap.add_argument("--lam2", type=float, default=0.0,
+                    help="coactivation weight (0 = no forward passes)")
+    ap.add_argument("--kappa", type=int, default=3)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32",
+                                  moe_impl="dense", remat_policy="full")
+    step, tree = restore_checkpoint(args.checkpoint_dir)
+    params = jax.tree.map(jax.numpy.asarray, tree["params"])
+    batches = calibration_batches(cfg, n_batches=4)
+    structured = args.expert_ratio if cfg.family == "moe" else 0.05
+    pruned, pcfg, masks, report = stun_prune(
+        params, cfg, batches, target_sparsity=args.sparsity,
+        expert_ratio=structured, unstructured=args.unstructured,
+        lam2=args.lam2, kappa=args.kappa)
+    save_checkpoint(args.out_dir, step,
+                    {"params": jax.tree.map(np.asarray, pruned)})
+    print(f"pruned checkpoint written to {args.out_dir}")
+    print(f"  structured: {report.structured_ratio:.1%}  "
+          f"unstructured: {report.unstructured_ratio:.1%}  "
+          f"forward passes: {report.forward_passes}")
+    if pcfg.n_experts != cfg.n_experts:
+        print(f"  experts: {cfg.n_experts} -> {pcfg.n_experts} "
+              f"(update serving config accordingly)")
+
+
+if __name__ == "__main__":
+    main()

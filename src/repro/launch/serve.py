@@ -1,0 +1,55 @@
+"""Serving launcher: load a (possibly STUN-pruned) checkpoint and serve
+batched greedy-decode requests.
+
+    python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
+        --checkpoint-dir /ckpt/pruned --n-requests 8 --new-tokens 16
+
+On hardware the engine runs under the production mesh (EP over "model");
+pruned checkpoints re-shard onto the same mesh with a smaller expert axis.
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.serving import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--checkpoint-dir", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--n-requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg), dtype="float32",
+                                  moe_impl="dense", remat_policy="full")
+    _, tree = restore_checkpoint(args.checkpoint_dir)
+    params = jax.tree.map(jax.numpy.asarray, tree["params"])
+    # infer pruned expert count from the checkpoint (compact STUN output)
+    if cfg.family == "moe":
+        e = params["layers"]["moe"]["router"].shape[1]
+        if e != cfg.n_experts:
+            cfg = dataclasses.replace(cfg, n_experts=e,
+                                      top_k=min(cfg.top_k, e))
+            print(f"detected pruned checkpoint: {e} experts")
+
+    rs = np.random.RandomState(0)
+    reqs = [Request(rs.randint(0, cfg.vocab, 8).astype(np.int32),
+                    args.new_tokens) for _ in range(args.n_requests)]
+    eng = ServeEngine(params, cfg, max_len=args.max_len)
+    outs = eng.generate(reqs)
+    for i, o in enumerate(outs):
+        print(f"req{i}: {o.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

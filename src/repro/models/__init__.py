@@ -1,0 +1,9 @@
+from repro.models.transformer import (  # noqa: F401
+    abstract_params,
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    loss_fn,
+)
+from repro.models import param  # noqa: F401

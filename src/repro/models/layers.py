@@ -1,0 +1,243 @@
+"""Core dense layers: RMSNorm, RoPE, GQA attention (naive / chunked-flash /
+decode), SwiGLU MLP.  Pure functions over param dicts.
+
+Attention has two portable implementations:
+  * ``naive``   — materializes [.., S, T] scores; smoke tests / tiny shapes.
+  * ``chunked`` — flash-style online softmax over KV chunks via ``lax.scan``;
+                  bounded memory, used by the dry-run for 4k/32k sequences.
+The Pallas TPU kernel (repro/kernels/flash_attention.py) is selected by
+``attn_impl="pallas"`` and validated against these in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm_bf16grad(x, scale, eps: float = 1e-6):
+    """rmsnorm whose backward keeps the residual-stream cotangent in the
+    model dtype.
+
+    Without this, XLA's excess-precision pass hoists the bwd's
+    bf16->fp32 convert across the tensor-parallel psum, doubling the
+    dominant activation-gradient all-reduce payload (measured on
+    deepseek-67b train_4k — see EXPERIMENTS.md §Perf).  An
+    optimization_barrier pins the convert after the collective.
+    """
+    return rmsnorm(x, scale, eps)
+
+
+def _rms_fwd(x, scale, eps):
+    # barrier BEFORE the upcast: stops XLA hoisting the bf16->f32 convert
+    # across the TP psum that produced x (which would make the forward
+    # all-reduce fp32)
+    x = lax.optimization_barrier(x)
+    return rmsnorm(x, scale, eps), (x, scale)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale = res
+    g = lax.optimization_barrier(g)          # keep psum in model dtype
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = lax.rsqrt(var + eps)
+    xhat = x32 * inv
+    s32 = 1.0 + scale.astype(jnp.float32)
+    dscale = jnp.sum(g32 * xhat,
+                     axis=tuple(range(g.ndim - 1))).astype(scale.dtype)
+    gy = g32 * s32
+    dx = inv * (gy - xhat * jnp.mean(gy * xhat, axis=-1, keepdims=True))
+    return dx.astype(x.dtype), dscale
+
+
+rmsnorm_bf16grad.defvjp(_rms_fwd, _rms_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions [..., S] -> (sin, cos) each [..., S, head_dim//2] fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [B,S,H,hd]; sin/cos [B,S,half] or [S,half]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:  # [S, half] -> broadcast batch
+        sin = sin[None]
+        cos = cos[None]
+    sin = sin[..., None, :]  # head axis
+    cos = cos[..., None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, window: Optional[int]):
+    """[..., S, T] boolean mask: True = attend."""
+    m = q_pos[..., :, None] >= kv_pos[..., None, :]
+    if window is not None:
+        m &= (q_pos[..., :, None] - kv_pos[..., None, :]) < window
+    return m
+
+
+def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None):
+    """q [B,S,H,hd], k/v [B,T,K,hd], q_pos [S] or [B,S], kv_pos [T] or [B,T]."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qh = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    m = _mask(q_pos, kv_pos, window)  # [S,T] or [B,S,T]
+    if m.ndim == 3:
+        m = m[:, None, None]
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
+                      chunk: int = 512, unroll: bool = False):
+    """Flash-style online-softmax attention, scanning KV in chunks.
+
+    ``unroll`` replaces the lax.scan with a python loop (identical math) so
+    dry-run cost probes see every chunk in the HLO (see dryrun.py).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    if T % chunk != 0:
+        chunk = T  # degenerate fallback for tiny shapes
+    n_chunks = T // chunk
+    qh = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    if kv_pos.ndim == 1:
+        pc = kv_pos.reshape(n_chunks, chunk)
+    else:
+        pc = kv_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kch, vch, pch = inp
+        s = jnp.einsum("bskgh,bckh->bkgsc", qh, kch.astype(jnp.float32)) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        msk = _mask(q_pos, pch, window)  # [S,c] or [B,S,c]
+        if msk.ndim == 3:
+            msk = msk[:, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgsc,bckh->bskgh", p, vch.astype(jnp.float32))
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    if unroll:
+        carry = (m0, l0, a0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i], pc[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, cache_len, *, window=None,
+                     softcap=None):
+    """Single-token decode: q [B,1,H,hd] vs cache [B,T,K,hd].
+
+    ``cache_len`` [B] — number of valid cache entries per row (the new
+    token's K/V must already be written into the cache).
+    """
+    B, _, H, hd = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qh = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qh, k_cache.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t_idx = jnp.arange(T)[None]          # [1,T]
+    valid = t_idx < cache_len[:, None]
+    if window is not None:
+        valid &= t_idx >= (cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, kv_pos, *, impl="chunked", window=None,
+              softcap=None, chunk=512, unroll=False):
+    if impl == "naive" or q.shape[1] <= chunk:
+        return attention_naive(q, k, v, q_pos, kv_pos, window=window,
+                               softcap=softcap)
+    if impl in ("chunked", "pallas"):
+        # pallas fast path is swapped in by kernels/ops.py when enabled;
+        # portable lowering uses the chunked scan.
+        return attention_chunked(q, k, v, q_pos, kv_pos, window=window,
+                                 softcap=softcap, chunk=chunk, unroll=unroll)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down, b_gate=None, b_up=None, b_down=None):
+    g = x @ w_gate
+    u = x @ w_up
+    if b_gate is not None:
+        g = g + b_gate
+    if b_up is not None:
+        u = u + b_up
+    y = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = y @ w_down
+    if b_down is not None:
+        y = y + b_down
+    return y

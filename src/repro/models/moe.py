@@ -1,0 +1,136 @@
+"""Mixture-of-Experts block: top-k router + grouped sort/scatter dispatch.
+
+Dispatch strategy (see DESIGN.md §5): tokens are processed in *groups* (one
+group per sequence) so the per-group argsort stays local to its data shard —
+no global sort collectives.  Each (token, choice) pair is scattered into a
+capacity-bounded per-group expert buffer ``[G, E, C, D]``; a sharding
+constraint moves the buffer onto the expert-parallel axis before the batched
+expert matmul, which XLA lowers to an all-to-all-class collective.  Compiled
+FLOPs stay ≈ active-FLOPs × capacity_factor (GShard one-hot dispatch einsums
+would inflate dispatch FLOPs ~quadratically in group size).
+
+The router weight is stored as ``[E, D]`` — rows are exactly the W_i vectors
+STUN's behavioral similarity (Eq. 8) clusters on.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import swiglu
+
+
+def router_probs(x_flat, router_w):
+    """x [T, D], router_w [E, D] -> probs [T, E] fp32 (Eq. 1)."""
+    logits = jnp.einsum("td,ed->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def moe_block(x, params, cfg, *, mesh=None, capacity_factor=None,
+              expert_mask=None):
+    """x [B, S, D] -> [B, S, D].
+
+    ``expert_mask`` [E] float (1=alive, 0=pruned) implements *runtime* expert
+    pruning (router logits of pruned experts forced to -inf) — used to
+    evaluate pruning decisions without re-materializing a smaller checkpoint.
+    """
+    B, S, D = x.shape
+    E = cfg.n_experts
+    k = cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    G = B                      # one dispatch group per sequence
+    Tg = S                     # tokens per group
+    C = max(k, int(math.ceil(Tg * k / E * cf)))
+
+    router_w = params["router"]
+    logits = jnp.einsum("bsd,ed->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None, None, :] > 0, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)          # [B,S,E] fp32
+    top_p, top_i = lax.top_k(probs, k)               # [B,S,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- dispatch: per-group stable sort by expert id ---
+    flat_e = top_i.reshape(G, Tg * k)                         # [G, T*k]
+    order = jnp.argsort(flat_e, axis=-1, stable=True)         # local sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # rank within expert = position - start offset of that expert
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(flat_e)  # [G,E]
+    starts = jnp.cumsum(counts, axis=-1) - counts                   # excl.
+    rank = jnp.arange(Tg * k)[None] - jnp.take_along_axis(starts, sorted_e,
+                                                          axis=-1)
+    slot = sorted_e * C + rank                                      # [G,T*k]
+    overflow = rank >= C
+    slot = jnp.where(overflow, E * C, slot)  # drop -> scratch row
+
+    token_of = order // k                                           # [G,T*k]
+    x_g = x.reshape(G, Tg, D)
+    gathered = jnp.take_along_axis(x_g, token_of[..., None], axis=1)
+    buf = jnp.zeros((G, E * C + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, s, g: b.at[s].set(g))(buf, slot, gathered)
+    buf = buf[:, : E * C].reshape(G, E, C, D)
+    if mesh is not None and "model" in mesh.axis_names and E % mesh.shape["model"] == 0:
+        batch_ax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        batch_ax = tuple(a for a in batch_ax if a in mesh.axis_names)
+        buf = lax.with_sharding_constraint(
+            buf, jax.NamedSharding(mesh, P(batch_ax if len(batch_ax) > 1 else batch_ax[0],
+                                           "model", None, None)))
+
+    # --- expert computation (batched over E; TPU fast path = moe_gmm) ---
+    g = jnp.einsum("gecd,edf->gecf", buf, params["we_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("gecf,efd->gecd", h, params["we_down"])          # [G,E,C,D]
+
+    # --- combine: scatter-add back to tokens with router weights ---
+    y_flat = y.reshape(G, E * C, D)
+    y_sorted = jnp.take_along_axis(
+        y_flat, jnp.minimum(slot, E * C - 1)[..., None], axis=1)
+    w_sorted = jnp.take_along_axis(top_p.reshape(G, Tg * k), order, axis=-1)
+    w_sorted = jnp.where(overflow, 0.0, w_sorted)
+    contrib = y_sorted.astype(jnp.float32) * w_sorted[..., None]
+    out = jnp.zeros((G, Tg, D), jnp.float32)
+    out = jax.vmap(lambda o, t, c: o.at[t].add(c))(out, token_of, contrib)
+    out = out.astype(x.dtype).reshape(B, S, D)
+
+    if cfg.shared_expert:
+        out = out + swiglu(x, params["shared_gate"], params["shared_up"],
+                           params["shared_down"])
+    return out
+
+
+def moe_block_dense(x, params, cfg, expert_mask=None):
+    """Reference dense MoE: every expert on every token (tiny shapes only)."""
+    B, S, D = x.shape
+    logits = jnp.einsum("bsd,ed->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if expert_mask is not None:
+        logits = jnp.where(expert_mask[None, None, :] > 0, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    gate = jnp.sum(jax.nn.one_hot(top_i, cfg.n_experts, dtype=jnp.float32)
+                   * top_p[..., None], axis=-2)                   # [B,S,E]
+    g = jnp.einsum("bsd,edf->bsef", x, params["we_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("bsef,efd->bsed", h, params["we_down"])
+    out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), gate)
+    out = out.astype(x.dtype)
+    if cfg.shared_expert:
+        out = out + swiglu(x, params["shared_gate"], params["shared_up"],
+                           params["shared_down"])
+    return out
+
+
+def moe_apply(x, params, cfg, *, mesh=None, expert_mask=None):
+    if cfg.moe_impl == "dense":
+        return moe_block_dense(x, params, cfg, expert_mask=expert_mask)
+    return moe_block(x, params, cfg, mesh=mesh, expert_mask=expert_mask)

@@ -1,0 +1,109 @@
+"""Parameter specs: shapes + logical sharding axes + initializers.
+
+Models declare an *abstract* parameter tree of `ParamSpec`s.  From it we
+derive (a) materialized params for real runs, (b) ShapeDtypeStructs with
+NamedShardings for the compile-only dry-run, (c) in_shardings for pjit.
+No flax — params are plain nested dicts of arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import named_sharding
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | constant
+    scale: float = 1.0        # stddev multiplier (normal) or constant value
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="normal", scale=1.0, dtype="bfloat16") -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(s: ParamSpec, key) -> jax.Array:
+    dt = jnp.dtype(s.dtype)
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dt)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dt)
+    if s.init == "constant":
+        return jnp.full(s.shape, s.scale, dt)
+    if s.init == "normal":
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dt)
+    raise ValueError(s.init)
+
+
+def tree_paths(tree, prefix=()):
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    for k in sorted(tree):
+        yield from tree_paths(tree[k], prefix + (k,))
+
+
+def init_params(abstract, rng):
+    """Materialize a ParamSpec tree into arrays (deterministic per path)."""
+    leaves = list(tree_paths(abstract))
+    keys = jax.random.split(rng, len(leaves))
+
+    def build(tree, prefix=()):
+        if is_spec(tree):
+            idx = paths.index(prefix)
+            return _init_one(tree, keys[idx])
+        return {k: build(v, prefix + (k,)) for k, v in tree.items()}
+
+    paths = [p for p, _ in leaves]
+    return build(abstract)
+
+
+def abstract_arrays(abstract, mesh=None, rules=None):
+    """ShapeDtypeStructs (with shardings if mesh given) for .lower()."""
+    def conv(tree):
+        if is_spec(tree):
+            sharding = None
+            if mesh is not None:
+                sharding = named_sharding(tree.axes, tree.shape, mesh, rules)
+            return jax.ShapeDtypeStruct(tree.shape, jnp.dtype(tree.dtype),
+                                        sharding=sharding)
+        return {k: conv(v) for k, v in tree.items()}
+    return conv(abstract)
+
+
+def shardings(abstract, mesh, rules=None):
+    """NamedSharding pytree matching the param tree (for in_shardings)."""
+    def conv(tree):
+        if is_spec(tree):
+            return named_sharding(tree.axes, tree.shape, mesh, rules)
+        return {k: conv(v) for k, v in tree.items()}
+    return conv(abstract)
+
+
+def param_count(abstract) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in tree_paths(abstract))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

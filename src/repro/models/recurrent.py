@@ -1,0 +1,43 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: x -> [linear->GeLU] ⊙ [linear->conv1d->RG-LRU] -> out-proj.
+RG-LRU (arXiv:2402.19427):
+    r_t = σ(W_a x_t + b_a)              recurrence gate
+    i_t = σ(W_x x_t + b_x)              input gate
+    log a_t = -c · softplus(Λ) · r_t    (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+Driven by the same chunked linear-recurrence engine as the SSM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import causal_conv1d, linear_recurrence_chunked
+
+RG_LRU_C = 8.0
+
+
+def rg_lru(x, p, cfg, *, state=None):
+    """x [B,S,W] -> (h [B,S,W], h_last [B,W])."""
+    B, S, W = x.shape
+    r = jax.nn.sigmoid((x @ p["w_a"] + p["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"] + p["b_i"]).astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                   # [B,S,W]
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    h0 = jnp.zeros((B, W), jnp.float32) if state is None else state
+    h, h_last = linear_recurrence_chunked(
+        a, gated, h0, min(cfg.ssm_chunk, S),
+        unroll=getattr(cfg, "unroll_scans", False))
+    return h.astype(x.dtype), h_last
+
+
+def recurrent_block(x, p, cfg, *, conv_state=None, lru_state=None):
+    """Griffin recurrent mixer. x [B,S,D] -> (y [B,S,D], new states)."""
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    u = x @ p["w_in"]                                    # [B,S,W]
+    u, new_conv = causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    h, new_lru = rg_lru(u, p, cfg, state=lru_state)
+    y = (h * gate) @ p["w_out"]
+    return y, (new_conv, new_lru)

@@ -1,0 +1,132 @@
+"""Mamba-1 selective SSM block (falcon-mamba) + shared chunked linear
+recurrence.
+
+TPU adaptation (DESIGN.md §5): the CUDA "selective scan" kernel is re-thought
+as a *chunked associative scan* — sequence is split into chunks; within a
+chunk ``lax.associative_scan`` exposes parallelism to the VPU, across chunks
+a small ``lax.scan`` carries the [B, d_inner, N] state.  Discretization
+(dA, dBx) is computed per-chunk inside the scan body so the full [B,S,di,N]
+tensor is never materialized.  The same engine drives the RG-LRU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _combine(e1, e2):
+    """Compose h->a1*h+b1 then h->a2*h+b2 (associative)."""
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def linear_recurrence_chunked(a, b, h0, chunk: int, unroll: bool = False):
+    """h_t = a_t * h_{t-1} + b_t over axis 1 (time). a,b [B,S,...] fp32.
+
+    Returns (h_all [B,S,...], h_last [B,...]).  ``unroll`` replaces the
+    chunk lax.scan with a python loop (dry-run cost probes).
+    """
+    B, S = a.shape[0], a.shape[1]
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    rest = a.shape[2:]
+    a_c = a.reshape((B, nc, chunk) + rest).transpose((1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    b_c = b.reshape((B, nc, chunk) + rest).transpose((1, 0, 2) + tuple(range(3, b.ndim + 1)))
+
+    def body(h, inp):
+        ac, bc = inp
+        aa, bb = lax.associative_scan(_combine, (ac, bc), axis=1)
+        h_all = aa * h[:, None] + bb
+        return h_all[:, -1], h_all
+
+    if unroll:
+        h, chunks = h0, []
+        for i in range(nc):
+            h, h_all = body(h, (a_c[i], b_c[i]))
+            chunks.append(h_all)
+        h_last, h_chunks = h, jnp.stack(chunks)
+    else:
+        h_last, h_chunks = lax.scan(body, h0, (a_c, b_c))
+    h_all = h_chunks.transpose((1, 0, 2) + tuple(range(3, a.ndim + 1)))
+    return h_all.reshape((B, S) + rest), h_last
+
+
+def causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x [B,S,C], w [C,K], b [C].
+
+    ``state`` [B,K-1,C] carries the last K-1 inputs for decode; returns
+    (y, new_state).
+    """
+    B, S, C = x.shape
+    K = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # [B, S+K-1, C]
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):
+        y = y + xp[:, i: i + S].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, S:]
+    return y.astype(x.dtype), new_state
+
+
+def mamba_mixer(x, p, cfg, *, conv_state=None, ssm_state=None):
+    """Mamba-1 mixer. x [B,S,D] -> (y [B,S,D], (conv_state, ssm_state)).
+
+    States given => stateful (decode/chunked-prefill) mode.
+    """
+    B, S, D = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual
+    xz = x @ p["w_in"]                      # [B,S,2*di]
+    xs, z = xz[..., :di], xz[..., di:]
+    xs, new_conv = causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    proj = xs @ p["w_x"]                    # [B,S,R+2N]
+    dt, Bm, Cm = proj[..., :R], proj[..., R:R + N], proj[..., R + N:]
+    dt = jax.nn.softplus((dt @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [di,N]
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    xs32 = xs.astype(jnp.float32)
+
+    if ssm_state is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    else:
+        h0 = ssm_state
+
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+
+    def body(h, inp):
+        dt_c, B_c, C_c, x_c = inp            # [B,c,...]
+        dA = jnp.exp(dt_c[..., None] * A)                # [B,c,di,N]
+        dBx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]
+        aa, bb = lax.associative_scan(_combine, (dA, dBx), axis=1)
+        h_all = aa * h[:, None] + bb                     # [B,c,di,N]
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_all, C_c)
+        return h_all[:, -1], y_c
+
+    def chunked(t):  # [B,S,...] -> [nc,B,c,...]
+        return t.reshape((B, nc, chunk) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    if getattr(cfg, "unroll_scans", False):
+        h, ys = h0, []
+        xs_in = (chunked(dt), chunked(Bm), chunked(Cm), chunked(xs32))
+        for i in range(nc):
+            h, y_i = body(h, tuple(t[i] for t in xs_in))
+            ys.append(y_i)
+        h_last, y_c = h, jnp.stack(ys)
+    else:
+        h_last, y_c = lax.scan(body, h0, (chunked(dt), chunked(Bm),
+                                          chunked(Cm), chunked(xs32)))
+    y = y_c.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + xs32 * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_out"], (new_conv, h_last)

@@ -1,0 +1,574 @@
+"""Unified decoder model covering all assigned families.
+
+families: dense | moe | ssm (mamba) | hybrid (rg-lru + local attn) |
+          audio / vlm (dense backbone + frontend-stub embeddings).
+
+Params are ParamSpec trees (models/param.py).  Homogeneous stacks are
+scanned (`lax.scan` over stacked [L, ...] params, jax.checkpoint remat
+inside) so HLO size is O(1) in depth; the heterogeneous hybrid stack is
+unrolled (26 small layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import param as pm
+from repro.models.layers import (apply_rope, attention, attention_decode,
+                                 rmsnorm, rmsnorm_bf16grad, rope_tables,
+                                 swiglu)
+from repro.models.moe import moe_apply
+from repro.models.recurrent import recurrent_block
+from repro.models.ssm import mamba_mixer
+
+
+def _norm(x, scale, cfg):
+    if getattr(cfg, "norm_bf16_grad", False):
+        return rmsnorm_bf16grad(x, scale, cfg.norm_eps)
+    return rmsnorm(x, scale, cfg.norm_eps)
+
+# ---------------------------------------------------------------------------
+# Abstract parameter trees
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig, L=None):
+    d, H, K, hd = cfg.d_model, cfg.heads_eff, cfg.kv_eff, cfg.head_dim
+    s = lambda shape, axes, **kw: pm.spec(  # noqa: E731
+        ((L,) + shape) if L else shape,
+        (("layers",) + axes) if L else axes, **kw)
+    out = {
+        "wq": s((d, H, hd), ("fsdp", "heads", "head_dim")),
+        "wk": s((d, K, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wv": s((d, K, hd), ("fsdp", "kv_heads", "head_dim")),
+        "wo": s((H, hd, d), ("heads", "head_dim", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = s((H, hd), ("heads", "head_dim"), init="zeros")
+        out["bk"] = s((K, hd), ("kv_heads", "head_dim"), init="zeros")
+        out["bv"] = s((K, hd), ("kv_heads", "head_dim"), init="zeros")
+    return out
+
+
+def _mlp_specs(cfg: ModelConfig, L=None):
+    d, f = cfg.d_model, cfg.d_ff
+    s = lambda shape, axes, **kw: pm.spec(  # noqa: E731
+        ((L,) + shape) if L else shape,
+        (("layers",) + axes) if L else axes, **kw)
+    return {
+        "w_gate": s((d, f), ("fsdp", "mlp")),
+        "w_up": s((d, f), ("fsdp", "mlp")),
+        "w_down": s((f, d), ("mlp", "fsdp")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, L=None):
+    d, fe, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    s = lambda shape, axes, **kw: pm.spec(  # noqa: E731
+        ((L,) + shape) if L else shape,
+        (("layers",) + axes) if L else axes, **kw)
+    out = {
+        "router": s((E, d), ("experts", "fsdp"), scale=0.02),
+        "we_gate": s((E, d, fe), ("experts", "fsdp", "expert_mlp")),
+        "we_up": s((E, d, fe), ("experts", "fsdp", "expert_mlp")),
+        "we_down": s((E, fe, d), ("experts", "expert_mlp", "fsdp")),
+    }
+    if cfg.shared_expert:
+        out["shared_gate"] = s((d, fe), ("fsdp", "expert_mlp"))
+        out["shared_up"] = s((d, fe), ("fsdp", "expert_mlp"))
+        out["shared_down"] = s((fe, d), ("expert_mlp", "fsdp"))
+    return out
+
+
+def _ssm_specs(cfg: ModelConfig, L=None):
+    d, di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual
+    Kc = cfg.ssm_conv
+    s = lambda shape, axes, **kw: pm.spec(  # noqa: E731
+        ((L,) + shape) if L else shape,
+        (("layers",) + axes) if L else axes, **kw)
+    return {
+        "w_in": s((d, 2 * di), ("fsdp", "d_inner")),
+        "conv_w": s((di, Kc), ("d_inner", "conv"), init="normal", scale=0.5),
+        "conv_b": s((di,), ("d_inner",), init="zeros"),
+        "w_x": s((di, R + 2 * N), ("d_inner", None)),
+        "w_dt": s((R, di), ("dt_rank", "d_inner")),
+        "dt_bias": s((di,), ("d_inner",), init="constant", scale=-4.0),
+        "A_log": s((di, N), ("d_inner", "state"), init="constant", scale=0.5),
+        "D": s((di,), ("d_inner",), init="ones"),
+        "w_out": s((di, d), ("d_inner", "fsdp")),
+    }
+
+
+def _rec_specs(cfg: ModelConfig):
+    d, W = cfg.d_model, (cfg.lru_width or cfg.d_model)
+    Kc = cfg.ssm_conv
+    return {
+        "w_gate": pm.spec((d, W), ("fsdp", "lru")),
+        "w_in": pm.spec((d, W), ("fsdp", "lru")),
+        "conv_w": pm.spec((W, Kc), ("lru", "conv"), scale=0.5),
+        "conv_b": pm.spec((W,), ("lru",), init="zeros"),
+        "w_a": pm.spec((W, W), ("lru", None), scale=0.02),
+        "b_a": pm.spec((W,), ("lru",), init="zeros"),
+        "w_i": pm.spec((W, W), ("lru", None), scale=0.02),
+        "b_i": pm.spec((W,), ("lru",), init="zeros"),
+        "lambda": pm.spec((W,), ("lru",), init="constant", scale=1.0),
+        "w_out": pm.spec((W, d), ("lru", "fsdp")),
+    }
+
+
+def _layer_specs(cfg: ModelConfig, kind: str, L=None):
+    s = lambda shape, axes, **kw: pm.spec(  # noqa: E731
+        ((L,) + shape) if L else shape,
+        (("layers",) + axes) if L else axes, **kw)
+    norm = lambda: s((cfg.d_model,), (None,), init="zeros")  # noqa: E731
+    out = {"ln1": norm()}
+    if kind == "attn":
+        out["attn"] = _attn_specs(cfg, L)
+        if cfg.family == "moe":
+            out["moe"] = _moe_specs(cfg, L)
+        else:
+            out["mlp"] = _mlp_specs(cfg, L)
+        out["ln2"] = norm()
+    elif kind == "ssm":
+        out["ssm"] = _ssm_specs(cfg, L)
+    elif kind == "rec":
+        out["rec"] = _rec_specs(cfg)
+        out["mlp"] = _mlp_specs(cfg, None)
+        out["ln2"] = norm()
+    elif kind == "local_attn":
+        out["attn"] = _attn_specs(cfg, None)
+        out["mlp"] = _mlp_specs(cfg, None)
+        out["ln2"] = norm()
+    else:
+        raise ValueError(kind)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    tree = {
+        "embed": pm.spec((Vp, d), ("vocab", "fsdp"), scale=1.0),
+        "final_norm": pm.spec((d,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = pm.spec((d, Vp), ("fsdp", "vocab"))
+    if cfg.family == "hybrid":
+        pat = cfg.effective_pattern()
+        tree["layers"] = {
+            str(i): _layer_specs(cfg, "rec" if k == "rec" else "local_attn")
+            for i, k in enumerate(pat)
+        }
+    elif cfg.scan_layers:
+        kind = "ssm" if cfg.family == "ssm" else "attn"
+        tree["layers"] = _layer_specs(cfg, kind, cfg.n_layers)
+    else:
+        kind = "ssm" if cfg.family == "ssm" else "attn"
+        tree["layers"] = {str(i): _layer_specs(cfg, kind)
+                          for i in range(cfg.n_layers)}
+    return tree
+
+
+def pad_attention_params(params, cfg_plain: ModelConfig,
+                         cfg_padded: ModelConfig):
+    """Migrate a checkpoint to the head-padded layout — mathematically
+    exact: real q heads are permuted into group-aligned slots, padded q
+    slots get arbitrary weights (their wo rows are masked to zero at
+    apply time), kv heads are duplicated `kv_eff//K` times.
+    """
+    import numpy as np
+
+    H, K = cfg_plain.n_heads, cfg_plain.n_kv_heads
+    He, Ke = cfg_padded.heads_eff, cfg_padded.kv_eff
+    per_real, per_eff = H // K, He // K
+    q_slot = np.array([g * per_eff + r for g in range(K)
+                       for r in range(per_real)])   # real q head -> slot
+    # kv slot j serves q slots [j·G_eff, (j+1)·G_eff); those belong to real
+    # kv group (j·G_eff)//per_eff  (clipped: slots past the real range only
+    # serve wo-masked padded q heads)
+    g_eff = He // Ke
+    kv_src = np.array([min(j * g_eff // per_eff, K - 1) for j in range(Ke)])
+
+    def fix(tree):
+        if "attn" not in tree:
+            return tree
+        a = dict(tree["attn"])
+        stacked = np.asarray(a["wq"]).ndim == 4  # [L, D, H, hd]
+        ax = 2 if stacked else 1
+
+        def pad_q(w):
+            w = np.asarray(w, np.float32)
+            shape = list(w.shape)
+            shape[ax] = He
+            out = np.zeros(shape, w.dtype)
+            np.put_along_axis  # noqa: B018
+            idx = [slice(None)] * w.ndim
+            for h_real, slot in enumerate(q_slot):
+                idx[ax] = slot
+                src = [slice(None)] * w.ndim
+                src[ax] = h_real
+                out[tuple(idx)] = w[tuple(src)]
+            return out
+
+        def dup_kv(w):
+            w = np.asarray(w, np.float32)
+            return np.take(w, kv_src, axis=ax)
+
+        def pad_q_bias(b):  # [H, hd] or [L, H, hd]
+            b = np.asarray(b, np.float32)
+            axb = 1 if b.ndim == 3 else 0
+            shape = list(b.shape)
+            shape[axb] = He
+            out = np.zeros(shape, b.dtype)
+            for h_real, slot in enumerate(q_slot):
+                idx = [slice(None)] * b.ndim
+                idx[axb] = slot
+                src = [slice(None)] * b.ndim
+                src[axb] = h_real
+                out[tuple(idx)] = b[tuple(src)]
+            return out
+
+        def pad_wo(w):  # [H, hd, D] or [L, H, hd, D]
+            w = np.asarray(w, np.float32)
+            axo = 1 if w.ndim == 4 else 0
+            shape = list(w.shape)
+            shape[axo] = He
+            out = np.zeros(shape, w.dtype)
+            for h_real, slot in enumerate(q_slot):
+                idx = [slice(None)] * w.ndim
+                idx[axo] = slot
+                src = [slice(None)] * w.ndim
+                src[axo] = h_real
+                out[tuple(idx)] = w[tuple(src)]
+            return out
+
+        def dup_kv_bias(b):
+            b = np.asarray(b, np.float32)
+            axb = 1 if b.ndim == 3 else 0
+            return np.take(b, kv_src, axis=axb)
+
+        a["wq"] = jnp.asarray(pad_q(a["wq"]), jnp.dtype(cfg_padded.dtype))
+        a["wk"] = jnp.asarray(dup_kv(a["wk"]), jnp.dtype(cfg_padded.dtype))
+        a["wv"] = jnp.asarray(dup_kv(a["wv"]), jnp.dtype(cfg_padded.dtype))
+        a["wo"] = jnp.asarray(pad_wo(a["wo"]), jnp.dtype(cfg_padded.dtype))
+        if "bq" in a:
+            a["bq"] = jnp.asarray(pad_q_bias(a["bq"]),
+                                  jnp.dtype(cfg_padded.dtype))
+            a["bk"] = jnp.asarray(dup_kv_bias(a["bk"]),
+                                  jnp.dtype(cfg_padded.dtype))
+            a["bv"] = jnp.asarray(dup_kv_bias(a["bv"]),
+                                  jnp.dtype(cfg_padded.dtype))
+        return {**tree, "attn": a}
+
+    out = dict(params)
+    layers = params["layers"]
+    if isinstance(layers, dict) and "attn" in layers:       # scan-stacked
+        out["layers"] = fix(layers)
+    elif isinstance(layers, dict):                          # dict of layers
+        out["layers"] = {k: fix(v) for k, v in layers.items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(x, p, cfg, sin, cos, q_pos, kv_pos, *, window=None,
+                cache=None, cache_len=None):
+    """Returns (out, (new_k_slice, new_v_slice)) — cache slices when decoding."""
+    B, S, D = x.shape
+    wo = p["wo"]
+    if cfg.pad_heads and cfg.heads_eff != cfg.n_heads:
+        # exact head padding: zero-mask wo rows of padded q-head slots
+        mask = jnp.asarray(cfg.head_slot_mask(), wo.dtype)[:, None, None]
+        wo = wo * mask
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    if cache is None:
+        o = attention(q, k, v, q_pos, kv_pos, impl=cfg.attn_impl,
+                      window=window, softcap=cfg.attn_logit_softcap,
+                      chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache, write_idx = cache
+        k_cache = lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), write_idx, axis=1)
+        v_cache = lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), write_idx, axis=1)
+        o = attention_decode(q, k_cache, v_cache, cache_len,
+                             window=None,  # ring buffer handles windowing
+                             softcap=cfg.attn_logit_softcap)
+        new_kv = (k_cache, v_cache)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_kv
+
+
+def _mlp_block(x, p):
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "full":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "nothing": save only layer boundaries
+
+
+def _embed_in(params, cfg, batch):
+    if "embeds" in batch:
+        h = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        h = params["embed"][batch["tokens"]]
+    return h
+
+
+def forward(params, cfg: ModelConfig, batch, *, mesh=None):
+    """Full-sequence forward -> logits [B, S, padded_vocab]."""
+    h = _embed_in(params, cfg, batch)
+    B, S, D = h.shape
+    pos = jnp.arange(S)
+    sin, cos = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    if mesh is not None:
+        batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        ax = batch_ax[0] if len(batch_ax) == 1 else batch_ax
+        h = lax.with_sharding_constraint(h, jax.NamedSharding(mesh, P(ax, None, None)))
+
+    fam = cfg.family
+    if fam == "hybrid":
+        pat = cfg.effective_pattern()
+        for i, kind in enumerate(pat):
+            p = params["layers"][str(i)]
+
+            def layer(h, p=p, kind=kind):
+                if kind == "rec":
+                    mix, _ = recurrent_block(_norm(h, p["ln1"], cfg),
+                                             p["rec"], cfg)
+                else:
+                    mix, _ = _attn_block(_norm(h, p["ln1"], cfg),
+                                         p["attn"], cfg, sin, cos, pos, pos,
+                                         window=cfg.local_window)
+                h = h + mix
+                h = h + _mlp_block(_norm(h, p["ln2"], cfg), p["mlp"])
+                return h
+
+            h = _remat(layer, cfg)(h)
+    else:
+        def body(h, lp):
+            if fam == "ssm":
+                mix, _ = mamba_mixer(_norm(h, lp["ln1"], cfg),
+                                     lp["ssm"], cfg)
+                return h + mix, None
+            mix, _ = _attn_block(_norm(h, lp["ln1"], cfg),
+                                 lp["attn"], cfg, sin, cos, pos, pos,
+                                 window=cfg.local_window)
+            h = h + mix
+            x2 = _norm(h, lp["ln2"], cfg)
+            if cfg.family == "moe":
+                h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh)
+            else:
+                h = h + _mlp_block(x2, lp["mlp"])
+            return h, None
+        if cfg.scan_layers:
+            h, _ = lax.scan(_remat(body, cfg), h, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                lp = params["layers"][str(i)]
+                h = _remat(lambda hh, lp=lp: body(hh, lp)[0], cfg)(h)
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return logits
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
+    """Mean next-token cross-entropy via logsumexp.
+
+    Logits stay in the model dtype (bf16) — the fp32 cast happens inside
+    the reductions, so no [B,S,V] fp32 tensor is materialized (at 256k
+    vocab that tensor is the single largest temp in the step).  Padded
+    vocab columns are suppressed with an additive bias (fusable broadcast)
+    rather than a where() over the full logits.
+    """
+    logits = forward(params, cfg, batch, mesh=mesh)
+    labels = batch["labels"]
+    Vp = cfg.padded_vocab
+    if Vp != cfg.vocab:
+        pad_bias = jnp.where(jnp.arange(Vp) < cfg.vocab, 0.0, -1e30
+                             ).astype(logits.dtype)
+        logits = logits + pad_bias[None, None, :]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)   # [B,S]
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1
+                             )[..., 0].astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, max_len: int):
+    """ParamSpec tree for the decode cache (dry-run uses ShapeDtypeStructs)."""
+    B = batch_size
+    K, hd = cfg.kv_eff, cfg.head_dim
+    fam = cfg.family
+    if fam == "hybrid":
+        pat = cfg.effective_pattern()
+        W = cfg.lru_width or cfg.d_model
+        tree = {}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                tree[str(i)] = {
+                    "conv": pm.spec((B, cfg.ssm_conv - 1, W),
+                                    ("batch", None, "lru"), init="zeros",
+                                    dtype=cfg.dtype),
+                    "lru": pm.spec((B, W), ("batch", "lru"), init="zeros",
+                                   dtype="float32"),
+                }
+            else:
+                T = min(max_len, cfg.local_window or max_len)
+                kvdt = cfg.kv_cache_dtype or cfg.dtype
+                tree[str(i)] = {
+                    "k": pm.spec((B, T, K, hd),
+                                 ("batch", None, "kv_heads", "head_dim"),
+                                 init="zeros", dtype=kvdt),
+                    "v": pm.spec((B, T, K, hd),
+                                 ("batch", None, "kv_heads", "head_dim"),
+                                 init="zeros", dtype=kvdt),
+                }
+        return tree
+    if fam == "ssm":
+        L, di, N = cfg.n_layers, cfg.d_inner, cfg.ssm_state
+        return {
+            "conv": pm.spec((L, B, cfg.ssm_conv - 1, di),
+                            ("layers", "batch", None, "d_inner"),
+                            init="zeros", dtype=cfg.dtype),
+            "ssm_h": pm.spec((L, B, di, N),
+                             ("layers", "batch", "d_inner", "state"),
+                             init="zeros", dtype="float32"),
+        }
+    L = cfg.n_layers
+    kvdt = cfg.kv_cache_dtype or cfg.dtype
+    return {
+        "k": pm.spec((L, B, max_len, K, hd),
+                     ("layers", "batch", None, "kv_heads", "head_dim"),
+                     init="zeros", dtype=kvdt),
+        "v": pm.spec((L, B, max_len, K, hd),
+                     ("layers", "batch", None, "kv_heads", "head_dim"),
+                     init="zeros", dtype=kvdt),
+    }
+
+
+def init_cache(cfg, batch_size, max_len):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        cache_specs(cfg, batch_size, max_len), is_leaf=pm.is_spec)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len, *,
+                mesh=None):
+    """One decode step. tokens [B,1] int32; cur_len scalar int32 (uniform).
+
+    Returns (logits [B, padded_vocab], new_cache).
+    """
+    h = params["embed"][tokens]                      # [B,1,D]
+    B = h.shape[0]
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    sin, cos = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    cache_len = jnp.full((B,), cur_len + 1, jnp.int32)
+    fam = cfg.family
+
+    if fam == "hybrid":
+        pat = cfg.effective_pattern()
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            p = params["layers"][str(i)]
+            c = cache[str(i)]
+            if kind == "rec":
+                mix, (nconv, nlru) = recurrent_block(
+                    _norm(h, p["ln1"], cfg), p["rec"], cfg,
+                    conv_state=c["conv"], lru_state=c["lru"])
+                new_cache[str(i)] = {"conv": nconv, "lru": nlru}
+            else:
+                T = c["k"].shape[1]
+                write_idx = jnp.mod(cur_len, T)      # ring buffer (window)
+                eff_len = jnp.minimum(cache_len, T)
+                mix, (nk, nv) = _attn_block(
+                    _norm(h, p["ln1"], cfg), p["attn"], cfg,
+                    sin, cos, None, None,
+                    cache=(c["k"], c["v"], write_idx), cache_len=eff_len)
+                new_cache[str(i)] = {"k": nk, "v": nv}
+            h = h + mix
+            h = h + _mlp_block(_norm(h, p["ln2"], cfg), p["mlp"])
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, conv_c, ssm_c = inp
+            mix, (nconv, nh) = mamba_mixer(_norm(h, lp["ln1"], cfg),
+                                           lp["ssm"], cfg,
+                                           conv_state=conv_c, ssm_state=ssm_c)
+            return h + mix, (nconv, nh)
+        if cfg.scan_layers:
+            h, (nconv, nh) = lax.scan(body, h, (params["layers"],
+                                                cache["conv"], cache["ssm_h"]))
+        else:
+            convs, hs = [], []
+            for i in range(cfg.n_layers):
+                h, (nc_, nh_) = body(h, (params["layers"][str(i)],
+                                         cache["conv"][i], cache["ssm_h"][i]))
+                convs.append(nc_)
+                hs.append(nh_)
+            nconv, nh = jnp.stack(convs), jnp.stack(hs)
+        new_cache = {"conv": nconv, "ssm_h": nh}
+    else:
+        def body(h, inp):
+            lp, kc, vc = inp
+            mix, (nk, nv) = _attn_block(
+                _norm(h, lp["ln1"], cfg), lp["attn"], cfg,
+                sin, cos, None, None, cache=(kc, vc, cur_len),
+                cache_len=cache_len)
+            h = h + mix
+            x2 = _norm(h, lp["ln2"], cfg)
+            if cfg.family == "moe":
+                h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh)
+            else:
+                h = h + _mlp_block(x2, lp["mlp"])
+            return h, (nk, nv)
+        if cfg.scan_layers:
+            h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["k"],
+                                             cache["v"]))
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                h, (nk_, nv_) = body(h, (params["layers"][str(i)],
+                                         cache["k"][i], cache["v"][i]))
+                ks.append(nk_)
+                vs.append(nv_)
+            nk, nv = jnp.stack(ks), jnp.stack(vs)
+        new_cache = {"k": nk, "v": nv}
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+)
+from repro.optim.compress import (  # noqa: F401
+    compress_decompress,
+    compression_init,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,41 @@
+"""Int8 gradient compression with error feedback (DP all-reduce trick).
+
+At 1000+-node scale the cross-pod gradient all-reduce dominates step time
+for small models; int8 quantization cuts that payload 4× (vs fp32) / 2×
+(vs bf16).  Error feedback accumulates the quantization residual locally
+and re-injects it next step, keeping the long-run update unbiased
+(Seide et al. 2014; Karimireddy et al. 2019).
+
+Applied around the pod-axis reduction: compress -> all-reduce int8* ->
+decompress.  (*XLA reduces in the compute dtype; in deployment this runs
+inside a shard_map over the "pod" axis — see launch/train.py.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compression_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_dequant(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, error_state):
+    """Returns (dequantized grads, new error state)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        deq = _quant_dequant(g32)
+        return deq, g32 - deq
+    flat = jax.tree.map(one, grads, error_state)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err

@@ -1,0 +1,134 @@
+"""Three-term roofline from compiled dry-run artifacts (DESIGN.md §7).
+
+  compute    = HLO_FLOPs / (chips × peak)       [cost_analysis "flops"]
+  memory     = HLO_bytes / (chips × HBM_bw)     [cost_analysis "bytes accessed"]
+  collective = coll_bytes / (chips × links × bw)[parsed from HLO text]
+
+cost_analysis on a post-SPMD module reports *per-device* numbers on the CPU
+backend; we detect which convention the backend used by comparing against
+an analytic bound and normalize to per-chip.
+
+Collective bytes: sum of result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+per-device compiled module.  All-reduce counts 2× (ring = reduce-scatter +
+all-gather).  ICI: 4 usable links/chip on the 2-D torus.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # bytes/s
+    ici_bw: float = 50e9             # bytes/s per link
+    ici_links: int = 4               # usable links/chip (2-D torus)
+    vmem_bytes: float = 16e6 * 8     # ~128 MB v5e... (not used in terms)
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "f32[16,128]{1,0}" or "bf16[2,4,8]"  or tuple pieces
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes from a compiled (post-SPMD) module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result shape appears left of " = <shape> <op-name>(" in HLO text
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.+?) (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        out[kind] += _shape_bytes(result_type)
+        out["count"] += 1
+    return out
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], chips: int,
+                   hw: HW = HW(), mem_analysis: Optional[dict] = None
+                   ) -> dict:
+    """Three roofline terms.
+
+    compute:    probe-extrapolated HLO FLOPs (per chip) / peak.
+    memory:     per-chip HBM-resident traffic from the REAL compiled
+                executable's memory_analysis (arguments + outputs + temps —
+                each resident byte streams >= once per step).  The
+                fusion-less cost_analysis "bytes accessed" is reported as
+                `t_memory_upper_s` (every op's operands from HBM).
+    collective: per-chip collective payload (all-reduce 2× for RS+AG
+                phases) / (links × link_bw).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = (2 * coll.get("all-reduce", 0)
+                  + coll.get("all-gather", 0)
+                  + coll.get("reduce-scatter", 0)
+                  + coll.get("all-to-all", 0)
+                  + coll.get("collective-permute", 0))
+    if mem_analysis:
+        mem_bytes = sum(mem_analysis.get(k) or 0 for k in
+                        ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes"))
+        mem_bytes -= mem_analysis.get("alias_size_in_bytes") or 0  # donated
+    else:
+        mem_bytes = bytes_accessed
+    t_compute = flops / hw.peak_flops
+    t_memory = mem_bytes / hw.hbm_bw
+    t_coll = coll_bytes / (hw.ici_links * hw.ici_bw)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_upper_s": bytes_accessed / hw.hbm_bw,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_step_time_s": total,
+        "per_chip_flops": flops,
+        "per_chip_mem_bytes": mem_bytes,
+        "per_chip_bytes_accessed": bytes_accessed,
+        "per_chip_collective_bytes": coll_bytes,
+        "collective_counts": {k: v for k, v in coll.items()},
+    }
+
+
+def model_flops(cfg, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (fwd-only), N = active params."""
+    n = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

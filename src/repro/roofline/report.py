@@ -1,0 +1,128 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the cached
+dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "experiments", "dryrun")
+
+
+def load(mesh_kind: str):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(DRYRUN, mesh_kind, "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "—"
+    return f"{b/2**30:.2f}"
+
+
+def mfu(rec) -> float | None:
+    """model-FLOPs utilisation at the roofline bound: what fraction of the
+    chips' peak the USEFUL (6·N·D) flops would occupy if the step ran at
+    the bound time."""
+    rl = rec.get("roofline")
+    if not rl or not rec.get("model_flops_total"):
+        return None
+    bound = rl["bound_step_time_s"]
+    chips = rec["n_chips"]
+    if bound <= 0:
+        return None
+    return rec["model_flops_total"] / (chips * 197e12 * bound)
+
+
+def dryrun_table(mesh_kind: str) -> str:
+    rows = ["| arch | shape | status | HBM/chip args+temps (GiB) | "
+            "compile (s) | collectives (per-chip GiB) |",
+            "|---|---|---|---|---|---|"]
+    for (arch, shape), r in load(mesh_kind).items():
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | SKIP (documented) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | **ERROR** | — | — | — |")
+            continue
+        m = r["memory_analysis"]
+        resident = (m["argument_size_in_bytes"] or 0) + \
+                   (m["temp_size_in_bytes"] or 0)
+        coll = r.get("extrapolated", r.get("raw_cost", {})).get("coll", {})
+        cb = sum(v for k, v in coll.items() if k != "count")
+        rows.append(
+            f"| {arch} | {shape} | ok | {fmt_bytes(resident)} | "
+            f"{r.get('compile_s', 0):.0f} | {cb/2**30:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "dominant | bound (s) | MODEL/HLO flops | MFU@bound |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in load("pod").items():
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        m = mfu(r)
+        rows.append(
+            f"| {arch} | {shape} | {rl['t_compute_s']:.4f} | "
+            f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
+            f"**{rl['dominant']}** | {rl['bound_step_time_s']:.4f} | "
+            f"{u:.3f} | {m*100:.1f}% |" if u is not None else
+            f"| {arch} | {shape} | — |")
+    return "\n".join(rows)
+
+
+def variants_table() -> str:
+    """Baseline vs optimized (-opt) vs STUN-pruned (-stun) bound times."""
+    base = load("pod")
+    opt = load("pod-opt")
+    stun = load("pod-stun")
+    rows = ["| arch | shape | baseline bound (s) | opt bound (s) | "
+            "stun bound (s) | best speedup |", "|---|---|---|---|---|---|"]
+    for key, b in base.items():
+        if b["status"] != "ok":
+            continue
+        cands = {}
+        for name, d in (("opt", opt), ("stun", stun)):
+            r = d.get(key)
+            if r and r.get("status") == "ok":
+                cands[name] = r["roofline"]["bound_step_time_s"]
+        if not cands:
+            continue
+        b0 = b["roofline"]["bound_step_time_s"]
+        best = min(cands.values())
+        rows.append(
+            f"| {key[0]} | {key[1]} | {b0:.4f} | "
+            f"{cands.get('opt', float('nan')):.4f} | "
+            + (f"{cands['stun']:.4f} | " if "stun" in cands else "— | ")
+            + (f"**{b0/best:.2f}×** |" if best > 0 else "— |"))
+    return "\n".join(rows)
+
+
+def main():
+    print("## §Dry-run — single pod (16×16 = 256 chips)\n")
+    print(dryrun_table("pod"))
+    print("\n## §Dry-run — multi-pod (2×16×16 = 512 chips)\n")
+    print(dryrun_table("multipod"))
+    print("\n## §Roofline (single-pod)\n")
+    print(roofline_table())
+    vt = variants_table()
+    if vt.count("\n") > 1:
+        print("\n## §Roofline — optimized variants (measured cells)\n")
+        print(vt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.runtime.train_loop import TrainLoopConfig, train_loop  # noqa: F401
+from repro.runtime.step import make_train_step  # noqa: F401

@@ -1,0 +1,59 @@
+"""Jitted train/eval/serve step builders with explicit shardings."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, total_steps: int = 10_000,
+                    warmup: int = 100, mesh=None, compress: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    When `compress` is on, int8 error-feedback compression wraps the
+    gradients before the optimizer (the DP-reduce payload analogue; see
+    optim/compress.py).  The error buffer lives in opt_state["err"].
+    """
+    from repro.optim.compress import compress_decompress
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, mesh=mesh))(params)
+        # pin the DP gradient all-reduce to the gradient dtype (bf16): the
+        # optimizer's astype(f32) would otherwise be hoisted into the psum
+        # by XLA's excess-precision pass, doubling the dominant collective
+        # payload (deepseek-67b: measured 2x — EXPERIMENTS.md §Perf)
+        grads = jax.lax.optimization_barrier(grads)
+        if compress:
+            grads, err = compress_decompress(grads, opt_state["err"])
+        lr_scale = cosine_schedule(opt_state["adam"]["step"], total_steps,
+                                   warmup)
+        new_params, new_adam, om = adamw_update(params, grads,
+                                                opt_state["adam"], opt_cfg,
+                                                lr_scale)
+        new_opt = {"adam": new_adam}
+        if compress:
+            new_opt["err"] = err
+        elif "err" in opt_state:
+            new_opt["err"] = opt_state["err"]
+        metrics = {"loss": loss, **om}
+        # NaN guard: skip the update if loss or grads went non-finite
+        ok = jnp.isfinite(loss) & jnp.isfinite(om["grad_norm"])
+        new_params = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_params, params)
+        metrics["skipped_nonfinite"] = (~ok).astype(jnp.int32)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, mesh=None):
+    @jax.jit
+    def eval_step(params, batch):
+        return loss_fn(params, cfg, batch, mesh=mesh)
+    return eval_step

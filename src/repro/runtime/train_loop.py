@@ -1,0 +1,117 @@
+"""Fault-tolerant training loop (DESIGN.md §8).
+
+Scale features exercised here and relied on at 1000+ nodes:
+  * checkpoint every K steps (async writer, atomic publish, keep-last-k);
+  * restore-on-start, tolerant of a different mesh (elastic restart: the
+    checkpoint stores numpy, `device_put` re-shards onto the live mesh);
+  * per-step retry on transient XlaRuntimeError (flaky host / preempted
+    core), NaN-loss skip (inside the jitted step), straggler watchdog
+    (steps exceeding `deadline × median` are logged and counted — the
+    multi-host deployment hooks a reschedule here);
+  * SIGTERM -> synchronous final checkpoint (preemption grace window).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    max_step_retries: int = 3
+    straggler_deadline: float = 3.0     # × median step time
+    warmup_steps: int = 10
+    compress_grads: bool = False
+
+
+def train_loop(cfg, params, batches: Iterator, loop_cfg: TrainLoopConfig,
+               opt_cfg: AdamWConfig = AdamWConfig(), mesh=None,
+               log_fn: Callable = print):
+    """Runs the loop; returns (params, opt_state, history)."""
+    opt_state = {"adam": adamw_init(params)}
+    if loop_cfg.compress_grads:
+        from repro.optim.compress import compression_init
+        opt_state["err"] = compression_init(params)
+
+    start = 0
+    ckpt = None
+    if loop_cfg.checkpoint_dir:
+        ckpt = AsyncCheckpointer(loop_cfg.checkpoint_dir)
+        if latest_step(loop_cfg.checkpoint_dir) is not None:
+            start, tree = restore_checkpoint(loop_cfg.checkpoint_dir)
+            params = jax.tree.map(
+                lambda old, new: jax.numpy.asarray(new, old.dtype),
+                params, tree["params"])
+            opt_state = jax.tree.map(jax.numpy.asarray, tree["opt"])
+            opt_state["adam"]["step"] = jax.numpy.asarray(
+                tree["opt"]["adam"]["step"])
+            log_fn(f"[restore] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, loop_cfg.total_steps,
+                                      loop_cfg.warmup_steps, mesh=mesh,
+                                      compress=loop_cfg.compress_grads))
+
+    # preemption: first SIGTERM triggers a final checkpoint + clean exit
+    preempted = {"flag": False}
+
+    def _sigterm(signum, frame):
+        preempted["flag"] = True
+    old_handler = signal.signal(signal.SIGTERM, _sigterm)
+
+    history = []
+    step_times = []
+    stragglers = 0
+    try:
+        for step in range(start, loop_cfg.total_steps):
+            batch = next(batches)
+            t0 = time.monotonic()
+            for attempt in range(loop_cfg.max_step_retries):
+                try:
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    break
+                except jax.errors.JaxRuntimeError as e:  # transient failure
+                    log_fn(f"[retry] step {step} attempt {attempt}: {e}")
+                    if attempt == loop_cfg.max_step_retries - 1:
+                        raise
+            dt = time.monotonic() - t0
+            step_times.append(dt)
+            med = float(np.median(step_times[-50:]))
+            if len(step_times) > 5 and dt > loop_cfg.straggler_deadline * med:
+                stragglers += 1
+                log_fn(f"[straggler] step {step} took {dt:.3f}s "
+                       f"(median {med:.3f}s)")
+            history.append({"step": step, **metrics, "time": dt})
+            if step % loop_cfg.log_every == 0:
+                log_fn(f"step {step}: loss={metrics['loss']:.4f} "
+                       f"gnorm={metrics['grad_norm']:.3f} {dt*1e3:.1f}ms")
+            if ckpt and (step + 1) % loop_cfg.checkpoint_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state})
+            if preempted["flag"]:
+                log_fn(f"[preempt] SIGTERM at step {step}; checkpointing")
+                break
+        if ckpt and history:
+            ckpt.wait()
+            final_step = history[-1]["step"] + 1
+            if latest_step(loop_cfg.checkpoint_dir) != final_step:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(loop_cfg.checkpoint_dir, final_step,
+                                {"params": jax.tree.map(np.asarray, params),
+                                 "opt": jax.tree.map(np.asarray, opt_state)})
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+    return params, opt_state, {"history": history, "stragglers": stragglers}

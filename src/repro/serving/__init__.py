@@ -1,0 +1,5 @@
+from repro.serving.engine import (  # noqa: F401
+    Request,
+    ServeEngine,
+    greedy_generate,
+)

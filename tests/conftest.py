@@ -1,0 +1,10 @@
+import os
+
+# smoke tests and benches must see exactly ONE device — never set the
+# 512-device flag here (that is launch/dryrun.py's job, in its own process)
+assert "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must not run under the dry-run XLA_FLAGS"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

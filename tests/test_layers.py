@@ -1,0 +1,102 @@
+"""Attention / norm / rope / recurrence correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.models.layers import (apply_rope, attention_chunked,
+                                 attention_decode, attention_naive, rmsnorm,
+                                 rope_tables)
+from repro.models.ssm import causal_conv1d, linear_recurrence_chunked
+
+RNG = random.PRNGKey(0)
+
+
+def _qkv(B=2, S=64, H=8, K=2, hd=16):
+    q = random.normal(RNG, (B, S, H, hd), jnp.float32)
+    k = random.normal(random.fold_in(RNG, 1), (B, S, K, hd), jnp.float32)
+    v = random.normal(random.fold_in(RNG, 2), (B, S, K, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("window", [None, 12])
+def test_chunked_matches_naive(chunk, window):
+    q, k, v = _qkv()
+    pos = jnp.arange(64)
+    o1 = attention_naive(q, k, v, pos, pos, window=window)
+    o2 = attention_chunked(q, k, v, pos, pos, window=window, chunk=chunk)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+def test_chunked_unroll_matches_scan():
+    q, k, v = _qkv()
+    pos = jnp.arange(64)
+    o1 = attention_chunked(q, k, v, pos, pos, chunk=16, unroll=False)
+    o2 = attention_chunked(q, k, v, pos, pos, chunk=16, unroll=True)
+    np.testing.assert_allclose(o1, o2, atol=1e-6)
+
+
+def test_decode_matches_naive_rows():
+    q, k, v = _qkv()
+    B, S = 2, 64
+    full = attention_naive(q, k, v, jnp.arange(S), jnp.arange(S))
+    kc = jnp.zeros_like(k)
+    vc = jnp.zeros_like(v)
+    for t in range(6):
+        kc = kc.at[:, t].set(k[:, t])
+        vc = vc.at[:, t].set(v[:, t])
+        o = attention_decode(q[:, t: t + 1], kc, vc, jnp.full((B,), t + 1))
+        np.testing.assert_allclose(o[:, 0], full[:, t], atol=1e-5)
+
+
+def test_softmax_rows_sum_to_one_property():
+    # fully-masked rows guard: row 0 attends only to itself
+    q, k, v = _qkv(S=8)
+    o = attention_chunked(q, k, v, jnp.arange(8), jnp.arange(8), chunk=4)
+    np.testing.assert_allclose(o[:, 0], v[:, 0].repeat(4, axis=1), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = random.normal(RNG, (2, 16, 4, 32), jnp.float32)
+    sin, cos = rope_tables(jnp.arange(16), 32, 10000.0)
+    y = apply_rope(x, sin, cos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # position 0 is identity
+    np.testing.assert_allclose(y[:, 0], x[:, 0], atol=1e-6)
+
+
+def test_rmsnorm_unit_scale():
+    x = random.normal(RNG, (4, 64), jnp.float32) * 10
+    y = rmsnorm(x, jnp.zeros(64))
+    rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_causal_conv1d_matches_numpy():
+    x = random.normal(RNG, (2, 16, 8), jnp.float32)
+    w = random.normal(random.fold_in(RNG, 3), (8, 4), jnp.float32)
+    b = jnp.zeros(8)
+    y, state = causal_conv1d(x, w, b)
+    xp = np.pad(np.asarray(x), ((0, 0), (3, 0), (0, 0)))
+    want = sum(xp[:, i: i + 16] * np.asarray(w)[:, i] for i in range(4))
+    np.testing.assert_allclose(y, want, atol=1e-5)
+    np.testing.assert_allclose(state, x[:, -3:], atol=0)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+@pytest.mark.parametrize("unroll", [False, True])
+def test_linear_recurrence(chunk, unroll):
+    B, S, W = 2, 32, 8
+    a = jax.nn.sigmoid(random.normal(RNG, (B, S, W)))
+    b = random.normal(random.fold_in(RNG, 5), (B, S, W))
+    h, h_last = linear_recurrence_chunked(a, b, jnp.zeros((B, W)), chunk,
+                                          unroll=unroll)
+    # sequential oracle
+    hh = np.zeros((B, W))
+    for t in range(S):
+        hh = np.asarray(a[:, t]) * hh + np.asarray(b[:, t])
+        np.testing.assert_allclose(h[:, t], hh, atol=1e-5)
+    np.testing.assert_allclose(h_last, hh, atol=1e-5)

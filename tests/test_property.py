@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import agglomerative_to_count
+from repro.core.robustness import kurtosis
+from repro.core.similarity import coactivation_counts, router_distance
+from repro.core.unstructured import mask_per_output, nm_rounding
+from repro.models.ssm import linear_recurrence_chunked
+from repro.optim.compress import compress_decompress, compression_init
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 16), st.integers(1, 16), st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_clustering_is_partition(E, n_keep_raw, seed):
+    n_keep = min(n_keep_raw, E)
+    W = np.random.RandomState(seed).randn(E, 8)
+    labels = agglomerative_to_count(router_distance(W), n_keep)
+    assert labels.shape == (E,)
+    assert labels.min() == 0
+    assert labels.max() + 1 == n_keep
+    assert set(labels.tolist()) == set(range(n_keep))
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_clustering_permutation_equivariant(seed):
+    rs = np.random.RandomState(seed)
+    W = rs.randn(8, 8)
+    perm = rs.permutation(8)
+    l1 = agglomerative_to_count(router_distance(W), 3)
+    l2 = agglomerative_to_count(router_distance(W[perm]), 3)
+    # partitions must match under the permutation
+    part1 = {frozenset(np.where(l1 == c)[0].tolist()) for c in range(3)}
+    part2 = {frozenset(perm[np.where(l2 == c)[0]].tolist()) for c in range(3)}
+    assert part1 == part2
+
+
+@given(st.integers(1, 64), st.integers(1, 8),
+       st.floats(0.0, 0.95), st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_mask_sparsity_invariant(K, N, sparsity, seed):
+    s = np.random.RandomState(seed).rand(K, N).astype(np.float32)
+    m = mask_per_output(s, sparsity, 0)
+    want_pruned = int(np.floor(sparsity * K))
+    assert ((~m).sum(axis=0) == want_pruned).all()
+
+
+@given(st.integers(4, 64), st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_nm_never_exceeds_n_per_group(K, seed):
+    s = np.random.RandomState(seed).rand(K, 4).astype(np.float32)
+    m = nm_rounding(s, in_axis=0, n=2, m=4)
+    pad = (-K) % 4
+    grp = np.pad(m, ((0, pad), (0, 0))).reshape(-1, 4, 4)
+    assert (grp.sum(axis=1) <= 2).all()
+
+
+@given(st.integers(10, 1000), st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_kurtosis_gaussian_near_3(n, seed):
+    x = np.random.RandomState(seed).randn(n * 100)
+    k = kurtosis(x)
+    assert 2.0 < k < 4.5
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_kurtosis_zero_exclusion(seed):
+    x = np.random.RandomState(seed).randn(5000)
+    mask = np.abs(x) > np.quantile(np.abs(x), 0.5)
+    pruned = x * mask
+    # surviving weights are bimodal -> kurtosis below gaussian
+    assert kurtosis(pruned, exclude_zeros=True) < kurtosis(x)
+
+
+@given(st.integers(1, 6), st.integers(2, 8), st.integers(0, 10 ** 6))
+@settings(**SETTINGS)
+def test_coactivation_symmetry_and_bounds(T, k_raw, seed):
+    E = 8
+    k = min(k_raw, E)
+    rs = np.random.RandomState(seed)
+    top = np.stack([rs.choice(E, k, replace=False) for _ in range(T)])
+    a = coactivation_counts(top, E)
+    assert np.allclose(a, a.T)
+    assert (np.diag(a) == 0).all()
+    assert a.max() <= T
+
+
+@given(st.integers(2, 64), st.integers(1, 4), st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_linear_recurrence_matches_sequential(S, B, seed):
+    rs = np.random.RandomState(seed)
+    a = 1 / (1 + np.exp(-rs.randn(B, S, 4).astype(np.float32)))
+    b = rs.randn(B, S, 4).astype(np.float32)
+    chunk = max(1, S // 3)
+    h, _ = linear_recurrence_chunked(jnp.asarray(a), jnp.asarray(b),
+                                     jnp.zeros((B, 4)), chunk)
+    hh = np.zeros((B, 4), np.float32)
+    for t in range(S):
+        hh = a[:, t] * hh + b[:, t]
+    np.testing.assert_allclose(np.asarray(h[:, -1]), hh, atol=1e-4)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_compression_error_feedback_converges(seed):
+    """Long-run sum of dequantized grads tracks the true sum (unbiasedness
+    via error feedback)."""
+    rs = np.random.RandomState(seed)
+    g_true = jnp.asarray(rs.randn(32).astype(np.float32))
+    err = {"w": jnp.zeros(32)}
+    total = jnp.zeros(32)
+    for _ in range(20):
+        deq, err_new = compress_decompress({"w": g_true}, err)
+        err = err_new
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total / 20), np.asarray(g_true),
+                               atol=0.05)

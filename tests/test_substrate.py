@@ -1,0 +1,161 @@
+"""Data pipeline, checkpointing, optimizer, sharding rules."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.configs import get_config, reduced
+from repro.data.synthetic import SyntheticLM, batch_iterator, make_batch
+from repro.distributed.sharding import logical_to_spec
+from repro.optim import AdamWConfig, adamw_init, adamw_update, global_norm
+
+
+# ---------------- data ----------------
+
+def test_data_deterministic_and_resumable():
+    lm = SyntheticLM(vocab=64, seed=3)
+    b1 = make_batch(lm, 2, 16, step=5)
+    b2 = make_batch(SyntheticLM(vocab=64, seed=3), 2, 16, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_steps_differ():
+    lm = SyntheticLM(vocab=64, seed=3)
+    assert not np.array_equal(make_batch(lm, 2, 16, 0)["tokens"],
+                              make_batch(lm, 2, 16, 1)["tokens"])
+
+
+def test_markov_structure_learnable_signal():
+    """Markov successors restrict the next-token support (vs uniform)."""
+    lm = SyntheticLM(vocab=256, seed=0, mix=1.0)
+    toks = lm.sample(4, 512, 0)
+    ok = 0
+    for b in range(4):
+        for t in range(511):
+            if toks[b, t + 1] in lm.successors[toks[b, t]]:
+                ok += 1
+    assert ok / (4 * 511) > 0.95
+
+
+def test_frontend_stub_batches():
+    cfg = reduced(get_config("musicgen-medium"))
+    lm = SyntheticLM(vocab=cfg.vocab, seed=1)
+    b = make_batch(lm, 2, 8, 0, d_model=cfg.d_model, frontend_stub=True)
+    assert b["embeds"].shape == (2, 8, cfg.d_model)
+    assert b["embeds"].dtype == jnp.bfloat16
+
+
+# ---------------- checkpoint ----------------
+
+def _tree():
+    import ml_dtypes
+    return {"params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                       "b": np.ones(3, ml_dtypes.bfloat16)},
+            "opt": {"step": np.int32(7)}}
+
+
+def test_checkpoint_roundtrip_dtypes():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, _tree())
+        step, tree = restore_checkpoint(d)
+        assert step == 3
+        np.testing.assert_array_equal(tree["params"]["w"],
+                                      _tree()["params"]["w"])
+        assert tree["params"]["b"].dtype == np.dtype("bfloat16")
+        assert tree["opt"]["step"] == 7
+
+
+def test_checkpoint_keep_last_k():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            save_checkpoint(d, s, _tree(), keep=3)
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+        assert steps == [3, 4, 5]
+        assert latest_step(d) == 5
+
+
+def test_checkpoint_ignores_partial_tmp():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        os.makedirs(os.path.join(d, "step_00000009.tmp"))  # crashed writer
+        assert latest_step(d) == 1
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d)
+        ck.save(4, _tree())
+        ck.wait()
+        assert latest_step(d) == 4
+
+
+def test_restore_overwrite_same_step():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 2, _tree())
+        _, tree = restore_checkpoint(d, 2)
+        assert "params" in tree
+
+
+# ---------------- optimizer ----------------
+
+def test_adamw_descends_quadratic():
+    p = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(p)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, opt, _ = adamw_update(p, g, opt, cfg)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.2
+
+
+def test_adamw_clip():
+    p = {"w": jnp.zeros(4)}
+    opt = adamw_init(p)
+    g = {"w": jnp.full(4, 1e6)}
+    _, _, m = adamw_update(p, g, opt, AdamWConfig(clip_norm=1.0))
+    assert m["grad_norm"] > 1e5  # reported pre-clip
+
+
+def test_global_norm():
+    t = {"a": jnp.ones(4), "b": jnp.ones(9)}
+    np.testing.assert_allclose(float(global_norm(t)), np.sqrt(13.0),
+                               rtol=1e-6)
+
+
+# ---------------- sharding rules ----------------
+
+class _FakeMesh:
+    def __init__(self, axes):
+        self.axis_names = tuple(axes)
+        import numpy as _np
+        self.devices = _np.empty(tuple(axes.values()))
+
+    @property
+    def shape(self):
+        return dict(zip(self.axis_names, self.devices.shape))
+
+
+def test_divisibility_fallback():
+    import jax
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+    # with 1-sized axes everything divides; use rule resolution directly
+    spec = logical_to_spec(("fsdp", "heads", "head_dim"), (64, 28, 128), mesh)
+    assert len(spec) == 3
+
+
+def test_sharding_spec_no_duplicate_axes():
+    import jax
+    mesh = jax.make_mesh((1,), ("model",), devices=jax.devices()[:1])
+    # vocab and mlp both want "model": second must fall back to None
+    spec = logical_to_spec(("vocab", "mlp"), (512, 512), mesh)
+    flat = [s for s in spec if s is not None]
+    assert len(set(flat)) == len(flat)

