@@ -1,0 +1,17 @@
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench bench-serving example-serve
+
+# tier-1 verification (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) benchmarks/run.py
+
+bench-serving:
+	$(PY) benchmarks/run.py serving
+
+example-serve:
+	$(PY) examples/serve_pruned.py

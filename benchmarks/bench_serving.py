@@ -1,0 +1,118 @@
+"""Serving benchmark: chunked prefill vs the seed token-by-token engine,
+and dense vs STUN-pruned continuous-batching throughput.
+
+Measures, on the mixtral proxy (reduced to CPU scale):
+
+  * prefill dispatch count + wall time at S=128 — the seed engine replayed
+    prompts through the jitted decode step (S dispatches); the rebuilt
+    engine issues one jitted call per ``prefill_chunk`` tokens, so the
+    dispatch count is independent of the token count per dispatch.
+  * end-to-end serving tokens/s and p50/p95 request latency for the dense
+    model vs the same model with 25% of experts pruned at runtime
+    (``expert_mask``) — STUN's serving payoff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.models import abstract_params, decode_step, init_cache
+from repro.models import param as pm
+from repro.serving import Request, ServeEngine
+
+S_PROMPT = 128
+PREFILL_CHUNK = 32
+
+
+def _proxy_cfg():
+    cfg = reduced(get_config("mixtral-8x7b-proxy"), n_layers=2,
+                  n_experts=8, top_k=2)
+    return dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                               remat_policy="full")
+
+
+def _params(cfg):
+    p = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(0))
+    return jax.tree.map(lambda x: x.astype(jnp.float32), p)
+
+
+def _seed_style_prefill(params, cfg, toks, max_len):
+    """The seed engine's prefill: one jitted decode dispatch per token."""
+    step = jax.jit(lambda p, c, t, n: decode_step(p, cfg, c, t, n))
+    cache = init_cache(cfg, 1, max_len)
+    logits = None
+    for t in range(toks.shape[1]):
+        logits, cache = step(params, cache, toks[:, t: t + 1], jnp.int32(t))
+    jax.block_until_ready(logits)
+    return toks.shape[1]  # dispatches
+
+
+def bench_prefill(params, cfg):
+    max_len = S_PROMPT + 16
+    rs = np.random.RandomState(0)
+    toks = jnp.asarray(rs.randint(0, cfg.vocab, (1, S_PROMPT)), jnp.int32)
+
+    _seed_style_prefill(params, cfg, toks, max_len)          # compile
+    t0 = time.monotonic()
+    seed_dispatches = _seed_style_prefill(params, cfg, toks, max_len)
+    dt_seed = time.monotonic() - t0
+
+    eng = ServeEngine(params, cfg, max_len=max_len, max_batch=1,
+                      prefill_chunk=PREFILL_CHUNK)
+    prompt = np.asarray(toks[0])
+    eng.generate([Request(prompt, 1)])                       # compile
+    eng.reset_stats()
+    t0 = time.monotonic()
+    eng.generate([Request(prompt, 1)])
+    dt_chunked = time.monotonic() - t0
+    chunked_dispatches = eng.prefill_dispatches
+
+    emit(f"serve_prefill_seed_S{S_PROMPT}", dt_seed * 1e6,
+         f"dispatches={seed_dispatches}")
+    emit(f"serve_prefill_chunked_S{S_PROMPT}", dt_chunked * 1e6,
+         f"dispatches={chunked_dispatches} chunk={PREFILL_CHUNK} "
+         f"speedup={dt_seed / dt_chunked:.1f}x")
+    assert chunked_dispatches == S_PROMPT // PREFILL_CHUNK
+    return dt_seed / dt_chunked
+
+
+def bench_serving(params, cfg, expert_mask=None, tag="dense"):
+    rs = np.random.RandomState(1)
+    lens = rs.randint(8, 48, size=12)
+    news = rs.randint(4, 16, size=12)
+    reqs = [Request(rs.randint(0, cfg.vocab, l).astype(np.int32), int(n))
+            for l, n in zip(lens, news)]
+    eng = ServeEngine(params, cfg, max_len=80, max_batch=4,
+                      prefill_chunk=16, expert_mask=expert_mask)
+    eng.generate(reqs)                                       # compile
+    eng.reset_stats()
+    t0 = time.monotonic()
+    outs = eng.generate(reqs)
+    dt = time.monotonic() - t0
+    n_tok = sum(len(o) for o in outs)
+    stats = eng.latency_stats()
+    emit(f"serve_{tag}", dt * 1e6,
+         f"tok/s={n_tok / dt:.1f} p50={stats['p50_latency_s'] * 1e3:.0f}ms "
+         f"p95={stats['p95_latency_s'] * 1e3:.0f}ms")
+    return n_tok / dt
+
+
+def main():
+    cfg = _proxy_cfg()
+    params = _params(cfg)
+    speedup = bench_prefill(params, cfg)
+    bench_serving(params, cfg, tag="dense")
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-cfg.n_experts // 4:] = 0.0                         # 25% pruned
+    bench_serving(params, cfg, expert_mask=mask, tag="stun_pruned_25pct")
+    emit("serve_prefill_speedup", 0.0, f"{speedup:.1f}x (target >=5x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   kurtosis — §5 robustness probe
   scaling  — O(1) cost claim vs n experts (footnote 2)
   kernels  — kernel micro-benchmarks (jnp ref path on CPU)
+  serving  — chunked prefill vs seed engine; dense vs pruned serving
 """
 from __future__ import annotations
 
@@ -16,8 +17,8 @@ import sys
 import traceback
 
 from benchmarks import (bench_fig1, bench_fig2, bench_kernels,
-                        bench_kurtosis, bench_scaling, bench_table1,
-                        bench_table2, bench_table3)
+                        bench_kurtosis, bench_scaling, bench_serving,
+                        bench_table1, bench_table2, bench_table3)
 
 ALL = {
     "table1": bench_table1.main,
@@ -28,6 +29,7 @@ ALL = {
     "kurtosis": bench_kurtosis.main,
     "scaling": bench_scaling.main,
     "kernels": bench_kernels.main,
+    "serving": bench_serving.main,
 }
 
 

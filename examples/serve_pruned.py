@@ -4,9 +4,31 @@ STUN-pruned MoE — the paper's serving-cost story in one script.
     PYTHONPATH=src python examples/serve_pruned.py
 
 Trains a tiny MoE, prunes with STUN, serves a batch of requests through
-the engine (prefill + greedy decode) with both checkpoints and reports
-tokens/s, parameter bytes resident, and expert-weight bytes (the MoE
-serving bottleneck the paper targets).
+the engine with both checkpoints and reports tokens/s, parameter bytes
+resident, and expert-weight bytes (the MoE serving bottleneck the paper
+targets).
+
+Engine API (repro.serving)
+--------------------------
+``ServeEngine(params, cfg, max_len=, max_batch=, prefill_chunk=,
+expert_mask=, weight_masks=, seed=)`` is a continuous-batching engine:
+
+  * ``submit(Request(prompt, max_new_tokens, eos_id=, temperature=))``
+    queues a request and returns its id; ``run()`` drains the queue;
+    ``generate([...])`` is the submit+run+collect convenience wrapper.
+  * Prompts are prefilled in fixed-size chunks — one jitted dispatch per
+    ``prefill_chunk`` tokens (NOT per token), writing K/V straight into
+    the request's cache slot with padded positions masked out.
+  * Decode is one jitted call per step for *all* in-flight requests
+    (slot-based KV cache, per-request lengths); each request stops at its
+    own EOS / ``max_new_tokens`` and its slot is immediately re-used by
+    the next queued request.
+  * Pruned serving: pass the compacted STUN checkpoint directly, or keep
+    the full checkpoint and pass ``expert_mask`` ([E] or [L, E]) /
+    ``weight_masks`` (stage-2 masks from ``sparsify_model``) to apply
+    pruning at runtime.
+  * ``latency_stats()`` reports per-request p50/p95 full-request and
+    first-token latencies.
 """
 import dataclasses
 import time
@@ -36,7 +58,8 @@ def expert_bytes(params):
 
 
 def serve_and_time(params, cfg, requests, max_len=96):
-    eng = ServeEngine(params, cfg, max_len=max_len)
+    eng = ServeEngine(params, cfg, max_len=max_len,
+                      max_batch=len(requests), prefill_chunk=16)
     out = eng.generate(requests)      # includes compile
     t0 = time.monotonic()
     out = eng.generate(requests)

@@ -23,7 +23,31 @@ import jax.numpy as jnp
 import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # zstd is an optional dependency; shards fall back to raw bytes
+    import zstandard as zstd
+    HAVE_ZSTD = True
+except ImportError:  # pragma: no cover - environment-dependent
+    zstd = None
+    HAVE_ZSTD = False
+
+
+def _encode_shard(raw: bytes) -> Tuple[str, bytes]:
+    if HAVE_ZSTD:
+        return "zstd", zstd.ZstdCompressor(level=3).compress(raw)
+    return "raw", raw
+
+
+def _decode_shard(codec: str, blob: bytes) -> bytes:
+    if codec == "raw":
+        return blob
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "checkpoint shard is zstd-compressed but the 'zstandard' "
+                "module is not installed; `pip install zstandard` to restore")
+        return zstd.ZstdDecompressor().decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree, prefix=()):
@@ -56,7 +80,6 @@ def save_checkpoint(directory: str, step: int, tree: Any,
 
     leaves = list(_flatten(tree))
     manifest = []
-    cctx = zstd.ZstdCompressor(level=3)
     buf = io.BytesIO()
     offset = 0
     for path, leaf in leaves:
@@ -67,10 +90,12 @@ def save_checkpoint(directory: str, step: int, tree: Any,
                          "nbytes": len(raw), "host": host_id})
         buf.write(raw)
         offset += len(raw)
+    codec, blob = _encode_shard(buf.getvalue())
     with open(os.path.join(tmp, f"shard_{host_id}.bin"), "wb") as f:
-        f.write(cctx.compress(buf.getvalue()))
+        f.write(blob)
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb({"step": step, "leaves": manifest}))
+        f.write(msgpack.packb({"step": step, "codec": codec,
+                               "leaves": manifest}))
     # atomic publish
     for fname in os.listdir(tmp):
         fd = os.open(os.path.join(tmp, fname), os.O_RDONLY)
@@ -108,13 +133,13 @@ def restore_checkpoint(directory: str, step: Optional[int] = None,
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")  # pre-codec manifests were zstd
     blobs = {}
     for entry in manifest["leaves"]:
         h = entry["host"]
         if h not in blobs:
             with open(os.path.join(d, f"shard_{h}.bin"), "rb") as f:
-                blobs[h] = dctx.decompress(f.read())
+                blobs[h] = _decode_shard(codec, f.read())
     items = []
     for e in manifest["leaves"]:
         raw = blobs[e["host"]][e["offset"]: e["offset"] + e["nbytes"]]

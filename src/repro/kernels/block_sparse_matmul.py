@@ -21,6 +21,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _bsmm_kernel(mask_ref, x_ref, w_ref, o_ref, acc_scr, *, n_k, n_n):
     j_n = pl.program_id(1)
@@ -71,7 +73,7 @@ def block_sparse_matmul(x, w, block_mask, *, block_m=128, block_n=128,
         functools.partial(_bsmm_kernel, n_k=n_k, n_n=n_n),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(mask_flat, x, w)

@@ -1,0 +1,18 @@
+"""Pallas API-drift shims.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``;
+this container pins an older jax.  Kernels import the symbol from here so
+they read like the current API while running on either version.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+_cp = getattr(_pltpu, "CompilerParams",
+              getattr(_pltpu, "TPUCompilerParams", None))
+
+if _cp is None:  # pragma: no cover - depends on installed jax
+    def CompilerParams(*args, **kwargs):
+        raise ImportError(
+            "this jax version exposes neither pltpu.CompilerParams nor "
+            "pltpu.TPUCompilerParams; the Pallas kernels need jax>=0.4.30")
+else:
+    CompilerParams = _cp

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _scan_kernel(a_ref, b_ref, o_ref, h_scr, *, seq_len, sub):
     @pl.when(pl.program_id(0) >= 0)  # always; keeps structure uniform
@@ -69,7 +71,7 @@ def rglru_scan(a, b, *, block_w=128, sub=64, interpret=False):
         out_specs=pl.BlockSpec((1, S, block_w), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a, b)

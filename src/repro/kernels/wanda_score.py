@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _wanda_kernel(w_ref, xn_ref, th_ref, o_ref):
     w = w_ref[...]
@@ -47,7 +49,7 @@ def wanda_mask_apply(w, xnorm, thresh, *, block_k=256, block_n=256,
         ],
         out_specs=pl.BlockSpec((block_k, block_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(w, xnorm, thresh)

@@ -9,6 +9,15 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """jax.sharding.AxisType landed after 0.4.x; Auto is the default there
+    anyway, so omit the kwarg on older jax instead of crashing."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; multi_pod adds a 2-pod outer axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,16 +31,13 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices, have {len(devices)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"(launch/dryrun.py does this) or on real hardware")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         **_axis_type_kwargs(len(axes)))
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = data * model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=jax.devices()[:n])
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:n],
+                         **_axis_type_kwargs(2))

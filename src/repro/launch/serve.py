@@ -1,5 +1,5 @@
 """Serving launcher: load a (possibly STUN-pruned) checkpoint and serve
-batched greedy-decode requests.
+batched requests through the continuous-batching engine.
 
     python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
         --checkpoint-dir /ckpt/pruned --n-requests 8 --new-tokens 16
@@ -26,6 +26,13 @@ def main():
     ap.add_argument("--n-requests", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="cache slots (concurrent in-flight requests)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per prefill dispatch")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 = softmax sampling")
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -44,11 +51,20 @@ def main():
 
     rs = np.random.RandomState(0)
     reqs = [Request(rs.randint(0, cfg.vocab, 8).astype(np.int32),
-                    args.new_tokens) for _ in range(args.n_requests)]
-    eng = ServeEngine(params, cfg, max_len=args.max_len)
+                    args.new_tokens, eos_id=args.eos_id,
+                    temperature=args.temperature)
+            for _ in range(args.n_requests)]
+    eng = ServeEngine(params, cfg, max_len=args.max_len,
+                      max_batch=args.max_batch,
+                      prefill_chunk=args.prefill_chunk)
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req{i}: {o.tolist()}")
+    stats = eng.latency_stats()
+    if stats:
+        print("latency:", {k: f"{v * 1e3:.1f}ms" for k, v in stats.items()})
+    print(f"dispatches: prefill={eng.prefill_dispatches} "
+          f"decode={eng.decode_dispatches}")
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@ from repro.models.transformer import (  # noqa: F401
     abstract_params,
     cache_specs,
     decode_step,
+    decode_step_ragged,
     forward,
     init_cache,
     loss_fn,
+    prefill_step,
 )
 from repro.models import param  # noqa: F401

@@ -102,15 +102,27 @@ def apply_rope(x, sin, cos):
 # ---------------------------------------------------------------------------
 
 
-def _mask(q_pos, kv_pos, window: Optional[int]):
-    """[..., S, T] boolean mask: True = attend."""
+def _mask(q_pos, kv_pos, window: Optional[int], kv_len=None):
+    """[..., S, T] boolean mask: True = attend.
+
+    ``kv_len`` (scalar or [B]) additionally masks kv positions past the
+    number of *valid* entries — prefill-with-cache uses it so queries never
+    attend to unwritten / padded cache rows.
+    """
     m = q_pos[..., :, None] >= kv_pos[..., None, :]
     if window is not None:
         m &= (q_pos[..., :, None] - kv_pos[..., None, :]) < window
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        if kl.ndim == 0:
+            m = m & (kv_pos[..., None, :] < kl)
+        else:  # [B] — broadcast a batch axis onto the mask
+            m = m & (kv_pos[..., None, :] < kl[:, None, None])
     return m
 
 
-def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None):
+def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
+                    kv_len=None):
     """q [B,S,H,hd], k/v [B,T,K,hd], q_pos [S] or [B,S], kv_pos [T] or [B,T]."""
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
@@ -121,7 +133,7 @@ def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None):
                    k.astype(jnp.float32)) * scale
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
-    m = _mask(q_pos, kv_pos, window)  # [S,T] or [B,S,T]
+    m = _mask(q_pos, kv_pos, window, kv_len)  # [S,T] or [B,S,T]
     if m.ndim == 3:
         m = m[:, None, None]
     s = jnp.where(m, s, NEG_INF)
@@ -131,7 +143,7 @@ def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None):
 
 
 def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
-                      chunk: int = 512, unroll: bool = False):
+                      chunk: int = 512, unroll: bool = False, kv_len=None):
     """Flash-style online-softmax attention, scanning KV in chunks.
 
     ``unroll`` replaces the lax.scan with a python loop (identical math) so
@@ -162,7 +174,7 @@ def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
         s = jnp.einsum("bskgh,bckh->bkgsc", qh, kch.astype(jnp.float32)) * scale
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
-        msk = _mask(q_pos, pch, window)  # [S,c] or [B,S,c]
+        msk = _mask(q_pos, pch, window, kv_len)  # [S,c] or [B,S,c]
         if msk.ndim == 3:
             msk = msk[:, None, None]
         s = jnp.where(msk, s, NEG_INF)
@@ -212,15 +224,16 @@ def attention_decode(q, k_cache, v_cache, cache_len, *, window=None,
 
 
 def attention(q, k, v, q_pos, kv_pos, *, impl="chunked", window=None,
-              softcap=None, chunk=512, unroll=False):
+              softcap=None, chunk=512, unroll=False, kv_len=None):
     if impl == "naive" or q.shape[1] <= chunk:
         return attention_naive(q, k, v, q_pos, kv_pos, window=window,
-                               softcap=softcap)
+                               softcap=softcap, kv_len=kv_len)
     if impl in ("chunked", "pallas"):
         # pallas fast path is swapped in by kernels/ops.py when enabled;
         # portable lowering uses the chunked scan.
         return attention_chunked(q, k, v, q_pos, kv_pos, window=window,
-                                 softcap=softcap, chunk=chunk, unroll=unroll)
+                                 softcap=softcap, chunk=chunk, unroll=unroll,
+                                 kv_len=kv_len)
     raise ValueError(impl)
 
 

@@ -279,10 +279,11 @@ def pad_attention_params(params, cfg_plain: ModelConfig,
 # ---------------------------------------------------------------------------
 
 
-def _attn_block(x, p, cfg, sin, cos, q_pos, kv_pos, *, window=None,
-                cache=None, cache_len=None):
-    """Returns (out, (new_k_slice, new_v_slice)) — cache slices when decoding."""
-    B, S, D = x.shape
+def _qkv_proj(x, p, cfg, sin, cos):
+    """Shared QKV projection: bias, RoPE, and the pad_heads wo mask.
+
+    Returns (q, k, v, wo) — the single source of truth for both the
+    forward/decode block and the chunked-prefill block."""
     wo = p["wo"]
     if cfg.pad_heads and cfg.heads_eff != cfg.n_heads:
         # exact head padding: zero-mask wo rows of padded q-head slots
@@ -297,6 +298,13 @@ def _attn_block(x, p, cfg, sin, cos, q_pos, kv_pos, *, window=None,
         v = v + p["bv"]
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
+    return q, k, v, wo
+
+
+def _attn_block(x, p, cfg, sin, cos, q_pos, kv_pos, *, window=None,
+                cache=None, cache_len=None):
+    """Returns (out, (new_k_slice, new_v_slice)) — cache slices when decoding."""
+    q, k, v, wo = _qkv_proj(x, p, cfg, sin, cos)
     if cache is None:
         o = attention(q, k, v, q_pos, kv_pos, impl=cfg.attn_impl,
                       window=window, softcap=cfg.attn_logit_softcap,
@@ -304,15 +312,25 @@ def _attn_block(x, p, cfg, sin, cos, q_pos, kv_pos, *, window=None,
         new_kv = (k, v)
     else:
         k_cache, v_cache, write_idx = cache
-        k_cache = lax.dynamic_update_slice_in_dim(
-            k_cache, k.astype(k_cache.dtype), write_idx, axis=1)
-        v_cache = lax.dynamic_update_slice_in_dim(
-            v_cache, v.astype(v_cache.dtype), write_idx, axis=1)
+        widx = jnp.asarray(write_idx)
+        if widx.ndim == 0:               # uniform position for the batch
+            k_cache = lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), widx, axis=1)
+            v_cache = lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), widx, axis=1)
+        else:                            # ragged: per-request position [B]
+            upd = jax.vmap(lambda c, kv, i: lax.dynamic_update_slice_in_dim(
+                c, kv, i, axis=0))
+            k_cache = upd(k_cache, k.astype(k_cache.dtype), widx)
+            v_cache = upd(v_cache, v.astype(v_cache.dtype), widx)
+        # hybrid ring-buffer callers pass window=None (the buffer itself
+        # bounds the horizon); full-length absolute-position caches pass
+        # their sliding window through so decode matches prefill masking
         o = attention_decode(q, k_cache, v_cache, cache_len,
-                             window=None,  # ring buffer handles windowing
+                             window=window,
                              softcap=cfg.attn_logit_softcap)
         new_kv = (k_cache, v_cache)
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
     return out, new_kv
 
 
@@ -342,8 +360,27 @@ def _embed_in(params, cfg, batch):
     return h
 
 
-def forward(params, cfg: ModelConfig, batch, *, mesh=None):
-    """Full-sequence forward -> logits [B, S, padded_vocab]."""
+def _norm_expert_mask(cfg: ModelConfig, expert_mask):
+    """Normalize a runtime expert-alive mask to [L, E] fp32 (or None).
+
+    Accepts [E] (shared across layers) or [L, E] (per-layer, e.g. the
+    keep-mask from ``expert_prune_moe(mode="mask")``).
+    """
+    if expert_mask is None or cfg.family != "moe":
+        return None
+    em = jnp.asarray(expert_mask, jnp.float32)
+    if em.ndim == 1:
+        em = jnp.broadcast_to(em[None], (cfg.n_layers, em.shape[0]))
+    return em
+
+
+def forward(params, cfg: ModelConfig, batch, *, mesh=None, expert_mask=None):
+    """Full-sequence forward -> logits [B, S, padded_vocab].
+
+    ``expert_mask`` ([E] or [L, E], 1=alive) applies runtime expert pruning
+    in every MoE layer (router logits of dead experts forced to -inf).
+    """
+    em = _norm_expert_mask(cfg, expert_mask)
     h = _embed_in(params, cfg, batch)
     B, S, D = h.shape
     pos = jnp.arange(S)
@@ -373,7 +410,7 @@ def forward(params, cfg: ModelConfig, batch, *, mesh=None):
 
             h = _remat(layer, cfg)(h)
     else:
-        def body(h, lp):
+        def body(h, lp, em_row=None):
             if fam == "ssm":
                 mix, _ = mamba_mixer(_norm(h, lp["ln1"], cfg),
                                      lp["ssm"], cfg)
@@ -384,16 +421,24 @@ def forward(params, cfg: ModelConfig, batch, *, mesh=None):
             h = h + mix
             x2 = _norm(h, lp["ln2"], cfg)
             if cfg.family == "moe":
-                h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh)
+                h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh,
+                                  expert_mask=em_row)
             else:
                 h = h + _mlp_block(x2, lp["mlp"])
             return h, None
         if cfg.scan_layers:
-            h, _ = lax.scan(_remat(body, cfg), h, params["layers"])
+            if em is None:
+                h, _ = lax.scan(_remat(body, cfg), h, params["layers"])
+            else:
+                h, _ = lax.scan(
+                    _remat(lambda hh, x: body(hh, x[0], x[1]), cfg),
+                    h, (params["layers"], em))
         else:
             for i in range(cfg.n_layers):
                 lp = params["layers"][str(i)]
-                h = _remat(lambda hh, lp=lp: body(hh, lp)[0], cfg)(h)
+                em_i = None if em is None else em[i]
+                h = _remat(lambda hh, lp=lp, em_i=em_i:
+                           body(hh, lp, em_i)[0], cfg)(h)
 
     h = _norm(h, params["final_norm"], cfg)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -488,11 +533,18 @@ def init_cache(cfg, batch_size, max_len):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len, *,
-                mesh=None):
+                mesh=None, expert_mask=None):
     """One decode step. tokens [B,1] int32; cur_len scalar int32 (uniform).
 
-    Returns (logits [B, padded_vocab], new_cache).
+    Returns (logits [B, padded_vocab], new_cache).  Attention families
+    delegate to ``decode_step_ragged`` with uniform positions; the bodies
+    below cover the recurrent-state families, where ``expert_mask`` is a
+    no-op (no MoE layers).
     """
+    if cfg.family not in ("ssm", "hybrid"):
+        seq_lens = jnp.full((tokens.shape[0],), cur_len, jnp.int32)
+        return decode_step_ragged(params, cfg, cache, tokens, seq_lens,
+                                  mesh=mesh, expert_mask=expert_mask)
     h = params["embed"][tokens]                      # [B,1,D]
     B = h.shape[0]
     pos = jnp.full((B, 1), cur_len, jnp.int32)
@@ -541,34 +593,157 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len, *,
                 hs.append(nh_)
             nconv, nh = jnp.stack(convs), jnp.stack(hs)
         new_cache = {"conv": nconv, "ssm_h": nh}
-    else:
-        def body(h, inp):
-            lp, kc, vc = inp
-            mix, (nk, nv) = _attn_block(
-                _norm(h, lp["ln1"], cfg), lp["attn"], cfg,
-                sin, cos, None, None, cache=(kc, vc, cur_len),
-                cache_len=cache_len)
-            h = h + mix
-            x2 = _norm(h, lp["ln2"], cfg)
-            if cfg.family == "moe":
-                h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh)
-            else:
-                h = h + _mlp_block(x2, lp["mlp"])
-            return h, (nk, nv)
-        if cfg.scan_layers:
-            h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["k"],
-                                             cache["v"]))
-        else:
-            ks, vs = [], []
-            for i in range(cfg.n_layers):
-                h, (nk_, nv_) = body(h, (params["layers"][str(i)],
-                                         cache["k"][i], cache["v"][i]))
-                ks.append(nk_)
-                vs.append(nv_)
-            nk, nv = jnp.stack(ks), jnp.stack(vs)
-        new_cache = {"k": nk, "v": nv}
+    else:  # attention families are handled by the delegation above
+        raise AssertionError(fam)
 
     h = _norm(h, params["final_norm"], cfg)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache
+
+
+def decode_step_ragged(params, cfg: ModelConfig, cache, tokens, seq_lens, *,
+                       mesh=None, expert_mask=None):
+    """One continuous-batching decode step with per-request positions.
+
+    tokens [B,1] int32 — one token per cache slot; seq_lens [B] int32 — the
+    number of tokens already in each slot's cache (the new token is written
+    at index ``seq_lens[b]``, RoPE'd at that position, and attends to
+    ``seq_lens[b]+1`` cache rows).  Slots whose lane is unused still compute
+    (lanes are fixed under jit) — callers simply discard those logits.
+    NOTE: unused lanes also write their placeholder token's K/V at row
+    ``seq_lens[b]`` (0 for a free slot); this is safe only because slot
+    prefill always rewrites a slot from row 0 before it is attended — any
+    future prefill that starts mid-slot must first clear row 0.
+
+    Only KV-cache families (dense/moe/audio/vlm transformers) support ragged
+    decode; recurrent families keep uniform-position ``decode_step``.
+    Returns (logits [B, padded_vocab], new_cache).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"ragged decode requires a KV cache; family={cfg.family!r}")
+    h = params["embed"][tokens]                      # [B,1,D]
+    pos = seq_lens[:, None]                          # [B,1] per-request
+    sin, cos = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    cache_len = seq_lens + 1
+    em = _norm_expert_mask(cfg, expert_mask)
+
+    def body(h, inp):
+        if em is None:
+            lp, kc, vc = inp
+            em_row = None
+        else:
+            lp, kc, vc, em_row = inp
+        mix, (nk, nv) = _attn_block(
+            _norm(h, lp["ln1"], cfg), lp["attn"], cfg,
+            sin, cos, None, None, window=cfg.local_window,
+            cache=(kc, vc, seq_lens), cache_len=cache_len)
+        h = h + mix
+        x2 = _norm(h, lp["ln2"], cfg)
+        if cfg.family == "moe":
+            h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh,
+                              expert_mask=em_row)
+        else:
+            h = h + _mlp_block(x2, lp["mlp"])
+        return h, (nk, nv)
+
+    if cfg.scan_layers:
+        xs = (params["layers"], cache["k"], cache["v"])
+        if em is not None:
+            xs = xs + (em,)
+        h, (nk, nv) = lax.scan(body, h, xs)
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            inp = (params["layers"][str(i)], cache["k"][i], cache["v"][i])
+            if em is not None:
+                inp = inp + (em[i],)
+            h, (nk_, nv_) = body(h, inp)
+            ks.append(nk_)
+            vs.append(nv_)
+        nk, nv = jnp.stack(ks), jnp.stack(vs)
+    new_cache = {"k": nk, "v": nv}
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache
+
+
+def prefill_step(params, cfg: ModelConfig, cache, tokens, slot, start, *,
+                 mesh=None, expert_mask=None):
+    """Single-dispatch chunked prefill with fused cache writes.
+
+    Processes one fixed-size chunk of one request's prompt: ``tokens``
+    [1, C] int32 (right-padded), ``slot`` scalar int32 (cache slot to fill),
+    ``start`` scalar int32 (absolute position of the chunk's first token —
+    a multiple of C).  The chunk's K/V are written into
+    ``cache[k|v][:, slot, start:start+C]`` and the chunk attends to the
+    slot's cache rows ``[0, start+C)`` under a causal + length mask, so an
+    S-token prompt costs ``ceil(S/C)`` jitted dispatches instead of S and
+    padded rows never contaminate attention.
+
+    Returns (logits [1, C, padded_vocab], new_cache).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"chunked prefill requires a KV cache; family={cfg.family!r}")
+    h = params["embed"][tokens]                      # [1,C,D]
+    C = h.shape[1]
+    q_pos = start + jnp.arange(C)                    # [C]
+    sin, cos = rope_tables(q_pos, cfg.head_dim, cfg.rope_theta)
+    em = _norm_expert_mask(cfg, expert_mask)
+
+    def body(h, inp):
+        if em is None:
+            lp, kc, vc = inp
+            em_row = None
+        else:
+            lp, kc, vc, em_row = inp
+        x = _norm(h, lp["ln1"], cfg)
+        q, k, v, wo = _qkv_proj(x, lp["attn"], cfg, sin, cos)
+        # slice this slot's cache, splice the chunk in, attend to the
+        # written prefix, then write the slot back
+        ks = lax.dynamic_slice_in_dim(kc, slot, 1, axis=0)   # [1,T,K,hd]
+        vs = lax.dynamic_slice_in_dim(vc, slot, 1, axis=0)
+        ks = lax.dynamic_update_slice(ks, k.astype(ks.dtype), (0, start, 0, 0))
+        vs = lax.dynamic_update_slice(vs, v.astype(vs.dtype), (0, start, 0, 0))
+        T = ks.shape[1]
+        o = attention(q, ks, vs, q_pos, jnp.arange(T), impl=cfg.attn_impl,
+                      window=cfg.local_window, softcap=cfg.attn_logit_softcap,
+                      chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                      kv_len=start + C)
+        mix = jnp.einsum("bshk,hkd->bsd", o, wo)
+        kc = lax.dynamic_update_slice(kc, ks, (slot, 0, 0, 0))
+        vc = lax.dynamic_update_slice(vc, vs, (slot, 0, 0, 0))
+        h = h + mix
+        x2 = _norm(h, lp["ln2"], cfg)
+        if cfg.family == "moe":
+            h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh,
+                              expert_mask=em_row)
+        else:
+            h = h + _mlp_block(x2, lp["mlp"])
+        return h, (kc, vc)
+
+    if cfg.scan_layers:
+        xs = (params["layers"], cache["k"], cache["v"])
+        if em is not None:
+            xs = xs + (em,)
+        h, (nk, nv) = lax.scan(body, h, xs)
+    else:
+        ks_, vs_ = [], []
+        for i in range(cfg.n_layers):
+            inp = (params["layers"][str(i)], cache["k"][i], cache["v"][i])
+            if em is not None:
+                inp = inp + (em[i],)
+            h, (nk_, nv_) = body(h, inp)
+            ks_.append(nk_)
+            vs_.append(nv_)
+        nk, nv = jnp.stack(ks_), jnp.stack(vs_)
+    new_cache = {"k": nk, "v": nv}
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
     return logits, new_cache

@@ -1,75 +1,265 @@
-"""Batched serving engine: prefill + decode over the unified model.
+"""Continuous-batching serving engine: chunked prefill + slot-based decode.
 
 The serving path is where STUN's wins land: a 25%-expert-pruned MoE has a
 proportionally smaller EP all-to-all and per-chip weight set, and the
-block-sparse kernel exploits stage-2 masks.  The engine is deliberately
-simple (contiguous KV cache, synchronous batch scheduler) — the
-distribution story lives in the shardings, not the scheduler.
+block-sparse kernel exploits stage-2 masks.  The engine:
+
+  * **chunked prefill** — an S-token prompt is replayed through
+    ``models.prefill_step`` in fixed-size chunks, each a single jitted
+    dispatch that computes the chunk forward, writes its K/V into the
+    request's cache slot, and masks padded / unwritten positions.  Cost is
+    ``ceil(S/chunk)`` dispatches, independent of S (the seed engine paid
+    one decode dispatch per prompt token and attended its left-pads).
+  * **slot-based KV cache** (`kv_cache.SlotKVCache`) — per-request
+    ``seq_len``, alloc/free, and admission of queued requests into slots
+    vacated mid-flight by finished requests.
+  * **scheduler** (`scheduler.Scheduler`) — FIFO admission, per-request
+    EOS / ``max_new_tokens`` termination (no post-EOS tokens, no decode
+    steps burned on finished requests), per-request greedy or temperature
+    sampling.
+  * **pruned-model plumbing** — a runtime ``expert_mask`` ([E] or [L, E])
+    flows into every prefill/decode dispatch, and stage-2 unstructured
+    masks from ``core.unstructured.sparsify_model`` can be re-applied to
+    the weights at load time via ``weight_masks=``.
+
+Recurrent families (ssm/hybrid) have no length-indexed cache; they fall
+back to a correct sequential per-request path.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, forward, init_cache
+from repro.models import decode_step, decode_step_ragged, init_cache, prefill_step
+from repro.serving.kv_cache import SlotKVCache
+from repro.serving.scheduler import Request, Scheduler
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray          # [S] int32
-    max_new_tokens: int = 16
+def apply_weight_masks(params, cfg, masks: Dict):
+    """Re-apply stage-2 block/unstructured sparsity masks to a param tree.
+
+    ``masks`` is the ``{(layer, path) -> bool ndarray}`` dict returned by
+    ``core.unstructured.sparsify_model`` — multiplying them back in keeps a
+    served checkpoint exactly as sparse as the pruner left it (e.g. after
+    fine-tuning or dtype casts re-densified small values).
+    """
+    from repro.core.unstructured import _get_path, _set_path
+
+    stacked = cfg.family != "hybrid" and cfg.scan_layers
+    new_params = params
+    if stacked:
+        # group per weight path so each stacked [L, ...] tensor is copied
+        # once, not once per layer
+        by_path: Dict = {}
+        for (l, path), mask in masks.items():
+            by_path.setdefault(path, []).append((l, mask))
+        layers = new_params["layers"]
+        for path, entries in by_path.items():
+            W = _get_path(layers, path)
+            Wn = np.asarray(W, np.float32).copy()
+            for l, mask in entries:
+                Wn[l] = Wn[l] * mask
+            layers = _set_path(layers, path, jnp.asarray(Wn, dtype=W.dtype))
+        return {**new_params, "layers": layers}
+    for (l, path), mask in masks.items():
+        sub = new_params["layers"][str(l)]
+        W = _get_path(sub, path)
+        Wn = np.asarray(W, np.float32) * mask
+        sub = _set_path(sub, path, jnp.asarray(Wn, dtype=W.dtype))
+        new_params = {**new_params,
+                      "layers": {**new_params["layers"], str(l): sub}}
+    return new_params
 
 
 class ServeEngine:
-    def __init__(self, params, cfg, max_len: int = 512, mesh=None):
+    def __init__(self, params, cfg, max_len: int = 512, mesh=None,
+                 max_batch: int = 8, prefill_chunk: int = 32,
+                 expert_mask=None, weight_masks: Optional[Dict] = None,
+                 seed: int = 0):
+        if weight_masks:
+            params = apply_weight_masks(params, cfg, weight_masks)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.mesh = mesh
-        self._decode = jax.jit(
-            lambda p, c, t, n: decode_step(p, cfg, c, t, n, mesh=mesh))
+        self.max_batch = max_batch
+        self.prefill_chunk = min(prefill_chunk, max_len)
+        self.scheduler = Scheduler()
+        self.prefill_dispatches = 0      # jitted prefill calls (bench hook)
+        self.decode_dispatches = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._attn_cache = cfg.family not in ("ssm", "hybrid")
 
-    def prefill(self, tokens):
-        """tokens [B, S] -> (cache, last_logits [B, V]).
+        em = None if expert_mask is None else jnp.asarray(expert_mask,
+                                                          jnp.float32)
+        if self._attn_cache:
+            # round the cache up to whole prefill chunks: the last chunk of a
+            # max_len-long prompt may extend past max_len, and an out-of-range
+            # dynamic_update_slice would clamp and silently corrupt earlier
+            # rows
+            C = self.prefill_chunk
+            self.cache = SlotKVCache(cfg, max_batch,
+                                     ((max_len + C - 1) // C) * C)
+            # donate the cache arg: the engine always replaces cache.tree
+            # with the result, and without donation every dispatch copies
+            # the whole multi-slot K/V tree.  CPU ignores donation with a
+            # warning, so only donate on accelerators.
+            donate = (1,) if jax.default_backend() != "cpu" else ()
+            self._prefill = jax.jit(
+                lambda p, c, t, slot, start: prefill_step(
+                    p, cfg, c, t, slot, start, mesh=mesh, expert_mask=em),
+                donate_argnums=donate)
+            self._decode = jax.jit(
+                lambda p, c, t, sl: decode_step_ragged(
+                    p, cfg, c, t, sl, mesh=mesh, expert_mask=em),
+                donate_argnums=donate)
+        else:
+            self.cache = None
+            self._decode_uniform = jax.jit(
+                lambda p, c, t, n: decode_step(p, cfg, c, t, n, mesh=mesh,
+                                               expert_mask=em))
+        self._sample = jax.jit(self._sample_fn)
 
-        Prefill runs the full forward, then replays tokens into the cache
-        via teacher-forced decode (portable path; the TPU fast path fuses
-        cache writes into the forward).
-        """
-        B, S = tokens.shape
-        cache = init_cache(self.cfg, B, self.max_len)
-        logits = None
-        for t in range(S):
-            logits, cache = self._decode(self.params, cache,
-                                         tokens[:, t: t + 1], jnp.int32(t))
-        return cache, logits
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its id.  ``run()`` drains the queue."""
+        if len(request.prompt) < 1:
+            raise ValueError("empty prompt")
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt({len(request.prompt)}) + max_new_tokens"
+                f"({request.max_new_tokens}) exceeds max_len={self.max_len}")
+        return self.scheduler.submit(request, time.monotonic())
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
-        """Greedy batched generation (prompts left-aligned, same length)."""
-        S = max(len(r.prompt) for r in requests)
-        B = len(requests)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, S - len(r.prompt):] = r.prompt  # left-pad with 0
-        cache, logits = self.prefill(jnp.asarray(toks))
-        max_new = max(r.max_new_tokens for r in requests)
-        out = []
-        cur = jnp.argmax(logits[:, : self.cfg.vocab], axis=-1)[:, None]
-        for i in range(max_new):
-            out.append(np.asarray(cur[:, 0]))
-            logits, cache = self._decode(self.params, cache,
-                                         cur.astype(jnp.int32),
-                                         jnp.int32(S + i))
-            cur = jnp.argmax(logits[:, : self.cfg.vocab], axis=-1)[:, None]
-        gen = np.stack(out, axis=1)  # [B, max_new]
-        return [gen[i, : requests[i].max_new_tokens] for i in range(B)]
+        """Batch API: submit, drain, return outputs in request order."""
+        rids = [self.submit(r) for r in requests]
+        self.run()
+        return [self.scheduler.result(rid) for rid in rids]
+
+    def run(self):
+        """Drive admissions + decode until queue and slots are empty."""
+        if not self._attn_cache:
+            self._run_sequential()
+            return
+        while self.scheduler.has_pending or self.scheduler.has_active:
+            self.step()
+
+    def latency_stats(self) -> Dict[str, float]:
+        return self.scheduler.latencies()
+
+    def reset_stats(self):
+        """Clear latency history and dispatch counters (e.g. after a
+        warmup/compile wave)."""
+        self.scheduler.reset_latencies()
+        self.prefill_dispatches = 0
+        self.decode_dispatches = 0
+
+    # ------------------------------------------------------------------
+    # continuous-batching loop (attention families)
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration: admit into free slots, then one batched
+        ragged decode step for every active slot."""
+        sched, cache = self.scheduler, self.cache
+        while sched.has_pending and cache.n_free:
+            slot = cache.alloc()
+            st = sched.admit(slot)
+            self._prefill_into_slot(st)
+        if not sched.has_active:
+            return
+        B = cache.n_slots
+        tokens = np.zeros((B, 1), np.int32)
+        active = list(sched.active.values())
+        for st in active:
+            tokens[st.slot, 0] = st.tokens[-1]
+        logits, cache.tree = self._decode(self.params, cache.tree,
+                                          jnp.asarray(tokens),
+                                          cache.seq_lens_device())
+        self.decode_dispatches += 1
+        for st in active:
+            cache.seq_lens[st.slot] += 1
+        toks = np.asarray(self._sample_batch(logits, active))
+        now = time.monotonic()
+        for st in active:
+            if sched.on_token(st.rid, int(toks[st.slot]), now):
+                cache.free(st.slot)
+
+    def _prefill_into_slot(self, st):
+        """Chunked prefill of ``st.req.prompt`` into cache slot ``st.slot``
+        + sample the first generated token from the last-prompt-token
+        logits."""
+        prompt = np.asarray(st.req.prompt, np.int32)
+        S, C = len(prompt), self.prefill_chunk
+        n_pad = ((S + C - 1) // C) * C
+        assert n_pad <= self.cache.max_len, (n_pad, self.cache.max_len)
+        buf = np.zeros(n_pad, np.int32)
+        buf[:S] = prompt
+        logits = None
+        for c0 in range(0, n_pad, C):
+            logits, self.cache.tree = self._prefill(
+                self.params, self.cache.tree,
+                jnp.asarray(buf[None, c0: c0 + C]),
+                jnp.int32(st.slot), jnp.int32(c0))
+            self.prefill_dispatches += 1
+        self.cache.seq_lens[st.slot] = S
+        # last prompt token always lives in the final chunk
+        last = logits[0, (S - 1) - (n_pad - C)][None]         # [1, Vp]
+        tok = np.asarray(self._sample_batch(last, [st]))[0]
+        if self.scheduler.on_token(st.rid, int(tok), time.monotonic()):
+            self.cache.free(st.slot)
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _sample_fn(self, logits, temps, key):
+        """logits [B, Vp], temps [B] -> tokens [B] (greedy where temp==0)."""
+        lg = logits[:, : self.cfg.vocab].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1)
+        g = jax.random.gumbel(key, lg.shape)
+        samp = jnp.argmax(lg / jnp.maximum(temps[:, None], 1e-6) + g, axis=-1)
+        return jnp.where(temps > 0, samp, greedy).astype(jnp.int32)
+
+    def _sample_batch(self, logits, states):
+        temps = np.zeros(logits.shape[0], np.float32)
+        for st in states:
+            idx = st.slot if logits.shape[0] > 1 else 0
+            temps[idx] = st.req.temperature
+        self._key, sub = jax.random.split(self._key)
+        return self._sample(logits, jnp.asarray(temps), sub)
+
+    # ------------------------------------------------------------------
+    # recurrent-family fallback (no KV cache => per-request sequential)
+    # ------------------------------------------------------------------
+    def _run_sequential(self):
+        sched = self.scheduler
+        while sched.has_pending:
+            st = sched.admit(slot=0)
+            prompt = np.asarray(st.req.prompt, np.int32)
+            cache = init_cache(self.cfg, 1, self.max_len)
+            logits = None
+            for t in range(len(prompt)):
+                logits, cache = self._decode_uniform(
+                    self.params, cache, jnp.asarray(prompt[None, t: t + 1]),
+                    jnp.int32(t))
+            pos = len(prompt)
+            while True:
+                tok = np.asarray(self._sample_batch(logits, [st]))[0]
+                if sched.on_token(st.rid, int(tok), time.monotonic()):
+                    break
+                logits, cache = self._decode_uniform(
+                    self.params, cache,
+                    jnp.asarray([[tok]], np.int32), jnp.int32(pos))
+                pos += 1
 
 
 def greedy_generate(params, cfg, prompt: np.ndarray, n_tokens: int,
                     max_len: int = 256) -> np.ndarray:
-    eng = ServeEngine(params, cfg, max_len=max_len)
+    eng = ServeEngine(params, cfg, max_len=max_len, max_batch=1)
     return eng.generate([Request(prompt, n_tokens)])[0]

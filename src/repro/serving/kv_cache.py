@@ -1,0 +1,74 @@
+"""Slot-based KV cache for continuous batching.
+
+A fixed pool of ``n_slots`` batch lanes over the model's decode cache
+([L, B, T, K, hd] K/V arrays).  Each slot carries its own ``seq_len`` —
+the number of valid cache rows — so requests of different lengths share
+one jitted decode step, and a slot vacated by a finished request can be
+re-filled by a newly admitted request mid-flight without touching the
+other lanes (prefill simply overwrites the slot's rows from position 0).
+
+The device arrays live in ``tree`` and are updated functionally by the
+jitted prefill/decode calls; this class owns the host-side bookkeeping
+(free list, per-slot lengths).
+
+Invariant: free slots are dirty, not zeroed — batched ragged decode
+writes its placeholder token's K/V into row 0 of every free lane (lanes
+are fixed under jit), and finished slots keep their old rows.  This is
+safe because admission always chunk-prefills a slot from row 0 before
+any of its rows are attended; a future mid-slot prefill (e.g. paged KV)
+must clear or rewrite row 0 first.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache
+
+
+class SlotKVCache:
+    def __init__(self, cfg, n_slots: int, max_len: int):
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"SlotKVCache requires an attention KV cache; "
+                f"family={cfg.family!r} keeps recurrent state instead")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.tree = init_cache(cfg, n_slots, max_len)
+        self.seq_lens = np.zeros(n_slots, np.int32)
+        self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
+
+    # ---- slot lifecycle -------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (or None).  The caller prefills it next."""
+        if not self._free:
+            return None
+        return self._free.pop()
+
+    def free(self, slot: int):
+        """Return a finished request's slot to the pool."""
+        assert 0 <= slot < self.n_slots and slot not in self._free, slot
+        self.seq_lens[slot] = 0
+        self._free.append(slot)
+
+    # ---- device views ---------------------------------------------------
+    def seq_lens_device(self):
+        # jnp.array (not asarray): on CPU, asarray can alias the numpy
+        # buffer zero-copy, and the engine mutates seq_lens while the async
+        # decode dispatch may still be reading it — a data race.
+        return jnp.array(self.seq_lens)
+
+    def bytes_resident(self) -> int:
+        import jax
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.tree))

@@ -1,0 +1,128 @@
+"""Admission queue + per-request lifecycle for the continuous-batching engine.
+
+Requests wait in a FIFO admission queue until a cache slot frees up, then
+stream tokens until *their own* termination condition — EOS or
+``max_new_tokens`` — and release the slot immediately, so a long request
+never makes short batchmates burn decode steps past their end (the seed
+engine ran every request to the batch max and sliced afterward).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    temperature == 0.0 -> greedy; > 0 -> softmax sampling at that
+    temperature.  ``eos_id`` terminates generation early (the EOS token is
+    included in the output; nothing after it ever is).
+    """
+    prompt: np.ndarray                   # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestState:
+    rid: int
+    req: Request
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class Scheduler:
+    def __init__(self, latency_window: int = 1024):
+        self._next_rid = 0
+        self.pending: collections.deque = collections.deque()
+        self.active: Dict[int, RequestState] = {}
+        self.finished: Dict[int, RequestState] = {}
+        # bounded latency history: a long-lived engine must not grow
+        # without bound, so percentile stats run over a recent window
+        self._latency: collections.deque = collections.deque(
+            maxlen=latency_window)
+
+    # ---- submission / admission ----------------------------------------
+    def submit(self, req: Request, now: float = 0.0) -> int:
+        if req.max_new_tokens < 1:
+            raise ValueError("need at least one generated token")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(RequestState(rid=rid, req=req, t_submit=now))
+        return rid
+
+    def admit(self, slot: int) -> RequestState:
+        """Move the oldest pending request into a (pre-allocated) slot."""
+        st = self.pending.popleft()
+        st.slot = slot
+        self.active[st.rid] = st
+        return st
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self.pending)
+
+    @property
+    def has_active(self) -> bool:
+        return bool(self.active)
+
+    # ---- token stream ---------------------------------------------------
+    def on_token(self, rid: int, token: int, now: float = 0.0) -> bool:
+        """Record one generated token; returns True if the request finished
+        (its slot should be freed)."""
+        st = self.active[rid]
+        assert not st.done, f"token for finished request {rid}"
+        st.tokens.append(int(token))
+        if st.t_first_token is None:
+            st.t_first_token = now
+        eos = st.req.eos_id
+        if (eos is not None and token == eos) or \
+                len(st.tokens) >= st.req.max_new_tokens:
+            st.done = True
+            st.t_done = now
+            del self.active[rid]
+            self.finished[rid] = st
+            self._latency.append((st.t_done - st.t_submit,
+                                  st.t_first_token - st.t_submit))
+            return True
+        return False
+
+    # ---- results --------------------------------------------------------
+    def result(self, rid: int, keep: bool = False) -> np.ndarray:
+        """Collect a finished request's tokens; pops the state (unless
+        ``keep``) so a long-lived engine doesn't accumulate history."""
+        st = self.finished[rid] if keep else self.finished.pop(rid)
+        out = np.asarray(st.tokens, np.int32)
+        eos = st.req.eos_id
+        if eos is not None and np.any(out == eos):
+            # invariant: generation stopped at the first EOS
+            assert int(np.argmax(out == eos)) == len(out) - 1, \
+                f"tokens after EOS in request {rid}"
+        return out
+
+    def latencies(self) -> Dict[str, float]:
+        """p50/p95 full-request and first-token latencies (seconds) over
+        the recent completion window."""
+        if not self._latency:
+            return {}
+        total = np.array([t for t, _ in self._latency])
+        first = np.array([f for _, f in self._latency])
+        return {
+            "p50_latency_s": float(np.percentile(total, 50)),
+            "p95_latency_s": float(np.percentile(total, 95)),
+            "p50_first_token_s": float(np.percentile(first, 50)),
+            "p95_first_token_s": float(np.percentile(first, 95)),
+        }
+
+    def reset_latencies(self):
+        self._latency.clear()

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (see requirements.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.clustering import agglomerative_to_count
 from repro.core.robustness import kurtosis

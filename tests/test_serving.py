@@ -1,0 +1,288 @@
+"""Continuous-batching serving engine tests.
+
+Covers the rebuilt serving stack: single-dispatch chunked prefill against
+the token-by-token decode reference, pad invariance for mixed-length
+batches, runtime expert_mask vs compacted-checkpoint equivalence, slot
+reuse across request waves, and per-request termination.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.expert_prune import expert_prune_moe
+from repro.models import (abstract_params, decode_step, init_cache,
+                          prefill_step)
+from repro.models import param as pm
+from repro.serving import Request, ServeEngine, SlotKVCache
+
+
+def _tiny_moe(n_experts=8, top_k=2, seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2,
+                  n_experts=n_experts, top_k=top_k)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+def _tiny_dense(seed=0):
+    cfg = reduced(get_config("qwen2-7b"), n_layers=2)
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill vs token-by-token reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,C", [(13, 8), (16, 8), (5, 16)])
+def test_prefill_matches_token_by_token_reference(moe, S, C):
+    cfg, params = moe
+    T = 32
+    rs = np.random.RandomState(S)
+    toks = rs.randint(0, cfg.vocab, (1, S)).astype(np.int32)
+
+    cache_ref = init_cache(cfg, 1, T)
+    ref = []
+    for t in range(S):
+        lg, cache_ref = decode_step(params, cfg, cache_ref,
+                                    jnp.asarray(toks[:, t: t + 1]),
+                                    jnp.int32(t))
+        ref.append(np.asarray(lg[0]))
+    ref = np.stack(ref)
+
+    cache = init_cache(cfg, 3, T)     # prefill lands in slot 1 of 3
+    n_pad = ((S + C - 1) // C) * C
+    buf = np.zeros(n_pad, np.int32)
+    buf[:S] = toks[0]
+    chunks = []
+    for c0 in range(0, n_pad, C):
+        lg, cache = prefill_step(params, cfg, cache,
+                                 jnp.asarray(buf[None, c0: c0 + C]),
+                                 jnp.int32(1), jnp.int32(c0))
+        chunks.append(np.asarray(lg[0]))
+    got = np.concatenate(chunks)[:S]
+
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+    # the written cache rows must match the reference cache exactly
+    np.testing.assert_allclose(np.asarray(cache["k"][:, 1, :S]),
+                               np.asarray(cache_ref["k"][:, 0, :S]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_prefill_dispatch_count_independent_of_prompt_length(moe):
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=64, max_batch=1, prefill_chunk=16)
+    eng.generate([Request(np.arange(3, dtype=np.int32) + 1, 1)])
+    assert eng.prefill_dispatches == 1            # ceil(3/16)
+    eng.prefill_dispatches = 0
+    eng.generate([Request(np.arange(33, dtype=np.int32) % cfg.vocab, 1)])
+    assert eng.prefill_dispatches == 3            # ceil(33/16), not 33
+
+
+# ---------------------------------------------------------------------------
+# pad invariance / mixed-length batches
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_length_batch_is_pad_invariant(moe):
+    cfg, params = moe
+    rs = np.random.RandomState(0)
+    reqs = [Request(rs.randint(0, cfg.vocab, n).astype(np.int32), m)
+            for n, m in [(3, 4), (11, 6), (7, 5), (16, 3)]]
+    eng = ServeEngine(params, cfg, max_len=48, max_batch=4, prefill_chunk=8)
+    batched = eng.generate(reqs)
+    for r, got in zip(reqs, batched):
+        solo = ServeEngine(params, cfg, max_len=48, max_batch=1,
+                           prefill_chunk=8)
+        alone = solo.generate([Request(r.prompt, r.max_new_tokens)])[0]
+        np.testing.assert_array_equal(got, alone)
+
+
+def test_dense_family_serves(moe):
+    cfg, params = _tiny_dense()
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2, prefill_chunk=8)
+    outs = eng.generate([Request(np.array([1, 2, 3], np.int32), 4),
+                         Request(np.array([5, 6], np.int32), 6)])
+    assert outs[0].shape == (4,) and outs[1].shape == (6,)
+    for o in outs:
+        assert (o >= 0).all() and (o < cfg.vocab).all()
+
+
+# ---------------------------------------------------------------------------
+# pruned serving: runtime expert_mask == compacted checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_expert_mask_matches_compacted_model(moe):
+    cfg, params = moe
+    masked_p, _, keep, _ = expert_prune_moe(params, cfg, ratio=0.25,
+                                            mode="mask")
+    compact_p, compact_cfg, _, _ = expert_prune_moe(params, cfg, ratio=0.25,
+                                                    mode="compact")
+    rs = np.random.RandomState(3)
+    reqs = [Request(rs.randint(0, cfg.vocab, n).astype(np.int32), 6)
+            for n in (5, 9)]
+    e_mask = ServeEngine(jax.tree.map(jnp.asarray, masked_p), cfg,
+                         max_len=32, max_batch=2, prefill_chunk=8,
+                         expert_mask=keep)
+    e_comp = ServeEngine(jax.tree.map(jnp.asarray, compact_p), compact_cfg,
+                         max_len=32, max_batch=2, prefill_chunk=8)
+    out_mask = e_mask.generate([Request(r.prompt, r.max_new_tokens)
+                                for r in reqs])
+    out_comp = e_comp.generate([Request(r.prompt, r.max_new_tokens)
+                                for r in reqs])
+    for a, b in zip(out_mask, out_comp):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: slot reuse, per-request termination
+# ---------------------------------------------------------------------------
+
+
+def test_slot_reuse_across_request_waves(moe):
+    cfg, params = moe
+    rs = np.random.RandomState(7)
+    specs = [(6, 5), (13, 9), (3, 2), (9, 7), (5, 4), (4, 8)]
+    reqs = [Request(rs.randint(0, cfg.vocab, n).astype(np.int32), m)
+            for n, m in specs]
+    # 2 slots for 6 requests -> slots must be vacated and re-filled
+    eng = ServeEngine(params, cfg, max_len=48, max_batch=2, prefill_chunk=8)
+    outs = eng.generate(reqs)
+    assert eng.cache.n_free == eng.cache.n_slots      # all returned
+    for (n, m), o in zip(specs, outs):
+        assert o.shape == (m,)
+    # greedy determinism: same results generated one at a time
+    for r, got in zip(reqs, outs):
+        solo = ServeEngine(params, cfg, max_len=48, max_batch=1,
+                           prefill_chunk=8)
+        np.testing.assert_array_equal(
+            got, solo.generate([Request(r.prompt, r.max_new_tokens)])[0])
+
+
+def test_per_request_termination_no_post_eos(moe):
+    cfg, params = moe
+    rs = np.random.RandomState(11)
+    prompt = rs.randint(0, cfg.vocab, 9).astype(np.int32)
+    eng = ServeEngine(params, cfg, max_len=48, max_batch=2, prefill_chunk=8)
+    free_run = eng.generate([Request(prompt, 8)])[0]
+    eos = int(free_run[3])
+    eng2 = ServeEngine(params, cfg, max_len=48, max_batch=2, prefill_chunk=8)
+    stopped = eng2.generate([Request(prompt, 8, eos_id=eos)])[0]
+    assert len(stopped) == 4 and stopped[-1] == eos
+    assert not np.any(stopped[:-1] == eos)
+    np.testing.assert_array_equal(stopped, free_run[:4])
+    # a finished request stops burning decode steps: batchmate with
+    # max_new=1 must not inflate the longer one's dispatches
+    eng3 = ServeEngine(params, cfg, max_len=48, max_batch=2, prefill_chunk=8)
+    outs = eng3.generate([Request(prompt, 1), Request(prompt, 6)])
+    assert len(outs[0]) == 1 and len(outs[1]) == 6
+    assert eng3.decode_dispatches == 5     # only the 6-token request decodes
+
+
+def test_temperature_sampling_and_stats(moe):
+    cfg, params = moe
+    prompt = np.array([1, 2, 3, 4], np.int32)
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2, prefill_chunk=8,
+                      seed=5)
+    outs = eng.generate([Request(prompt, 6, temperature=1.0),
+                         Request(prompt, 6)])
+    assert outs[0].shape == (6,) and outs[1].shape == (6,)
+    assert (outs[0] < cfg.vocab).all() and (outs[0] >= 0).all()
+    stats = eng.latency_stats()
+    assert set(stats) == {"p50_latency_s", "p95_latency_s",
+                          "p50_first_token_s", "p95_first_token_s"}
+    assert all(v >= 0 for v in stats.values())
+
+
+def test_windowed_config_prefill_decode_consistent():
+    """Sliding-window dense config: engine generation must equal a full
+    forward() replay (prefill window mask and decode window mask agree)."""
+    from repro.models import forward
+
+    cfg = reduced(get_config("qwen2-7b"), n_layers=2)
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="full",
+                              local_window=8)
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(2))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    rs = np.random.RandomState(5)
+    prompt = rs.randint(0, cfg.vocab, 13).astype(np.int32)
+
+    seq = list(prompt)
+    ref = []
+    for _ in range(5):                       # teacher-forced full forward
+        lg = forward(params, cfg, {"tokens": jnp.asarray([seq])})
+        tok = int(jnp.argmax(lg[0, -1, : cfg.vocab]))
+        ref.append(tok)
+        seq.append(tok)
+
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=1, prefill_chunk=4)
+    got = eng.generate([Request(prompt, 5)])[0]
+    np.testing.assert_array_equal(got, np.asarray(ref, np.int32))
+
+
+def test_weight_masks_match_presparsified_params(moe):
+    """Serving dense params + stage-2 masks == serving the sparsified
+    checkpoint (the runtime block-sparse pruned path)."""
+    from repro.core.stun import unstructured_only
+    from repro.data.synthetic import calibration_batches
+
+    cfg, params = moe
+    batches = calibration_batches(cfg, n_batches=2)
+    sparse_p, masks, _ = unstructured_only(params, cfg, batches,
+                                           target_sparsity=0.4,
+                                           method="wanda")
+    prompt = np.array([1, 2, 3, 4, 5], np.int32)
+    e_pre = ServeEngine(jax.tree.map(jnp.asarray, sparse_p), cfg,
+                        max_len=32, max_batch=1, prefill_chunk=8)
+    e_masked = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                           prefill_chunk=8, weight_masks=masks)
+    np.testing.assert_array_equal(e_pre.generate([Request(prompt, 6)])[0],
+                                  e_masked.generate([Request(prompt, 6)])[0])
+
+
+def test_slot_kv_cache_alloc_free():
+    cfg, _ = _tiny_moe()
+    c = SlotKVCache(cfg, n_slots=2, max_len=16)
+    a, b = c.alloc(), c.alloc()
+    assert {a, b} == {0, 1} and c.alloc() is None and c.n_free == 0
+    c.seq_lens[a] = 5
+    c.free(a)
+    assert c.n_free == 1 and c.seq_lens[a] == 0
+    assert c.alloc() == a
+
+
+def test_max_len_guard(moe):
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=16, max_batch=1, prefill_chunk=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(np.zeros(12, np.int32), 8))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(np.array([], np.int32), 4))
+    assert eng.cache.n_free == eng.cache.n_slots   # nothing leaked
+
+
+def test_prefill_chunk_overrunning_max_len_is_safe(moe):
+    """Prompt whose chunk padding extends past max_len must not corrupt
+    already-written cache rows (dynamic_update_slice clamps silently)."""
+    cfg, params = moe
+    rs = np.random.RandomState(0)
+    prompt = rs.randint(0, cfg.vocab, 17).astype(np.int32)
+    tight = ServeEngine(params, cfg, max_len=20, max_batch=1,
+                        prefill_chunk=8)      # n_pad=24 > max_len=20
+    roomy = ServeEngine(params, cfg, max_len=24, max_batch=1,
+                        prefill_chunk=8)
+    np.testing.assert_array_equal(tight.generate([Request(prompt, 1)])[0],
+                                  roomy.generate([Request(prompt, 1)])[0])
