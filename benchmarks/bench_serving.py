@@ -1,5 +1,5 @@
 """Serving benchmark: chunked prefill vs the seed token-by-token engine,
-and dense vs STUN-pruned continuous-batching throughput.
+and paged vs slot KV-cache serving throughput (dense and STUN-pruned).
 
 Measures, on the mixtral proxy (reduced to CPU scale):
 
@@ -7,13 +7,20 @@ Measures, on the mixtral proxy (reduced to CPU scale):
     prompts through the jitted decode step (S dispatches); the rebuilt
     engine issues one jitted call per ``prefill_chunk`` tokens, so the
     dispatch count is independent of the token count per dispatch.
-  * end-to-end serving tokens/s and p50/p95 request latency for the dense
-    model vs the same model with 25% of experts pruned at runtime
-    (``expert_mask``) — STUN's serving payoff.
+  * end-to-end serving tokens/s, p50/p95 request latency, dispatch
+    counts, pages/request and KV bytes resident for the paged engine vs
+    the PR-1 slot engine at equal concurrency (the paged page budget is
+    sized to the workload's live working set, so it holds fewer KV bytes
+    for the same batch), and for the paged engine with 25% of experts
+    pruned at runtime (``expert_mask``) — STUN's serving payoff.
+
+Writes every metric to ``BENCH_serving.json`` (uploaded as a CI artifact)
+so trend reporting has machine-readable data per commit.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 
 import jax
@@ -28,6 +35,11 @@ from repro.serving import Request, ServeEngine
 
 S_PROMPT = 128
 PREFILL_CHUNK = 32
+PAGE_SIZE = 16
+SERVE_MAX_LEN = 80
+SERVE_MAX_BATCH = 4
+SERVE_CHUNK = 16
+JSON_OUT = "BENCH_serving.json"
 
 
 def _proxy_cfg():
@@ -79,39 +91,99 @@ def bench_prefill(params, cfg):
          f"dispatches={chunked_dispatches} chunk={PREFILL_CHUNK} "
          f"speedup={dt_seed / dt_chunked:.1f}x")
     assert chunked_dispatches == S_PROMPT // PREFILL_CHUNK
-    return dt_seed / dt_chunked
+    return {
+        "seed_dispatches": seed_dispatches,
+        "chunked_dispatches": chunked_dispatches,
+        "seed_s": dt_seed,
+        "chunked_s": dt_chunked,
+        "speedup": dt_seed / dt_chunked,
+    }
 
 
-def bench_serving(params, cfg, expert_mask=None, tag="dense"):
+N_REQUESTS = 12
+
+
+def _workload(cfg):
     rs = np.random.RandomState(1)
-    lens = rs.randint(8, 48, size=12)
-    news = rs.randint(4, 16, size=12)
-    reqs = [Request(rs.randint(0, cfg.vocab, l).astype(np.int32), int(n))
+    lens = rs.randint(8, 48, size=N_REQUESTS)
+    news = rs.randint(4, 16, size=N_REQUESTS)
+    return [Request(rs.randint(0, cfg.vocab, l).astype(np.int32), int(n))
             for l, n in zip(lens, news)]
-    eng = ServeEngine(params, cfg, max_len=80, max_batch=4,
-                      prefill_chunk=16, expert_mask=expert_mask)
-    eng.generate(reqs)                                       # compile
-    eng.reset_stats()
+
+
+def bench_engine(params, cfg, *, kv_layout="paged", expert_mask=None,
+                 tag="paged"):
+    reqs = _workload(cfg)
+    kwargs = {}
+    if kv_layout == "paged":
+        # budget for the live working set: every lane can hold the
+        # workload's biggest request, nothing is provisioned for max_len
+        biggest = max(-(-(len(r.prompt) + r.max_new_tokens) // PAGE_SIZE)
+                      for r in reqs)
+        kwargs = {"page_size": PAGE_SIZE,
+                  "page_budget": SERVE_MAX_BATCH * biggest}
+    eng = ServeEngine(params, cfg, max_len=SERVE_MAX_LEN,
+                      max_batch=SERVE_MAX_BATCH, prefill_chunk=SERVE_CHUNK,
+                      expert_mask=expert_mask, kv_layout=kv_layout,
+                      **kwargs)
+    eng.generate([Request(r.prompt, r.max_new_tokens) for r in reqs])
+    eng.reset_stats()                                        # drop compile
     t0 = time.monotonic()
-    outs = eng.generate(reqs)
+    outs = eng.generate([Request(r.prompt, r.max_new_tokens) for r in reqs])
     dt = time.monotonic() - t0
     n_tok = sum(len(o) for o in outs)
     stats = eng.latency_stats()
+    pages_per_req = (eng.pages_allocated / eng.requests_admitted
+                     if eng.requests_admitted else 0.0)
+    metrics = {
+        "kv_layout": kv_layout,
+        "tok_per_s": n_tok / dt,
+        "wall_s": dt,
+        "p50_latency_s": stats["p50_latency_s"],
+        "p95_latency_s": stats["p95_latency_s"],
+        "prefill_dispatches": eng.prefill_dispatches,
+        "decode_dispatches": eng.decode_dispatches,
+        "pages_per_request": pages_per_req,
+        "kv_bytes_resident": eng.cache.bytes_resident(),
+    }
     emit(f"serve_{tag}", dt * 1e6,
-         f"tok/s={n_tok / dt:.1f} p50={stats['p50_latency_s'] * 1e3:.0f}ms "
-         f"p95={stats['p95_latency_s'] * 1e3:.0f}ms")
-    return n_tok / dt
+         f"tok/s={metrics['tok_per_s']:.1f} "
+         f"p50={stats['p50_latency_s'] * 1e3:.0f}ms "
+         f"p95={stats['p95_latency_s'] * 1e3:.0f}ms "
+         f"decode_disp={eng.decode_dispatches} "
+         f"pages/req={pages_per_req:.1f} "
+         f"kv_bytes={metrics['kv_bytes_resident']}")
+    return metrics
 
 
 def main():
     cfg = _proxy_cfg()
     params = _params(cfg)
-    speedup = bench_prefill(params, cfg)
-    bench_serving(params, cfg, tag="dense")
+    results = {"workload": {"n_requests": N_REQUESTS,
+                            "max_batch": SERVE_MAX_BATCH,
+                            "max_len": SERVE_MAX_LEN,
+                            "prefill_chunk": SERVE_CHUNK,
+                            "page_size": PAGE_SIZE}}
+    results["prefill"] = bench_prefill(params, cfg)
+    results["engines"] = {
+        "paged": bench_engine(params, cfg, tag="paged"),
+        "slot": bench_engine(params, cfg, kv_layout="slot", tag="slot"),
+    }
     mask = np.ones(cfg.n_experts, np.float32)
     mask[-cfg.n_experts // 4:] = 0.0                         # 25% pruned
-    bench_serving(params, cfg, expert_mask=mask, tag="stun_pruned_25pct")
-    emit("serve_prefill_speedup", 0.0, f"{speedup:.1f}x (target >=5x)")
+    results["engines"]["paged_stun_pruned_25pct"] = bench_engine(
+        params, cfg, expert_mask=mask, tag="paged_stun_pruned_25pct")
+
+    paged, slot = results["engines"]["paged"], results["engines"]["slot"]
+    ratio = paged["kv_bytes_resident"] / slot["kv_bytes_resident"]
+    emit("serve_paged_vs_slot", 0.0,
+         f"tok/s={paged['tok_per_s']:.1f}vs{slot['tok_per_s']:.1f} "
+         f"kv_bytes_ratio={ratio:.2f} (target <1)")
+    emit("serve_prefill_speedup", 0.0,
+         f"{results['prefill']['speedup']:.1f}x (target >=5x)")
+    with open(JSON_OUT, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {JSON_OUT}")
 
 
 if __name__ == "__main__":

@@ -19,10 +19,13 @@ expert_mask=, weight_masks=, seed=)`` is a continuous-batching engine:
   * Prompts are prefilled in fixed-size chunks — one jitted dispatch per
     ``prefill_chunk`` tokens (NOT per token), writing K/V straight into
     the request's cache slot with padded positions masked out.
-  * Decode is one jitted call per step for *all* in-flight requests
-    (slot-based KV cache, per-request lengths); each request stops at its
-    own EOS / ``max_new_tokens`` and its slot is immediately re-used by
-    the next queued request.
+  * Decode is one jitted call per step for *all* in-flight requests —
+    K/V lives in a paged cache (fixed-size pages + per-lane page tables,
+    fused Pallas paged-decode attention on TPU), so admission is gated on
+    free pages rather than whole ``max_len`` slots; each request stops at
+    its own EOS / ``max_new_tokens`` and its pages immediately return to
+    the pool for the next queued request (``kv_layout="slot"`` keeps the
+    legacy slot-granular cache).
   * Pruned serving: pass the compacted STUN checkpoint directly, or keep
     the full checkpoint and pass ``expert_mask`` ([E] or [L, E]) /
     ``weight_masks`` (stage-2 masks from ``sparsify_model``) to apply

@@ -11,5 +11,6 @@ from repro.kernels.block_sparse_matmul import (  # noqa: F401
 )
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.moe_gmm import moe_gmm  # noqa: F401
+from repro.kernels.paged_decode_attention import paged_decode_attention  # noqa: F401
 from repro.kernels.rglru_scan import rglru_scan  # noqa: F401
 from repro.kernels.wanda_score import wanda_mask_apply  # noqa: F401

@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.block_sparse_matmul import block_sparse_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.wanda_score import wanda_mask_apply
 
@@ -33,6 +34,24 @@ def attention_op(q, k, v, *, causal=True, window=None, force=None):
         return flash_attention(q, k, v, causal=causal, window=window,
                                interpret=True, block_q=64, block_k=64)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def paged_attention_op(q, k_pages, v_pages, page_tables, lengths, *,
+                       window=None, softcap=None, force=None):
+    """Paged ragged-decode attention: q [B,1,H,hd] vs page pools
+    [n_pages, ps, K, hd] through per-lane page tables [B, max_pages]."""
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode == "pallas":
+        return paged_decode_attention(q, k_pages, v_pages, page_tables,
+                                      lengths, window=window,
+                                      softcap=softcap)
+    if mode == "interpret":
+        return paged_decode_attention(q, k_pages, v_pages, page_tables,
+                                      lengths, window=window,
+                                      softcap=softcap, interpret=True)
+    return ref.paged_decode_attention_ref(q, k_pages, v_pages, page_tables,
+                                          lengths, window=window,
+                                          softcap=softcap)
 
 
 def gmm_op(buf, w, *, force=None):

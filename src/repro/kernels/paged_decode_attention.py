@@ -1,0 +1,140 @@
+"""Pallas TPU paged ragged-decode attention (one query token per lane).
+
+The serving engine stores K/V in fixed-size pages ([n_pages, page_size,
+K, hd] pools) and hands each batch lane a page-table row of physical page
+ids.  This kernel fuses the page-table gather into the attention loop:
+grid (B, kv_heads, pages_per_lane) with the page axis minor (sequential),
+scalar-prefetched ``page_tables``/``lengths`` drive the BlockSpec index
+maps, so page ``i`` of lane ``b`` is DMA'd straight from its physical
+location — no [B, T, K, hd] gather is ever materialized in HBM (the jnp
+path's bandwidth bottleneck at high concurrency).
+
+Raggedness is per-row: ``lengths[b]`` masks both whole pages (``pl.when``
+skip, so a short request costs only its own pages' FLOPs) and rows inside
+the final partial page (iota mask).  Online softmax (m, l, acc in VMEM
+scratch) carries state across page iterations exactly as
+``flash_attention.py`` does across kv blocks for prefill.
+
+VMEM per step (G=8 q heads/group, ps=64, hd=128, fp32): q+k+v+acc
+≈ 4·64·128·4 ≈ 130 KB — far under the ~16 MB v5e budget, so pages
+double-buffer freely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, page_size, n_pg, window,
+            softcap):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    # page-level skip: pages entirely past the valid rows (or entirely
+    # older than the sliding window) are never computed
+    needed = i * page_size < length
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, (i + 1) * page_size > length - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)         # [ps, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        G = s.shape[0]
+        tpos = i * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (G, page_size), 1)
+        valid = tpos < length
+        if window is not None:
+            valid = jnp.logical_and(valid, tpos >= length - window)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # [G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i == n_pg - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_tables, lengths, *,
+                           window=None, softcap=None, interpret=False):
+    """q [B, 1, H, hd]; k/v_pages [n_pages, ps, K, hd]; page_tables
+    [B, max_pages] int32; lengths [B] int32 (valid rows per lane, current
+    token's K/V already written).  Returns [B, 1, H, hd].
+
+    Lane ``b``'s logical rows [i*ps, (i+1)*ps) live in physical page
+    ``page_tables[b, i]``; entries past ``ceil(lengths[b]/ps)`` may point
+    anywhere (the engine's sentinel page) — they are skipped/masked.
+    Rows with ``lengths[b] == 0`` produce zeros (nothing to attend).
+    """
+    B, _, H, hd = q.shape
+    n_pages, ps, K, _ = k_pages.shape
+    G = H // K
+    P = page_tables.shape[1]
+    scale = hd ** -0.5
+    qg = q.reshape(B, K, G, hd)
+
+    kernel = functools.partial(_kernel, scale=scale, page_size=ps, n_pg=P,
+                               window=window, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, k, i, tbl, lens: (b, k, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, k, i, tbl, lens: (tbl[b, i], 0, k, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, k, i, tbl, lens: (tbl[b, i], 0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, k, i, tbl, lens: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_tables, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, 1, H, hd)

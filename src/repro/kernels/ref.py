@@ -24,6 +24,41 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
                       ).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, page_tables, lengths, *,
+                               window=None, softcap=None):
+    """q [B,1,H,hd]; k/v_pages [n_pages,ps,K,hd]; page_tables [B,max_pages];
+    lengths [B] (valid rows per lane, current token already written).
+
+    Gathers each lane's pages into logical order and applies exactly the
+    math of ``models.layers.attention_decode`` — the serving engine's CPU
+    path, so paged and slot engines are token-identical there.  One edge
+    differs from the kernel: a lane with ``lengths[b] == 0`` (nothing
+    valid) yields a softmax over all-masked rows here vs. zeros in the
+    kernel; callers never attend such lanes.
+    """
+    B, _, H, hd = q.shape
+    ps, K = k_pages.shape[1], k_pages.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    # [B, max_pages, ps, K, hd] -> logical [B, T, K, hd]
+    k_cache = k_pages[page_tables].reshape(B, -1, K, hd)
+    v_cache = v_pages[page_tables].reshape(B, -1, K, hd)
+    T = k_cache.shape[1]
+    qh = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qh,
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    t_idx = jnp.arange(T)[None]
+    valid = t_idx < lengths[:, None]
+    if window is not None:
+        valid &= t_idx >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
 def moe_gmm_ref(buf, w):
     """buf [E,C,D] @ w [E,D,F] -> [E,C,F] (per-expert matmul)."""
     return jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),

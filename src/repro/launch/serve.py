@@ -30,6 +30,16 @@ def main():
                     help="cache slots (concurrent in-flight requests)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens per prefill dispatch")
+    ap.add_argument("--kv-layout", choices=["paged", "slot"],
+                    default="paged",
+                    help="paged KV cache (default) or the legacy "
+                         "slot-granular layout")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per page (paged layout)")
+    ap.add_argument("--page-budget", type=int, default=None,
+                    help="total KV pages; default fits max-batch requests "
+                         "of max-len — set lower to pack short requests "
+                         "into less HBM")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 = softmax sampling")
     ap.add_argument("--eos-id", type=int, default=None)
@@ -56,13 +66,21 @@ def main():
             for _ in range(args.n_requests)]
     eng = ServeEngine(params, cfg, max_len=args.max_len,
                       max_batch=args.max_batch,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      kv_layout=args.kv_layout, page_size=args.page_size,
+                      page_budget=args.page_budget)
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req{i}: {o.tolist()}")
     stats = eng.latency_stats()
-    if stats:
-        print("latency:", {k: f"{v * 1e3:.1f}ms" for k, v in stats.items()})
+    lat = {k: f"{v * 1e3:.1f}ms" for k, v in stats.items()
+           if k.endswith("_s")}
+    gauges = {k: round(v, 3) for k, v in stats.items()
+              if not k.endswith("_s")}
+    if lat:
+        print("latency:", lat)
+    if gauges:
+        print("cache:", gauges)
     print(f"dispatches: prefill={eng.prefill_dispatches} "
           f"decode={eng.decode_dispatches}")
 

@@ -2,10 +2,14 @@ from repro.models.transformer import (  # noqa: F401
     abstract_params,
     cache_specs,
     decode_step,
+    decode_step_paged,
     decode_step_ragged,
     forward,
     init_cache,
+    init_paged_cache,
     loss_fn,
+    paged_cache_specs,
     prefill_step,
+    prefill_step_paged,
 )
 from repro.models import param  # noqa: F401

@@ -23,6 +23,7 @@ from repro.models import param as pm
 from repro.models.layers import (apply_rope, attention, attention_decode,
                                  rmsnorm, rmsnorm_bf16grad, rope_tables,
                                  swiglu)
+from repro.kernels.ops import paged_attention_op
 from repro.models.moe import moe_apply
 from repro.models.recurrent import recurrent_block
 from repro.models.ssm import mamba_mixer
@@ -532,6 +533,33 @@ def init_cache(cfg, batch_size, max_len):
         cache_specs(cfg, batch_size, max_len), is_leaf=pm.is_spec)
 
 
+def paged_cache_specs(cfg: ModelConfig, n_pages: int, page_size: int):
+    """ParamSpec tree for the paged decode cache: K/V pools
+    [L, n_pages, page_size, K, hd] addressed through per-lane page tables
+    (serving/kv_cache.PagedKVCache owns the tables; page 0 is the
+    engine's sentinel).  Attention families only."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"paged KV cache requires an attention cache; "
+            f"family={cfg.family!r} keeps recurrent state instead")
+    L, K, hd = cfg.n_layers, cfg.kv_eff, cfg.head_dim
+    kvdt = cfg.kv_cache_dtype or cfg.dtype
+    return {
+        "k": pm.spec((L, n_pages, page_size, K, hd),
+                     ("layers", None, None, "kv_heads", "head_dim"),
+                     init="zeros", dtype=kvdt),
+        "v": pm.spec((L, n_pages, page_size, K, hd),
+                     ("layers", None, None, "kv_heads", "head_dim"),
+                     init="zeros", dtype=kvdt),
+    }
+
+
+def init_paged_cache(cfg, n_pages, page_size):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        paged_cache_specs(cfg, n_pages, page_size), is_leaf=pm.is_spec)
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len, *,
                 mesh=None, expert_mask=None):
     """One decode step. tokens [B,1] int32; cur_len scalar int32 (uniform).
@@ -668,6 +696,170 @@ def decode_step_ragged(params, cfg: ModelConfig, cache, tokens, seq_lens, *,
     h = _norm(h, params["final_norm"], cfg)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache
+
+
+def decode_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
+                      page_tables, *, mesh=None, expert_mask=None):
+    """One continuous-batching decode step over the paged KV cache.
+
+    tokens [B,1] int32 — one token per batch lane; seq_lens [B] int32 —
+    valid rows already in each lane; page_tables [B, max_pages] int32 —
+    physical page of each lane's logical page (sentinel page 0 where
+    unassigned).  Lane ``b``'s new K/V is scattered to flat row
+    ``page_tables[b, seq_lens[b]//ps]*ps + seq_lens[b]%ps`` of the
+    [n_pages*ps, K, hd] pool, RoPE'd at position ``seq_lens[b]``, and the
+    lane attends ``seq_lens[b]+1`` logical rows through the fused paged
+    kernel (jnp gather reference off-TPU).  Inactive lanes carry an
+    all-sentinel table row, so their placeholder write lands in page 0 —
+    allocated pages are never dirtied by idle lanes (unlike the slot
+    layout, no prefill-from-row-0 invariant is needed).
+
+    Returns (logits [B, padded_vocab], new_cache).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"paged decode requires a KV cache; family={cfg.family!r}")
+    h = params["embed"][tokens]                      # [B,1,D]
+    B = tokens.shape[0]
+    pos = seq_lens[:, None]                          # [B,1] per-request
+    sin, cos = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    cache_len = seq_lens + 1
+    em = _norm_expert_mask(cfg, expert_mask)
+    n_pages, ps = cache["k"].shape[1], cache["k"].shape[2]
+    widx = page_tables[jnp.arange(B), seq_lens // ps] * ps + seq_lens % ps
+
+    def body(h, inp):
+        if em is None:
+            lp, kc, vc = inp
+            em_row = None
+        else:
+            lp, kc, vc, em_row = inp
+        x = _norm(h, lp["ln1"], cfg)
+        q, k, v, wo = _qkv_proj(x, lp["attn"], cfg, sin, cos)
+        kshape = kc.shape                            # [n_pages, ps, K, hd]
+        kc = kc.reshape(n_pages * ps, *kshape[2:])
+        vc = vc.reshape(n_pages * ps, *kshape[2:])
+        kc = kc.at[widx].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[widx].set(v[:, 0].astype(vc.dtype))
+        kc = kc.reshape(kshape)
+        vc = vc.reshape(kshape)
+        o = paged_attention_op(q, kc, vc, page_tables, cache_len,
+                               window=cfg.local_window,
+                               softcap=cfg.attn_logit_softcap)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, wo)
+        x2 = _norm(h, lp["ln2"], cfg)
+        if cfg.family == "moe":
+            h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh,
+                              expert_mask=em_row)
+        else:
+            h = h + _mlp_block(x2, lp["mlp"])
+        return h, (kc, vc)
+
+    if cfg.scan_layers:
+        xs = (params["layers"], cache["k"], cache["v"])
+        if em is not None:
+            xs = xs + (em,)
+        h, (nk, nv) = lax.scan(body, h, xs)
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            inp = (params["layers"][str(i)], cache["k"][i], cache["v"][i])
+            if em is not None:
+                inp = inp + (em[i],)
+            h, (nk_, nv_) = body(h, inp)
+            ks.append(nk_)
+            vs.append(nv_)
+        nk, nv = jnp.stack(ks), jnp.stack(vs)
+    new_cache = {"k": nk, "v": nv}
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache
+
+
+def prefill_step_paged(params, cfg: ModelConfig, cache, tokens, page_row,
+                       start, *, mesh=None, expert_mask=None):
+    """Single-dispatch chunked prefill writing K/V through a page table.
+
+    Processes one fixed-size chunk of one request's prompt: ``tokens``
+    [1, C] int32 (right-padded), ``page_row`` [max_pages] int32 (the
+    lane's page-table row; sentinel 0 past the reserved pages), ``start``
+    scalar int32 (absolute position of the chunk's first token — a
+    multiple of C).  Row ``p`` of the chunk lands at flat pool row
+    ``page_row[p//ps]*ps + p%ps``; padded positions past the reservation
+    fall through to the sentinel page and are never attended (the chunk
+    attends its lane's gathered logical rows [0, start+C) under the same
+    causal + length mask as the slot path).
+
+    Returns (logits [1, C, padded_vocab], new_cache).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"chunked prefill requires a KV cache; family={cfg.family!r}")
+    h = params["embed"][tokens]                      # [1,C,D]
+    C = h.shape[1]
+    q_pos = start + jnp.arange(C)                    # [C]
+    sin, cos = rope_tables(q_pos, cfg.head_dim, cfg.rope_theta)
+    em = _norm_expert_mask(cfg, expert_mask)
+    n_pages, ps = cache["k"].shape[1], cache["k"].shape[2]
+    widx = page_row[q_pos // ps] * ps + q_pos % ps             # [C]
+    lane_idx = (page_row[:, None] * ps
+                + jnp.arange(ps)[None, :]).reshape(-1)         # [T]
+    T = lane_idx.shape[0]
+
+    def body(h, inp):
+        if em is None:
+            lp, kc, vc = inp
+            em_row = None
+        else:
+            lp, kc, vc, em_row = inp
+        x = _norm(h, lp["ln1"], cfg)
+        q, k, v, wo = _qkv_proj(x, lp["attn"], cfg, sin, cos)
+        kshape = kc.shape
+        kc = kc.reshape(n_pages * ps, *kshape[2:])
+        vc = vc.reshape(n_pages * ps, *kshape[2:])
+        kc = kc.at[widx].set(k[0].astype(kc.dtype))
+        vc = vc.at[widx].set(v[0].astype(vc.dtype))
+        # gather the lane's logical view (chunk included) and attend the
+        # written prefix under causal + kv_len masking
+        ks = kc[lane_idx][None]                      # [1,T,K,hd]
+        vs = vc[lane_idx][None]
+        o = attention(q, ks, vs, q_pos, jnp.arange(T), impl=cfg.attn_impl,
+                      window=cfg.local_window, softcap=cfg.attn_logit_softcap,
+                      chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                      kv_len=start + C)
+        mix = jnp.einsum("bshk,hkd->bsd", o, wo)
+        h = h + mix
+        x2 = _norm(h, lp["ln2"], cfg)
+        if cfg.family == "moe":
+            h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh,
+                              expert_mask=em_row)
+        else:
+            h = h + _mlp_block(x2, lp["mlp"])
+        return h, (kc.reshape(kshape), vc.reshape(kshape))
+
+    if cfg.scan_layers:
+        xs = (params["layers"], cache["k"], cache["v"])
+        if em is not None:
+            xs = xs + (em,)
+        h, (nk, nv) = lax.scan(body, h, xs)
+    else:
+        ks_, vs_ = [], []
+        for i in range(cfg.n_layers):
+            inp = (params["layers"][str(i)], cache["k"][i], cache["v"][i])
+            if em is not None:
+                inp = inp + (em[i],)
+            h, (nk_, nv_) = body(h, inp)
+            ks_.append(nk_)
+            vs_.append(nv_)
+        nk, nv = jnp.stack(ks_), jnp.stack(vs_)
+    new_cache = {"k": nk, "v": nv}
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
     return logits, new_cache
 
 

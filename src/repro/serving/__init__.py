@@ -3,5 +3,5 @@ from repro.serving.engine import (  # noqa: F401
     apply_weight_masks,
     greedy_generate,
 )
-from repro.serving.kv_cache import SlotKVCache  # noqa: F401
+from repro.serving.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serving.scheduler import Request, RequestState, Scheduler  # noqa: F401

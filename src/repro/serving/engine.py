@@ -1,22 +1,28 @@
-"""Continuous-batching serving engine: chunked prefill + slot-based decode.
+"""Continuous-batching serving engine: chunked prefill + paged-KV decode.
 
 The serving path is where STUN's wins land: a 25%-expert-pruned MoE has a
 proportionally smaller EP all-to-all and per-chip weight set, and the
 block-sparse kernel exploits stage-2 masks.  The engine:
 
   * **chunked prefill** — an S-token prompt is replayed through
-    ``models.prefill_step`` in fixed-size chunks, each a single jitted
-    dispatch that computes the chunk forward, writes its K/V into the
-    request's cache slot, and masks padded / unwritten positions.  Cost is
-    ``ceil(S/chunk)`` dispatches, independent of S (the seed engine paid
-    one decode dispatch per prompt token and attended its left-pads).
-  * **slot-based KV cache** (`kv_cache.SlotKVCache`) — per-request
-    ``seq_len``, alloc/free, and admission of queued requests into slots
-    vacated mid-flight by finished requests.
+    ``models.prefill_step_paged`` in fixed-size chunks, each a single
+    jitted dispatch that computes the chunk forward, writes its K/V
+    through the lane's page table, and masks padded / unwritten
+    positions.  Cost is ``ceil(S/chunk)`` dispatches, independent of S.
+  * **paged KV cache** (`kv_cache.PagedKVCache`, the default layout) —
+    K/V in fixed-size pages with per-lane page tables; admission is
+    page-budget-gated (a request needs pages for its whole
+    prompt + max_new_tokens lifetime, not a whole ``max_len`` slot), and
+    a finished request's page list returns to the pool immediately.
+    Decode attention runs through the fused Pallas ragged paged kernel
+    (`kernels.paged_decode_attention`) on TPU, its jnp gather reference
+    elsewhere.  ``kv_layout="slot"`` keeps the PR-1 slot-granular cache —
+    the reference the paged path is tested token-identical against.
   * **scheduler** (`scheduler.Scheduler`) — FIFO admission, per-request
     EOS / ``max_new_tokens`` termination (no post-EOS tokens, no decode
     steps burned on finished requests), per-request greedy or temperature
-    sampling.
+    sampling.  Requests that can never fit the cache are rejected at
+    ``submit()`` with a ValueError rather than corrupting rows later.
   * **pruned-model plumbing** — a runtime ``expert_mask`` ([E] or [L, E])
     flows into every prefill/decode dispatch, and stage-2 unstructured
     masks from ``core.unstructured.sparsify_model`` can be re-applied to
@@ -34,8 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, decode_step_ragged, init_cache, prefill_step
-from repro.serving.kv_cache import SlotKVCache
+from repro.models import (decode_step, decode_step_paged, decode_step_ragged,
+                          init_cache, prefill_step, prefill_step_paged)
+from repro.serving.kv_cache import PagedKVCache, SlotKVCache
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -79,7 +86,10 @@ class ServeEngine:
     def __init__(self, params, cfg, max_len: int = 512, mesh=None,
                  max_batch: int = 8, prefill_chunk: int = 32,
                  expert_mask=None, weight_masks: Optional[Dict] = None,
-                 seed: int = 0):
+                 seed: int = 0, kv_layout: str = "paged",
+                 page_size: int = 16, page_budget: Optional[int] = None):
+        if kv_layout not in ("paged", "slot"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if weight_masks:
             params = apply_weight_masks(params, cfg, weight_masks)
         self.params = params
@@ -88,35 +98,50 @@ class ServeEngine:
         self.mesh = mesh
         self.max_batch = max_batch
         self.prefill_chunk = min(prefill_chunk, max_len)
-        self.scheduler = Scheduler()
+        self.kv_layout = kv_layout
+        self.scheduler = Scheduler(max_request_tokens=max_len)
         self.prefill_dispatches = 0      # jitted prefill calls (bench hook)
         self.decode_dispatches = 0
+        self.requests_admitted = 0
+        self.pages_allocated = 0         # lifetime pages over all admissions
         self._key = jax.random.PRNGKey(seed)
         self._attn_cache = cfg.family not in ("ssm", "hybrid")
 
         em = None if expert_mask is None else jnp.asarray(expert_mask,
                                                           jnp.float32)
         if self._attn_cache:
-            # round the cache up to whole prefill chunks: the last chunk of a
-            # max_len-long prompt may extend past max_len, and an out-of-range
-            # dynamic_update_slice would clamp and silently corrupt earlier
-            # rows
+            # round the lane capacity up to whole prefill chunks: the last
+            # chunk of a max_len-long prompt may extend past max_len, and
+            # its padded rows must land in maskable (slot) or sentinel
+            # (paged) storage rather than corrupt earlier rows
             C = self.prefill_chunk
-            self.cache = SlotKVCache(cfg, max_batch,
-                                     ((max_len + C - 1) // C) * C)
+            lane_len = ((max_len + C - 1) // C) * C
             # donate the cache arg: the engine always replaces cache.tree
             # with the result, and without donation every dispatch copies
-            # the whole multi-slot K/V tree.  CPU ignores donation with a
-            # warning, so only donate on accelerators.
+            # the whole K/V pool.  CPU ignores donation with a warning, so
+            # only donate on accelerators.
             donate = (1,) if jax.default_backend() != "cpu" else ()
-            self._prefill = jax.jit(
-                lambda p, c, t, slot, start: prefill_step(
-                    p, cfg, c, t, slot, start, mesh=mesh, expert_mask=em),
-                donate_argnums=donate)
-            self._decode = jax.jit(
-                lambda p, c, t, sl: decode_step_ragged(
-                    p, cfg, c, t, sl, mesh=mesh, expert_mask=em),
-                donate_argnums=donate)
+            if kv_layout == "paged":
+                self.cache = PagedKVCache(cfg, max_batch, lane_len,
+                                          page_size, page_budget)
+                self._prefill = jax.jit(
+                    lambda p, c, t, row, start: prefill_step_paged(
+                        p, cfg, c, t, row, start, mesh=mesh, expert_mask=em),
+                    donate_argnums=donate)
+                self._decode = jax.jit(
+                    lambda p, c, t, sl, tbl: decode_step_paged(
+                        p, cfg, c, t, sl, tbl, mesh=mesh, expert_mask=em),
+                    donate_argnums=donate)
+            else:
+                self.cache = SlotKVCache(cfg, max_batch, lane_len)
+                self._prefill = jax.jit(
+                    lambda p, c, t, slot, start: prefill_step(
+                        p, cfg, c, t, slot, start, mesh=mesh, expert_mask=em),
+                    donate_argnums=donate)
+                self._decode = jax.jit(
+                    lambda p, c, t, sl: decode_step_ragged(
+                        p, cfg, c, t, sl, mesh=mesh, expert_mask=em),
+                    donate_argnums=donate)
         else:
             self.cache = None
             self._decode_uniform = jax.jit(
@@ -128,13 +153,27 @@ class ServeEngine:
     # public API
     # ------------------------------------------------------------------
     def submit(self, request: Request) -> int:
-        """Queue a request; returns its id.  ``run()`` drains the queue."""
+        """Queue a request; returns its id.  ``run()`` drains the queue.
+
+        Raises ValueError for requests that could never be admitted:
+        empty prompts, ``prompt + max_new_tokens`` past ``max_len``, or —
+        on the paged layout — past the whole page budget.
+        """
         if len(request.prompt) < 1:
             raise ValueError("empty prompt")
-        if len(request.prompt) + request.max_new_tokens > self.max_len:
+        total = len(request.prompt) + request.max_new_tokens
+        if total > self.max_len:
             raise ValueError(
                 f"prompt({len(request.prompt)}) + max_new_tokens"
                 f"({request.max_new_tokens}) exceeds max_len={self.max_len}")
+        if isinstance(self.cache, PagedKVCache):
+            need = self.cache.pages_needed(total)
+            if need > self.cache.page_budget:
+                raise ValueError(
+                    f"request needs {need} pages "
+                    f"({total} tokens at page_size="
+                    f"{self.cache.page_size}) but the cache's whole page "
+                    f"budget is {self.cache.page_budget}")
         return self.scheduler.submit(request, time.monotonic())
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
@@ -152,7 +191,12 @@ class ServeEngine:
             self.step()
 
     def latency_stats(self) -> Dict[str, float]:
-        return self.scheduler.latencies()
+        """p50/p95 latency percentiles plus cache-utilization gauges
+        (pages in use / total, internal fragmentation)."""
+        stats = self.scheduler.latencies()
+        if self.cache is not None:
+            stats.update(self.cache.gauges())
+        return stats
 
     def reset_stats(self):
         """Clear latency history and dispatch counters (e.g. after a
@@ -160,17 +204,27 @@ class ServeEngine:
         self.scheduler.reset_latencies()
         self.prefill_dispatches = 0
         self.decode_dispatches = 0
+        self.requests_admitted = 0
+        self.pages_allocated = 0
 
     # ------------------------------------------------------------------
     # continuous-batching loop (attention families)
     # ------------------------------------------------------------------
     def step(self):
-        """One engine iteration: admit into free slots, then one batched
-        ragged decode step for every active slot."""
+        """One engine iteration: admit while the page budget (and a lane)
+        allows, then one batched ragged decode step for every active
+        lane."""
         sched, cache = self.scheduler, self.cache
-        while sched.has_pending and cache.n_free:
-            slot = cache.alloc()
+        while sched.has_pending:
+            nxt = sched.pending[0]
+            total = len(nxt.req.prompt) + nxt.req.max_new_tokens
+            slot = cache.alloc(total)
+            if slot is None:           # FIFO: wait for pages/lane to free
+                break
             st = sched.admit(slot)
+            self.requests_admitted += 1
+            if isinstance(cache, PagedKVCache):
+                self.pages_allocated += cache.pages_needed(total)
             self._prefill_into_slot(st)
         if not sched.has_active:
             return
@@ -179,9 +233,15 @@ class ServeEngine:
         active = list(sched.active.values())
         for st in active:
             tokens[st.slot, 0] = st.tokens[-1]
-        logits, cache.tree = self._decode(self.params, cache.tree,
-                                          jnp.asarray(tokens),
-                                          cache.seq_lens_device())
+        if isinstance(cache, PagedKVCache):
+            logits, cache.tree = self._decode(self.params, cache.tree,
+                                              jnp.asarray(tokens),
+                                              cache.seq_lens_device(),
+                                              cache.page_table_device())
+        else:
+            logits, cache.tree = self._decode(self.params, cache.tree,
+                                              jnp.asarray(tokens),
+                                              cache.seq_lens_device())
         self.decode_dispatches += 1
         for st in active:
             cache.seq_lens[st.slot] += 1
@@ -192,28 +252,33 @@ class ServeEngine:
                 cache.free(st.slot)
 
     def _prefill_into_slot(self, st):
-        """Chunked prefill of ``st.req.prompt`` into cache slot ``st.slot``
+        """Chunked prefill of ``st.req.prompt`` into lane ``st.slot``
         + sample the first generated token from the last-prompt-token
         logits."""
+        cache = self.cache
         prompt = np.asarray(st.req.prompt, np.int32)
         S, C = len(prompt), self.prefill_chunk
         n_pad = ((S + C - 1) // C) * C
-        assert n_pad <= self.cache.max_len, (n_pad, self.cache.max_len)
+        paged = isinstance(cache, PagedKVCache)
+        if paged:
+            page_row = cache.page_table_device(st.slot)
+        else:
+            assert n_pad <= cache.max_len, (n_pad, cache.max_len)
         buf = np.zeros(n_pad, np.int32)
         buf[:S] = prompt
         logits = None
         for c0 in range(0, n_pad, C):
-            logits, self.cache.tree = self._prefill(
-                self.params, self.cache.tree,
-                jnp.asarray(buf[None, c0: c0 + C]),
-                jnp.int32(st.slot), jnp.int32(c0))
+            ref = page_row if paged else jnp.int32(st.slot)
+            logits, cache.tree = self._prefill(
+                self.params, cache.tree,
+                jnp.asarray(buf[None, c0: c0 + C]), ref, jnp.int32(c0))
             self.prefill_dispatches += 1
-        self.cache.seq_lens[st.slot] = S
+        cache.seq_lens[st.slot] = S
         # last prompt token always lives in the final chunk
         last = logits[0, (S - 1) - (n_pad - C)][None]         # [1, Vp]
         tok = np.asarray(self._sample_batch(last, [st]))[0]
         if self.scheduler.on_token(st.rid, int(tok), time.monotonic()):
-            self.cache.free(st.slot)
+            cache.free(st.slot)
 
     # ------------------------------------------------------------------
     # sampling

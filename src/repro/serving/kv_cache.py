@@ -1,31 +1,160 @@
-"""Slot-based KV cache for continuous batching.
+"""KV caches for continuous batching: page-granular (default) and the
+legacy slot-granular layout.
 
-A fixed pool of ``n_slots`` batch lanes over the model's decode cache
-([L, B, T, K, hd] K/V arrays).  Each slot carries its own ``seq_len`` —
-the number of valid cache rows — so requests of different lengths share
-one jitted decode step, and a slot vacated by a finished request can be
-re-filled by a newly admitted request mid-flight without touching the
-other lanes (prefill simply overwrites the slot's rows from position 0).
+``PagedKVCache`` stores K/V as [L, n_pages, page_size, K, hd] pools plus a
+per-lane page table [n_slots, max_pages]: lane ``b``'s logical rows
+[i*ps, (i+1)*ps) live in physical page ``page_table[b, i]``.  Pages — not
+whole ``max_len`` slots — are the allocation unit, so many short requests
+pack densely into the same pool a few long ones would use, and the pool
+budget (``n_pages``) can be provisioned for the live-token working set
+rather than ``n_slots * max_len`` worst case.
+
+Paged invariants (asserted by tests/test_paged_serving.py):
+  * **Page 0 is a sentinel** — never allocated to a request.  Free lanes'
+    table rows and table entries past a lane's reservation all point at
+    it, so the batched decode step's placeholder writes for idle lanes
+    and prefill's chunk-padding writes land in page 0, which is never
+    attended (length masking).  Allocated pages are therefore never
+    dirtied by another lane — the slot layout's "free slots are dirty,
+    prefill must rewrite row 0 first" invariant is gone by construction.
+  * **No page is owned by two lanes**: ``alloc`` hands out each non-
+    sentinel page to at most one lane until ``free`` returns it.
+  * **Reservation covers the request lifetime**: admission reserves
+    ``ceil((prompt + max_new_tokens)/ps)`` pages up front, so a decode
+    step can never run out of pages mid-flight (the engine has no
+    preemption).  The admission *gate* is page availability, not lane
+    count alone.
 
 The device arrays live in ``tree`` and are updated functionally by the
 jitted prefill/decode calls; this class owns the host-side bookkeeping
-(free list, per-slot lengths).
+(free page pool, per-lane tables and lengths).
 
-Invariant: free slots are dirty, not zeroed — batched ragged decode
-writes its placeholder token's K/V into row 0 of every free lane (lanes
-are fixed under jit), and finished slots keep their old rows.  This is
-safe because admission always chunk-prefills a slot from row 0 before
-any of its rows are attended; a future mid-slot prefill (e.g. paged KV)
-must clear or rewrite row 0 first.
+``SlotKVCache`` keeps the PR-1 slot-granular layout ([L, B, T, K, hd],
+one ``max_len`` slot per lane) — it remains the reference implementation
+the paged engine is tested token-identical against, and its docstring
+invariant still applies: free slots are dirty, and batched ragged decode
+writes idle lanes' placeholder K/V into row 0, which is safe only because
+slot prefill always rewrites from row 0 before any row is attended.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import init_cache
+from repro.models import init_cache, init_paged_cache
+
+
+class PagedKVCache:
+    """Page-granular KV cache: fixed page pool + per-lane page tables."""
+
+    def __init__(self, cfg, n_slots: int, max_len: int, page_size: int,
+                 page_budget: Optional[int] = None):
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"PagedKVCache requires an attention KV cache; "
+                f"family={cfg.family!r} keeps recurrent state instead")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.max_pages = -(-max_len // page_size)     # per-lane table width
+        self.max_len = self.max_pages * page_size     # lane logical capacity
+        if page_budget is None:
+            page_budget = n_slots * self.max_pages    # fits slot worst case
+        self.page_budget = page_budget
+        self.n_pages = page_budget + 1                # + sentinel page 0
+        self.tree = init_paged_cache(cfg, self.n_pages, page_size)
+        self.seq_lens = np.zeros(n_slots, np.int32)
+        self.page_table = np.zeros((n_slots, self.max_pages), np.int32)
+        self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0
+        self._free_pages = list(range(self.n_pages - 1, 0, -1))  # never 0
+        self._pages_of: Dict[int, List[int]] = {}
+        self._table_dev = None           # device copy, rebuilt on mutation
+
+    # ---- lifecycle ------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.page_budget - len(self._free_pages)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (bool(self._free_slots)
+                and self.pages_needed(n_tokens) <= len(self._free_pages)
+                and n_tokens <= self.max_len)
+
+    def alloc(self, n_tokens: int) -> Optional[int]:
+        """Claim a free lane plus pages for ``n_tokens`` lifetime rows (or
+        None if either is short).  The caller prefills the lane next."""
+        need = self.pages_needed(n_tokens)
+        if not self.can_admit(n_tokens):
+            return None
+        slot = self._free_slots.pop()
+        pages = [self._free_pages.pop() for _ in range(need)]
+        self._pages_of[slot] = pages
+        self.page_table[slot] = 0                     # sentinel tail
+        self.page_table[slot, :need] = pages
+        self._table_dev = None
+        return slot
+
+    def free(self, slot: int):
+        """Return a finished request's lane and pages to the pools."""
+        assert 0 <= slot < self.n_slots and slot in self._pages_of, slot
+        self._free_pages.extend(reversed(self._pages_of.pop(slot)))
+        self.page_table[slot] = 0
+        self.seq_lens[slot] = 0
+        self._free_slots.append(slot)
+        self._table_dev = None
+
+    # ---- device views ---------------------------------------------------
+    def seq_lens_device(self):
+        # jnp.array (not asarray): on CPU, asarray can alias the numpy
+        # buffer zero-copy, and the engine mutates seq_lens while the async
+        # decode dispatch may still be reading it — a data race.
+        return jnp.array(self.seq_lens)
+
+    def page_table_device(self, slot: Optional[int] = None):
+        if slot is not None:
+            return jnp.array(self.page_table[slot])
+        # the table only mutates at admission/free, so the decode loop's
+        # per-step copy is cached (jnp.array snapshots, so there is no
+        # aliasing race with the host-side numpy mutations)
+        if self._table_dev is None:
+            self._table_dev = jnp.array(self.page_table)
+        return self._table_dev
+
+    # ---- gauges ---------------------------------------------------------
+    def gauges(self) -> Dict[str, float]:
+        """Cache-utilization gauges: page occupancy and internal
+        fragmentation (reserved-but-unwritten rows / reserved rows)."""
+        used_rows = int(self.seq_lens.sum())
+        reserved_rows = self.pages_in_use * self.page_size
+        frag = 0.0 if reserved_rows == 0 else 1.0 - used_rows / reserved_rows
+        return {
+            "pages_in_use": float(self.pages_in_use),
+            "pages_total": float(self.page_budget),
+            "page_utilization": self.pages_in_use / self.page_budget,
+            "kv_fragmentation": frag,
+        }
+
+    def bytes_resident(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.tree))
 
 
 class SlotKVCache:
@@ -50,9 +179,12 @@ class SlotKVCache:
     def n_active(self) -> int:
         return self.n_slots - len(self._free)
 
-    def alloc(self) -> Optional[int]:
+    def can_admit(self, n_tokens: int) -> bool:
+        return bool(self._free) and n_tokens <= self.max_len
+
+    def alloc(self, n_tokens: int = 0) -> Optional[int]:
         """Claim a free slot (or None).  The caller prefills it next."""
-        if not self._free:
+        if not self.can_admit(n_tokens):
             return None
         return self._free.pop()
 
@@ -64,11 +196,25 @@ class SlotKVCache:
 
     # ---- device views ---------------------------------------------------
     def seq_lens_device(self):
-        # jnp.array (not asarray): on CPU, asarray can alias the numpy
-        # buffer zero-copy, and the engine mutates seq_lens while the async
-        # decode dispatch may still be reading it — a data race.
+        # see PagedKVCache.seq_lens_device for the jnp.array rationale
         return jnp.array(self.seq_lens)
 
+    # ---- gauges ---------------------------------------------------------
+    def gauges(self) -> Dict[str, float]:
+        """Slot-layout analogues of the paged gauges — keyed ``slot*``
+        since the unit is a whole max_len lane, not a page: every
+        admitted lane reserves max_len rows, so fragmentation is the
+        unwritten share."""
+        used_rows = int(self.seq_lens.sum())
+        reserved_rows = self.n_active * self.max_len
+        frag = 0.0 if reserved_rows == 0 else 1.0 - used_rows / reserved_rows
+        return {
+            "slots_in_use": float(self.n_active),
+            "slots_total": float(self.n_slots),
+            "slot_utilization": self.n_active / self.n_slots,
+            "kv_fragmentation": frag,
+        }
+
     def bytes_resident(self) -> int:
-        import jax
-        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.tree))
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.tree))

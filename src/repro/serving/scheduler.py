@@ -42,7 +42,12 @@ class RequestState:
 
 
 class Scheduler:
-    def __init__(self, latency_window: int = 1024):
+    def __init__(self, latency_window: int = 1024,
+                 max_request_tokens: Optional[int] = None):
+        # reject-at-submit bound on prompt + max_new_tokens: a request
+        # past the cache's capacity would otherwise queue forever (or
+        # corrupt rows if force-admitted), so surface it immediately
+        self.max_request_tokens = max_request_tokens
         self._next_rid = 0
         self.pending: collections.deque = collections.deque()
         self.active: Dict[int, RequestState] = {}
@@ -56,6 +61,13 @@ class Scheduler:
     def submit(self, req: Request, now: float = 0.0) -> int:
         if req.max_new_tokens < 1:
             raise ValueError("need at least one generated token")
+        total = len(req.prompt) + req.max_new_tokens
+        if self.max_request_tokens is not None and \
+                total > self.max_request_tokens:
+            raise ValueError(
+                f"prompt({len(req.prompt)}) + max_new_tokens"
+                f"({req.max_new_tokens}) = {total} exceeds the cache "
+                f"capacity of {self.max_request_tokens} tokens")
         rid = self._next_rid
         self._next_rid += 1
         self.pending.append(RequestState(rid=rid, req=req, t_submit=now))

@@ -11,6 +11,7 @@ from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
                                                build_block_mask)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.wanda_score import wanda_mask_apply
 
@@ -40,6 +41,75 @@ def test_flash_attention_window():
                         interpret=True)
     r = ref.flash_attention_ref(q, q, q, window=32)
     np.testing.assert_allclose(o, r, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,hd,n_pages,ps,mp", [
+    (3, 4, 2, 32, 16, 8, 4),      # GQA, ragged lengths
+    (2, 8, 8, 64, 12, 16, 3),     # MHA-ish, bigger pages
+    (1, 2, 1, 128, 8, 8, 5),      # MQA, single lane
+])
+def test_paged_decode_attention_sweep(dtype, B, H, K, hd, n_pages, ps, mp):
+    q = random.normal(RNG, (B, 1, H, hd), dtype)
+    kp = random.normal(random.fold_in(RNG, 1), (n_pages, ps, K, hd), dtype)
+    vp = random.normal(random.fold_in(RNG, 2), (n_pages, ps, K, hd), dtype)
+    rs = np.random.RandomState(B * H)
+    # page tables may repeat physical pages across *inactive* tail entries
+    # (the engine's sentinel); valid rows make every table prefix distinct
+    tbl = jnp.asarray(rs.choice(n_pages, (B, mp)), jnp.int32)
+    lens = jnp.asarray(rs.randint(1, mp * ps + 1, B), jnp.int32)
+    o = paged_decode_attention(q, kp, vp, tbl, lens, interpret=True)
+    r = ref.paged_decode_attention_ref(q, kp, vp, tbl, lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window,softcap", [(5, None), (None, 20.0),
+                                            (16, 30.0)])
+def test_paged_decode_attention_window_softcap(window, softcap):
+    B, H, K, hd, n_pages, ps, mp = 4, 4, 2, 32, 10, 8, 4
+    q = random.normal(RNG, (B, 1, H, hd), jnp.float32)
+    kp = random.normal(random.fold_in(RNG, 3), (n_pages, ps, K, hd),
+                       jnp.float32)
+    vp = random.normal(random.fold_in(RNG, 4), (n_pages, ps, K, hd),
+                       jnp.float32)
+    rs = np.random.RandomState(7)
+    tbl = jnp.asarray(rs.choice(n_pages, (B, mp)), jnp.int32)
+    lens = jnp.asarray(rs.randint(1, mp * ps + 1, B), jnp.int32)
+    o = paged_decode_attention(q, kp, vp, tbl, lens, window=window,
+                               softcap=softcap, interpret=True)
+    r = ref.paged_decode_attention_ref(q, kp, vp, tbl, lens, window=window,
+                                       softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_paged_decode_matches_contiguous_decode():
+    """A paged cache whose pages happen to be contiguous must reproduce
+    ``models.layers.attention_decode`` on the equivalent [B,T,K,hd] cache
+    — the slot-engine decode the serving stack is tested against."""
+    from repro.models.layers import attention_decode
+
+    B, H, K, hd, ps, mp = 2, 4, 2, 16, 8, 3
+    T = mp * ps
+    q = random.normal(RNG, (B, 1, H, hd), jnp.float32)
+    cache_k = random.normal(random.fold_in(RNG, 5), (B, T, K, hd),
+                            jnp.float32)
+    cache_v = random.normal(random.fold_in(RNG, 6), (B, T, K, hd),
+                            jnp.float32)
+    lens = jnp.asarray([T - 3, 9], jnp.int32)
+    # lay lane b's rows out as pages 1+b*mp .. (identity page table)
+    kp = jnp.concatenate([jnp.zeros((1, ps, K, hd)),
+                          cache_k.reshape(B * mp, ps, K, hd)])
+    vp = jnp.concatenate([jnp.zeros((1, ps, K, hd)),
+                          cache_v.reshape(B * mp, ps, K, hd)])
+    tbl = jnp.asarray(1 + np.arange(B * mp).reshape(B, mp), jnp.int32)
+    want = attention_decode(q, cache_k, cache_v, lens)
+    got_k = paged_decode_attention(q, kp, vp, tbl, lens, interpret=True)
+    got_r = ref.paged_decode_attention_ref(q, kp, vp, tbl, lens)
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                               atol=2e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -106,4 +176,15 @@ def test_ops_fallback_dispatch():
     q = random.normal(RNG, (1, 2, 64, 32), jnp.float32)
     a = ops.attention_op(q, q, q)                     # ref path on CPU
     b = ops.attention_op(q, q, q, force="interpret")  # kernel, interpreted
+    np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_paged_ops_fallback_dispatch():
+    from repro.kernels import ops
+    qd = random.normal(RNG, (2, 1, 4, 32), jnp.float32)
+    kp = random.normal(random.fold_in(RNG, 9), (6, 8, 2, 32), jnp.float32)
+    tbl = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    lens = jnp.asarray([5, 14], jnp.int32)
+    a = ops.paged_attention_op(qd, kp, kp, tbl, lens)
+    b = ops.paged_attention_op(qd, kp, kp, tbl, lens, force="interpret")
     np.testing.assert_allclose(a, b, atol=2e-5)

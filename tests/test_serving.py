@@ -203,8 +203,12 @@ def test_temperature_sampling_and_stats(moe):
     assert (outs[0] < cfg.vocab).all() and (outs[0] >= 0).all()
     stats = eng.latency_stats()
     assert set(stats) == {"p50_latency_s", "p95_latency_s",
-                          "p50_first_token_s", "p95_first_token_s"}
+                          "p50_first_token_s", "p95_first_token_s",
+                          "pages_in_use", "pages_total",
+                          "page_utilization", "kv_fragmentation"}
     assert all(v >= 0 for v in stats.values())
+    # all requests finished -> every page back in the pool
+    assert stats["pages_in_use"] == 0 and stats["page_utilization"] == 0
 
 
 def test_windowed_config_prefill_decode_consistent():
