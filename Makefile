@@ -1,11 +1,15 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench bench-serving example-serve
+.PHONY: test bench bench-serving example-serve docs-check
 
 # tier-1 verification (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
+
+# docs job: markdown links resolve + doctested examples run
+docs-check:
+	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) benchmarks/run.py

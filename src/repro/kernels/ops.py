@@ -38,8 +38,23 @@ def attention_op(q, k, v, *, causal=True, window=None, force=None):
 
 def paged_attention_op(q, k_pages, v_pages, page_tables, lengths, *,
                        window=None, softcap=None, force=None):
-    """Paged ragged-decode attention: q [B,1,H,hd] vs page pools
-    [n_pages, ps, K, hd] through per-lane page tables [B, max_pages]."""
+    """Paged ragged-decode attention: one query token per lane against
+    that lane's paged KV history.
+
+    Shapes/dtypes: ``q`` [B, 1, H, hd] (model dtype); ``k_pages`` /
+    ``v_pages`` [n_pages, page_size, K, hd] with H divisible by K (GQA);
+    ``page_tables`` [B, max_pages] int32 physical-page ids (sentinel page
+    0 where unassigned); ``lengths`` [B] int32 valid rows per lane — the
+    current token's K/V must already be written, so an active lane has
+    ``lengths[b] >= 1``.  Returns [B, 1, H, hd] in ``q.dtype``; softmax
+    runs in fp32 with optional sliding ``window`` and logit ``softcap``.
+
+    Failure modes: out-of-range page ids are clamped by XLA's gather (no
+    error — keep tables well-formed, see PagedKVCache invariants), and a
+    lane with ``lengths[b] == 0`` is garbage (all rows masked): callers
+    must discard idle lanes' output.  ``force="interpret"`` validates the
+    Pallas kernel off-TPU; the jnp reference runs on CPU by default.
+    """
     mode = force or ("pallas" if on_tpu() else "ref")
     if mode == "pallas":
         return paged_decode_attention(q, k_pages, v_pages, page_tables,

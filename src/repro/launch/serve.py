@@ -43,6 +43,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 = softmax sampling")
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: a pruned drafter "
+                         "proposes --spec-k tokens per round, the dense "
+                         "model verifies the block in one dispatch "
+                         "(greedy only; output token-identical to plain "
+                         "decode)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--spec-expert-drop", type=float, default=0.25,
+                    help="fraction of experts masked off in the drafter "
+                         "(MoE archs; non-MoE archs draft with the dense "
+                         "model itself)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,23 +76,41 @@ def main():
                     args.new_tokens, eos_id=args.eos_id,
                     temperature=args.temperature)
             for _ in range(args.n_requests)]
+    spec_kwargs = {}
+    if args.spec_decode:
+        spec_kwargs = {"spec_decode": "pruned", "spec_k": args.spec_k}
+        if cfg.family == "moe" and args.spec_expert_drop > 0:
+            n_drop = int(cfg.n_experts * args.spec_expert_drop)
+            n_drop = min(n_drop, cfg.n_experts - cfg.top_k)
+            mask = np.ones(cfg.n_experts, np.float32)
+            if n_drop:
+                mask[-n_drop:] = 0.0
+            spec_kwargs["expert_mask"] = mask
+            print(f"spec drafter: {n_drop}/{cfg.n_experts} experts masked")
+        else:
+            print("spec drafter: dense (identity) — non-MoE arch or "
+                  "--spec-expert-drop 0")
     eng = ServeEngine(params, cfg, max_len=args.max_len,
                       max_batch=args.max_batch,
                       prefill_chunk=args.prefill_chunk,
                       kv_layout=args.kv_layout, page_size=args.page_size,
-                      page_budget=args.page_budget)
+                      page_budget=args.page_budget, **spec_kwargs)
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req{i}: {o.tolist()}")
     stats = eng.latency_stats()
     lat = {k: f"{v * 1e3:.1f}ms" for k, v in stats.items()
            if k.endswith("_s")}
+    spec = {k: round(v, 3) for k, v in stats.items()
+            if k.startswith("spec_")}
     gauges = {k: round(v, 3) for k, v in stats.items()
-              if not k.endswith("_s")}
+              if not k.endswith("_s") and not k.startswith("spec_")}
     if lat:
         print("latency:", lat)
     if gauges:
         print("cache:", gauges)
+    if spec:
+        print("spec:", spec)
     print(f"dispatches: prefill={eng.prefill_dispatches} "
           f"decode={eng.decode_dispatches}")
 

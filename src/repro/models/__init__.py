@@ -11,5 +11,6 @@ from repro.models.transformer import (  # noqa: F401
     paged_cache_specs,
     prefill_step,
     prefill_step_paged,
+    verify_step_paged,
 )
 from repro.models import param  # noqa: F401

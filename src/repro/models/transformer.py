@@ -779,6 +779,114 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
     return logits, new_cache
 
 
+def verify_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
+                      page_tables, *, mesh=None, expert_mask=None):
+    """Score a ragged block of draft tokens with the (dense) model — the
+    verifier half of self-speculative decoding.
+
+    tokens [B, W] int32 — per lane, position 0 is the lane's last emitted
+    token (not yet in cache) and positions 1..W-1 are the W-1 draft
+    proposals; seq_lens [B] int32 — valid rows already in each lane;
+    page_tables [B, max_pages] int32 (sentinel page 0 where unassigned).
+    Lane ``b``'s token ``j`` sits at absolute position ``seq_lens[b]+j``:
+    its K/V is scattered through the page table to that row (overwriting
+    whatever the draft pass wrote there — the cache prefix stays pure
+    verifier K/V for every row that can ever be attended again), RoPE'd at
+    that position, and it attends rows [0, seq_lens[b]+j] causally.
+
+    Greedy acceptance is computed in-dispatch: the drafted token ``j+1``
+    is accepted iff it equals the verifier's argmax at block position
+    ``j``, and acceptance stops at the first mismatch.
+
+    Returns ``(accept_len [B], next_token [B], logits [B, W, padded_vocab],
+    new_cache)`` — ``accept_len`` in [0, W-1] counts accepted draft
+    tokens; ``next_token`` is the verifier's argmax after the accepted
+    prefix (the correction at the first mismatch, or the bonus token when
+    every draft was accepted).  The caller emits
+    ``draft[:accept_len] + [next_token]`` and rolls ``seq_len`` back to
+    drop the rejected suffix — rolled-back rows are rewritten before they
+    can be attended, so no page frees are needed.
+
+    Requires every block write to land inside the lane's page reservation
+    (``PagedKVCache(overdraft=W-1)``); writes past it would fall onto the
+    shared sentinel page, and a same-dispatch query could then attend
+    another lane's scribble.  Attention families only.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"paged verify requires a KV cache; family={cfg.family!r}")
+    h = params["embed"][tokens]                      # [B,W,D]
+    B, W = tokens.shape
+    q_pos = seq_lens[:, None] + jnp.arange(W)[None]  # [B,W] per-lane ragged
+    sin, cos = rope_tables(q_pos, cfg.head_dim, cfg.rope_theta)
+    em = _norm_expert_mask(cfg, expert_mask)
+    n_pages, ps = cache["k"].shape[1], cache["k"].shape[2]
+    widx = (page_tables[jnp.arange(B)[:, None], q_pos // ps] * ps
+            + q_pos % ps).reshape(-1)                # [B*W] flat pool rows
+    lane_idx = (page_tables[:, :, None] * ps
+                + jnp.arange(ps)[None, None, :]).reshape(B, -1)  # [B,T]
+    T = lane_idx.shape[1]
+    kv_len = seq_lens + W                            # rows valid after write
+
+    def body(h, inp):
+        if em is None:
+            lp, kc, vc = inp
+            em_row = None
+        else:
+            lp, kc, vc, em_row = inp
+        x = _norm(h, lp["ln1"], cfg)
+        q, k, v, wo = _qkv_proj(x, lp["attn"], cfg, sin, cos)
+        kshape = kc.shape                            # [n_pages, ps, K, hd]
+        kc = kc.reshape(n_pages * ps, *kshape[2:])
+        vc = vc.reshape(n_pages * ps, *kshape[2:])
+        kc = kc.at[widx].set(k.reshape(B * W, *kshape[2:]).astype(kc.dtype))
+        vc = vc.at[widx].set(v.reshape(B * W, *kshape[2:]).astype(vc.dtype))
+        # gather each lane's logical view (block included) and attend the
+        # written prefix under per-lane causal + length masking
+        ks = kc[lane_idx]                            # [B,T,K,hd]
+        vs = vc[lane_idx]
+        o = attention(q, ks, vs, q_pos, jnp.arange(T), impl=cfg.attn_impl,
+                      window=cfg.local_window, softcap=cfg.attn_logit_softcap,
+                      chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                      kv_len=kv_len)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, wo)
+        x2 = _norm(h, lp["ln2"], cfg)
+        if cfg.family == "moe":
+            h = h + moe_apply(x2, lp["moe"], cfg, mesh=mesh,
+                              expert_mask=em_row)
+        else:
+            h = h + _mlp_block(x2, lp["mlp"])
+        return h, (kc.reshape(kshape), vc.reshape(kshape))
+
+    if cfg.scan_layers:
+        xs = (params["layers"], cache["k"], cache["v"])
+        if em is not None:
+            xs = xs + (em,)
+        h, (nk, nv) = lax.scan(body, h, xs)
+    else:
+        ks_, vs_ = [], []
+        for i in range(cfg.n_layers):
+            inp = (params["layers"][str(i)], cache["k"][i], cache["v"][i])
+            if em is not None:
+                inp = inp + (em[i],)
+            h, (nk_, nv_) = body(h, inp)
+            ks_.append(nk_)
+            vs_.append(nv_)
+        nk, nv = jnp.stack(ks_), jnp.stack(vs_)
+    new_cache = {"k": nk, "v": nv}
+
+    h = _norm(h, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)       # [B,W,Vp]
+
+    greedy = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+    match = (greedy[:, :-1] == tokens[:, 1:]).astype(jnp.int32)   # [B,W-1]
+    accept_len = jnp.cumprod(match, axis=1).sum(axis=1).astype(jnp.int32)
+    next_token = jnp.take_along_axis(greedy, accept_len[:, None],
+                                     axis=1)[:, 0]
+    return accept_len, next_token, logits, new_cache
+
+
 def prefill_step_paged(params, cfg: ModelConfig, cache, tokens, page_row,
                        start, *, mesh=None, expert_mask=None):
     """Single-dispatch chunked prefill writing K/V through a page table.

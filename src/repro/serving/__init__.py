@@ -5,3 +5,8 @@ from repro.serving.engine import (  # noqa: F401
 )
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serving.scheduler import Request, RequestState, Scheduler  # noqa: F401
+from repro.serving.speculative import (  # noqa: F401
+    SpecStats,
+    SpeculativeDecoder,
+    draft_block_paged,
+)

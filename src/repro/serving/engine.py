@@ -27,6 +27,13 @@ block-sparse kernel exploits stage-2 masks.  The engine:
     flows into every prefill/decode dispatch, and stage-2 unstructured
     masks from ``core.unstructured.sparsify_model`` can be re-applied to
     the weights at load time via ``weight_masks=``.
+  * **self-speculative decoding** (``spec_decode="pruned"``, paged layout
+    only — `speculative.SpeculativeDecoder`) — the pruned artifact drafts
+    ``spec_k`` tokens per round in one fused dispatch and the dense model
+    verifies the block in one batched ``models.verify_step_paged``
+    dispatch over the same page tables; greedy output stays
+    token-identical to dense-only decode while dispatches per token drop
+    to ``2 / (accepted + 1)``.
 
 Recurrent families (ssm/hybrid) have no length-indexed cache; they fall
 back to a correct sequential per-request path.
@@ -44,6 +51,7 @@ from repro.models import (decode_step, decode_step_paged, decode_step_ragged,
                           init_cache, prefill_step, prefill_step_paged)
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.speculative import SpeculativeDecoder
 
 
 def apply_weight_masks(params, cfg, masks: Dict):
@@ -83,15 +91,49 @@ def apply_weight_masks(params, cfg, masks: Dict):
 
 
 class ServeEngine:
+    """Continuous-batching serve engine (see module docstring).
+
+    ``spec_decode="pruned"`` turns on self-speculative decoding on the
+    paged layout: the engine holds TWO param sets — the dense ``params``
+    (prefill + verify) and a pruned drafter built from the same weights.
+    In spec mode ``expert_mask`` / ``weight_masks`` / ``draft_params``
+    describe the *drafter* (served output is dense-model quality, token-
+    identical to plain greedy decode); outside spec mode they prune the
+    served model itself, as before.  ``spec_k`` draft tokens are proposed
+    per round (default 4).
+    """
+
     def __init__(self, params, cfg, max_len: int = 512, mesh=None,
                  max_batch: int = 8, prefill_chunk: int = 32,
                  expert_mask=None, weight_masks: Optional[Dict] = None,
                  seed: int = 0, kv_layout: str = "paged",
-                 page_size: int = 16, page_budget: Optional[int] = None):
+                 page_size: int = 16, page_budget: Optional[int] = None,
+                 spec_decode: Optional[str] = None, spec_k: int = 4,
+                 draft_params=None):
         if kv_layout not in ("paged", "slot"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
-        if weight_masks:
-            params = apply_weight_masks(params, cfg, weight_masks)
+        if spec_decode not in (None, "pruned"):
+            raise ValueError(f"unknown spec_decode {spec_decode!r}")
+        if spec_decode is not None:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "spec_decode requires kv_layout='paged': draft and "
+                    "verify share one paged KV layout (the verify block "
+                    "is scattered through the drafter's page tables)")
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    f"spec_decode requires a KV cache; family={cfg.family!r}")
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            # two param sets: dense verifies, the pruned artifact drafts
+            draft = params if draft_params is None else draft_params
+            if weight_masks:
+                draft = apply_weight_masks(draft, cfg, weight_masks)
+            self.draft_params = draft
+        else:
+            if weight_masks:
+                params = apply_weight_masks(params, cfg, weight_masks)
+            self.draft_params = None
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -99,6 +141,8 @@ class ServeEngine:
         self.max_batch = max_batch
         self.prefill_chunk = min(prefill_chunk, max_len)
         self.kv_layout = kv_layout
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k if spec_decode else 0
         self.scheduler = Scheduler(max_request_tokens=max_len)
         self.prefill_dispatches = 0      # jitted prefill calls (bench hook)
         self.decode_dispatches = 0
@@ -109,6 +153,9 @@ class ServeEngine:
 
         em = None if expert_mask is None else jnp.asarray(expert_mask,
                                                           jnp.float32)
+        # in spec mode the runtime expert mask prunes the DRAFTER only;
+        # prefill/decode/verify run the dense model
+        draft_em, em = (em, None) if spec_decode else (None, em)
         if self._attn_cache:
             # round the lane capacity up to whole prefill chunks: the last
             # chunk of a max_len-long prompt may extend past max_len, and
@@ -123,7 +170,8 @@ class ServeEngine:
             donate = (1,) if jax.default_backend() != "cpu" else ()
             if kv_layout == "paged":
                 self.cache = PagedKVCache(cfg, max_batch, lane_len,
-                                          page_size, page_budget)
+                                          page_size, page_budget,
+                                          overdraft=max(0, self.spec_k - 1))
                 self._prefill = jax.jit(
                     lambda p, c, t, row, start: prefill_step_paged(
                         p, cfg, c, t, row, start, mesh=mesh, expert_mask=em),
@@ -147,6 +195,10 @@ class ServeEngine:
             self._decode_uniform = jax.jit(
                 lambda p, c, t, n: decode_step(p, cfg, c, t, n, mesh=mesh,
                                                expert_mask=em))
+        self._spec = (SpeculativeDecoder(cfg, spec_k, mesh=mesh,
+                                         draft_expert_mask=draft_em,
+                                         donate=donate)
+                      if spec_decode else None)
         self._sample = jax.jit(self._sample_fn)
 
     # ------------------------------------------------------------------
@@ -155,23 +207,38 @@ class ServeEngine:
     def submit(self, request: Request) -> int:
         """Queue a request; returns its id.  ``run()`` drains the queue.
 
-        Raises ValueError for requests that could never be admitted:
-        empty prompts, ``prompt + max_new_tokens`` past ``max_len``, or —
-        on the paged layout — past the whole page budget.
+        ``request.prompt`` is a 1-D int32 array of token ids in
+        ``[0, cfg.vocab)``; outputs are 1-D int32 arrays of length
+        ``<= max_new_tokens`` (shorter only when ``eos_id`` fires, which
+        is then the final token).
+
+        Raises ValueError for requests that could never be admitted
+        (nothing is queued, no state leaks): empty prompts,
+        ``prompt + max_new_tokens`` past ``max_len``, requests whose
+        lifetime page reservation (including the speculative overdraft)
+        exceeds the whole page budget on the paged layout, or sampled
+        (``temperature > 0``) requests in spec-decode mode — greedy
+        verification is what makes speculative output token-identical to
+        dense decode.
         """
         if len(request.prompt) < 1:
             raise ValueError("empty prompt")
+        if self._spec is not None and request.temperature > 0:
+            raise ValueError(
+                "spec_decode serves greedy requests only (temperature=0): "
+                "acceptance compares drafts against the dense argmax")
         total = len(request.prompt) + request.max_new_tokens
         if total > self.max_len:
             raise ValueError(
                 f"prompt({len(request.prompt)}) + max_new_tokens"
                 f"({request.max_new_tokens}) exceeds max_len={self.max_len}")
         if isinstance(self.cache, PagedKVCache):
-            need = self.cache.pages_needed(total)
+            need = self.cache.lifetime_pages(total)
             if need > self.cache.page_budget:
                 raise ValueError(
                     f"request needs {need} pages "
-                    f"({total} tokens at page_size="
+                    f"({total} tokens + {self.cache.overdraft} overdraft "
+                    f"rows at page_size="
                     f"{self.cache.page_size}) but the cache's whole page "
                     f"budget is {self.cache.page_budget}")
         return self.scheduler.submit(request, time.monotonic())
@@ -191,11 +258,23 @@ class ServeEngine:
             self.step()
 
     def latency_stats(self) -> Dict[str, float]:
-        """p50/p95 latency percentiles plus cache-utilization gauges
-        (pages in use / total, internal fragmentation)."""
+        """Engine observability snapshot, all values float.
+
+        Keys ending ``_s`` are p50/p95 full-request / first-token latency
+        percentiles in seconds over the recent completion window (absent
+        until a request completes).  Cache gauges: ``pages_in_use`` /
+        ``pages_total`` / ``page_utilization`` / ``kv_fragmentation``
+        (paged) or their ``slot*`` analogues.  In spec-decode mode also
+        ``spec_accept_rate`` (accepted / drafted), ``spec_tokens_per_verify``
+        (emitted tokens per verify dispatch, summed over the batch — up to
+        ``n_active * (spec_k + 1)``), and ``spec_rounds`` /
+        ``spec_drafted`` / ``spec_accepted`` / ``spec_emitted``
+        counters."""
         stats = self.scheduler.latencies()
         if self.cache is not None:
             stats.update(self.cache.gauges())
+        if self._spec is not None:
+            stats.update(self._spec.stats.as_dict())
         return stats
 
     def reset_stats(self):
@@ -206,14 +285,20 @@ class ServeEngine:
         self.decode_dispatches = 0
         self.requests_admitted = 0
         self.pages_allocated = 0
+        if self._spec is not None:
+            self._spec.stats.reset()
 
     # ------------------------------------------------------------------
     # continuous-batching loop (attention families)
     # ------------------------------------------------------------------
     def step(self):
         """One engine iteration: admit while the page budget (and a lane)
-        allows, then one batched ragged decode step for every active
-        lane."""
+        allows, then one decode round for every active lane — a single
+        batched ragged decode step, or in spec-decode mode one fused
+        ``spec_k``-token draft dispatch plus one dense verify dispatch
+        (emitting 1..spec_k+1 tokens per lane).  Idempotent when nothing
+        is pending or active.  Never raises for admissible workloads;
+        unservable requests were already rejected at ``submit()``."""
         sched, cache = self.scheduler, self.cache
         while sched.has_pending:
             nxt = sched.pending[0]
@@ -224,9 +309,12 @@ class ServeEngine:
             st = sched.admit(slot)
             self.requests_admitted += 1
             if isinstance(cache, PagedKVCache):
-                self.pages_allocated += cache.pages_needed(total)
+                self.pages_allocated += cache.lifetime_pages(total)
             self._prefill_into_slot(st)
         if not sched.has_active:
+            return
+        if self._spec is not None:
+            self._spec.decode_round(self)
             return
         B = cache.n_slots
         tokens = np.zeros((B, 1), np.int32)
@@ -244,7 +332,7 @@ class ServeEngine:
                                               cache.seq_lens_device())
         self.decode_dispatches += 1
         for st in active:
-            cache.seq_lens[st.slot] += 1
+            cache.advance(st.slot)
         toks = np.asarray(self._sample_batch(logits, active))
         now = time.monotonic()
         for st in active:

@@ -20,10 +20,13 @@ Paged invariants (asserted by tests/test_paged_serving.py):
   * **No page is owned by two lanes**: ``alloc`` hands out each non-
     sentinel page to at most one lane until ``free`` returns it.
   * **Reservation covers the request lifetime**: admission reserves
-    ``ceil((prompt + max_new_tokens)/ps)`` pages up front, so a decode
-    step can never run out of pages mid-flight (the engine has no
-    preemption).  The admission *gate* is page availability, not lane
-    count alone.
+    ``ceil((prompt + max_new_tokens + overdraft)/ps)`` pages up front, so
+    a decode step can never run out of pages mid-flight (the engine has
+    no preemption).  ``overdraft`` (speculative decoding: ``spec_k - 1``)
+    covers verify-block rows written past the request's own lifetime and
+    then rolled back via ``rollback()`` — reserved so block writes land
+    in lane-owned pages, never on the shared sentinel.  The admission
+    *gate* is page availability, not lane count alone.
 
 The device arrays live in ``tree`` and are updated functionally by the
 jitted prefill/decode calls; this class owns the host-side bookkeeping
@@ -51,7 +54,7 @@ class PagedKVCache:
     """Page-granular KV cache: fixed page pool + per-lane page tables."""
 
     def __init__(self, cfg, n_slots: int, max_len: int, page_size: int,
-                 page_budget: Optional[int] = None):
+                 page_budget: Optional[int] = None, overdraft: int = 0):
         if cfg.family in ("ssm", "hybrid"):
             raise ValueError(
                 f"PagedKVCache requires an attention KV cache; "
@@ -59,7 +62,16 @@ class PagedKVCache:
         self.cfg = cfg
         self.n_slots = n_slots
         self.page_size = page_size
-        self.max_pages = -(-max_len // page_size)     # per-lane table width
+        # ``overdraft`` rows per lane beyond the request's own lifetime:
+        # speculative decoding writes a verify block of W = spec_k + 1
+        # tokens starting at the last emitted position, so up to
+        # spec_k - 1 rows past ``prompt + max_new_tokens`` are written
+        # (then rolled back, never attended).  Reserving them keeps every
+        # block write inside pages the lane owns — without the overdraft
+        # those writes would fall onto the shared sentinel page, where a
+        # same-dispatch query of another lane could read them.
+        self.overdraft = overdraft
+        self.max_pages = -(-(max_len + overdraft) // page_size)  # table width
         self.max_len = self.max_pages * page_size     # lane logical capacity
         if page_budget is None:
             page_budget = n_slots * self.max_pages    # fits slot worst case
@@ -91,17 +103,30 @@ class PagedKVCache:
         return self.page_budget - len(self._free_pages)
 
     def pages_needed(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` rows — pure page math, no overdraft."""
         return -(-n_tokens // self.page_size)
+
+    def lifetime_pages(self, n_tokens: int) -> int:
+        """Pages ``alloc(n_tokens)`` will actually reserve: the request's
+        ``n_tokens`` lifetime rows plus the cache-wide speculative
+        ``overdraft`` rows."""
+        return self.pages_needed(n_tokens + self.overdraft)
 
     def can_admit(self, n_tokens: int) -> bool:
         return (bool(self._free_slots)
-                and self.pages_needed(n_tokens) <= len(self._free_pages)
-                and n_tokens <= self.max_len)
+                and self.lifetime_pages(n_tokens) <= len(self._free_pages)
+                and n_tokens + self.overdraft <= self.max_len)
 
     def alloc(self, n_tokens: int) -> Optional[int]:
-        """Claim a free lane plus pages for ``n_tokens`` lifetime rows (or
-        None if either is short).  The caller prefills the lane next."""
-        need = self.pages_needed(n_tokens)
+        """Claim a free lane plus pages for ``n_tokens`` lifetime rows.
+
+        Reserves ``lifetime_pages(n_tokens)`` pages (the overdraft rows
+        for speculative block writes are part of the reservation) and
+        points the lane's page-table row at them, sentinel tail beyond.
+        Returns the lane index, or None when lanes or pages are short —
+        never raises; admission simply waits.  The caller prefills the
+        lane next; until then ``seq_lens[slot]`` stays 0."""
+        need = self.lifetime_pages(n_tokens)
         if not self.can_admit(n_tokens):
             return None
         slot = self._free_slots.pop()
@@ -113,13 +138,43 @@ class PagedKVCache:
         return slot
 
     def free(self, slot: int):
-        """Return a finished request's lane and pages to the pools."""
+        """Return a finished request's lane and pages to the pools.
+
+        Resets the lane's table row to the sentinel and its ``seq_lens``
+        to 0.  Asserts the lane is currently allocated (double-free is a
+        bookkeeping bug, not a recoverable condition).  Freed pages are
+        NOT zeroed — the sentinel-tail table row keeps them unattendable
+        until re-allocated, and prefill/decode rewrite rows before any
+        query can see them."""
         assert 0 <= slot < self.n_slots and slot in self._pages_of, slot
         self._free_pages.extend(reversed(self._pages_of.pop(slot)))
         self.page_table[slot] = 0
         self.seq_lens[slot] = 0
         self._free_slots.append(slot)
         self._table_dev = None
+
+    def advance(self, slot: int, n: int = 1):
+        """Mark ``n`` more rows of lane ``slot`` as written.  Must stay
+        within the lane's page reservation — a decode/verify write past it
+        would have landed on the sentinel page."""
+        new_len = int(self.seq_lens[slot]) + n
+        assert slot in self._pages_of and \
+            new_len <= len(self._pages_of[slot]) * self.page_size, \
+            (slot, new_len)
+        self.seq_lens[slot] = new_len
+
+    def rollback(self, slot: int, new_len: int):
+        """Shrink lane ``slot``'s valid-row count to ``new_len`` — drops a
+        rejected speculative suffix.  Page-table-free by construction:
+        the lane keeps its whole reservation, and the dropped rows are
+        rewritten (through the same table entries) before any later query
+        can attend them, so nothing needs freeing or zeroing.  Asserts
+        ``0 <= new_len <= seq_lens[slot]`` — rollback never grows a
+        lane."""
+        assert slot in self._pages_of, slot
+        assert 0 <= new_len <= int(self.seq_lens[slot]), \
+            (slot, new_len, int(self.seq_lens[slot]))
+        self.seq_lens[slot] = new_len
 
     # ---- device views ---------------------------------------------------
     def seq_lens_device(self):
@@ -193,6 +248,13 @@ class SlotKVCache:
         assert 0 <= slot < self.n_slots and slot not in self._free, slot
         self.seq_lens[slot] = 0
         self._free.append(slot)
+
+    def advance(self, slot: int, n: int = 1):
+        """Mark ``n`` more rows of ``slot`` as written (bounded by the
+        slot's fixed ``max_len`` capacity)."""
+        new_len = int(self.seq_lens[slot]) + n
+        assert new_len <= self.max_len, (slot, new_len)
+        self.seq_lens[slot] = new_len
 
     # ---- device views ---------------------------------------------------
     def seq_lens_device(self):

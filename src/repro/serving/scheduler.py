@@ -109,6 +109,24 @@ class Scheduler:
             return True
         return False
 
+    def on_tokens(self, rid: int, tokens, now: float = 0.0):
+        """Feed a verified speculative block of tokens to one request.
+
+        Acceptance-aware accounting: tokens are consumed in order until
+        the request's own termination fires — EOS inside the accepted
+        prefix or ``max_new_tokens`` mid-block — exactly as if they had
+        been emitted by single-token decode steps.  Returns
+        ``(consumed, finished)``: the number of tokens actually recorded
+        (the caller rolls the KV cache back to the matching row count)
+        and whether the request finished (its lane should be freed).
+        """
+        consumed = 0
+        for tok in tokens:
+            consumed += 1
+            if self.on_token(rid, int(tok), now):
+                return consumed, True
+        return consumed, False
+
     # ---- results --------------------------------------------------------
     def result(self, rid: int, keep: bool = False) -> np.ndarray:
         """Collect a finished request's tokens; pops the state (unless

@@ -1,0 +1,170 @@
+"""Self-speculative decoding: the STUN-pruned model drafts, the dense
+model verifies — on one shared paged KV cache.
+
+STUN's core claim is that expert-pruned-then-weight-pruned models stay
+faithful to their dense parent.  That makes the pruning artifact an ideal
+*drafter* for speculative decoding against its own dense model: instead
+of only shrinking the serving footprint, the pruned model buys decode
+parallelism.  Per engine round:
+
+  1. **draft** — ``draft_block_paged`` runs ``spec_k`` greedy decode
+     steps with the pruned params (runtime ``expert_mask`` and/or stage-2
+     weight masks) fused into ONE jitted dispatch, writing draft K/V
+     through the lanes' page tables at rows ``[n, n+k)``.
+  2. **verify** — ``models.verify_step_paged`` teacher-forces the block
+     ``[last, d_1..d_k]`` through the dense params in one batched
+     dispatch.  It overwrites rows ``[n, n+k]`` with dense K/V (the draft
+     writes are scratch — every row that can ever be attended again holds
+     verifier K/V), and returns per-lane accept lengths plus the
+     verifier's correction/bonus token.
+  3. **accept** — each lane emits ``draft[:accept] + [correction]``
+     (≥ 1 token per round, so progress matches plain decode), the
+     scheduler's ``on_tokens`` fires EOS / ``max_new_tokens`` mid-block,
+     and ``PagedKVCache.rollback`` drops the rejected suffix by shrinking
+     ``seq_len`` — no page frees: the lane's reservation (which includes
+     ``spec_k - 1`` overdraft rows) keeps every block write in lane-owned
+     pages, and rolled-back rows are rewritten before they can be
+     attended.
+
+Greedy verification makes the output **token-identical to dense-only
+decode** for any drafter whatsoever (tests pin this oracle): the draft
+only decides how many dense-verified tokens each 2-dispatch round emits.
+Dispatches per emitted token drop from 1 to ``2 / (accept_len + 1)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step_paged, verify_step_paged
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Speculative-decode counters, merged into ``latency_stats()``."""
+    rounds: int = 0             # draft+verify rounds
+    drafted: int = 0            # draft tokens proposed (rounds * k * lanes)
+    accepted: int = 0           # draft tokens the verifier accepted
+    emitted: int = 0            # tokens actually delivered to requests
+    draft_dispatches: int = 0   # fused k-step draft dispatches
+    verify_dispatches: int = 0  # dense verify dispatches
+
+    def as_dict(self) -> Dict[str, float]:
+        d: Dict[str, float] = {
+            "spec_rounds": float(self.rounds),
+            "spec_drafted": float(self.drafted),
+            "spec_accepted": float(self.accepted),
+            "spec_emitted": float(self.emitted),
+        }
+        d["spec_accept_rate"] = (self.accepted / self.drafted
+                                 if self.drafted else 0.0)
+        d["spec_tokens_per_verify"] = (self.emitted / self.verify_dispatches
+                                       if self.verify_dispatches else 0.0)
+        return d
+
+    def reset(self):
+        self.rounds = self.drafted = self.accepted = self.emitted = 0
+        self.draft_dispatches = self.verify_dispatches = 0
+
+
+def draft_block_paged(params, cfg, cache, tokens, seq_lens, page_tables,
+                      k: int, *, mesh=None, expert_mask=None):
+    """Draft ``k`` greedy tokens per lane in one dispatch.
+
+    tokens [B, 1] int32 — each lane's last emitted token; seq_lens [B] —
+    valid rows per lane (token 0 is written at row ``seq_lens[b]``);
+    page_tables [B, max_pages].  Runs ``k`` chained ``decode_step_paged``
+    steps (``k`` is a static python int, so jit unrolls the chain into a
+    single dispatch), each writing the drafter's K/V at the next row —
+    scratch writes the verifier overwrites.
+
+    Returns ``(draft [B, k] int32, new_cache)``.  Drafting is always
+    greedy: spec mode serves greedy requests only (the engine rejects
+    ``temperature > 0`` at submit), so draft sampling needs no RNG.
+    """
+    draft = []
+    tok = tokens
+    for j in range(k):
+        logits, cache = decode_step_paged(
+            params, cfg, cache, tok, seq_lens + j, page_tables,
+            mesh=mesh, expert_mask=expert_mask)
+        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1
+                         ).astype(jnp.int32)[:, None]
+        draft.append(tok[:, 0])
+    return jnp.stack(draft, axis=1), cache
+
+
+class SpeculativeDecoder:
+    """Owns the jitted draft/verify callables + stats for one engine.
+
+    Built by ``ServeEngine(spec_decode="pruned")``; ``decode_round``
+    replaces the engine's plain batched decode step.  The engine keeps
+    two param sets: ``engine.draft_params`` (pruned — ``weight_masks``
+    applied, ``expert_mask`` threaded into draft dispatches only) and
+    ``engine.params`` (dense, used by prefill and verify).
+    """
+
+    def __init__(self, cfg, k: int, mesh=None, draft_expert_mask=None,
+                 donate=()):
+        self.cfg = cfg
+        self.k = k
+        self.stats = SpecStats()
+        em = draft_expert_mask
+        self._draft = jax.jit(
+            lambda p, c, t, sl, tbl: draft_block_paged(
+                p, cfg, c, t, sl, tbl, k, mesh=mesh, expert_mask=em),
+            donate_argnums=donate)
+        self._verify = jax.jit(
+            lambda p, c, t, sl, tbl: verify_step_paged(
+                p, cfg, c, t, sl, tbl, mesh=mesh),
+            donate_argnums=donate)
+
+    def decode_round(self, engine):
+        """One speculative round for every active lane: fused k-token
+        draft dispatch, one dense verify dispatch, then per-lane
+        acceptance, termination, and rollback bookkeeping."""
+        sched, cache = engine.scheduler, engine.cache
+        active = list(sched.active.values())
+        k = self.k
+        B = cache.n_slots
+        last = np.zeros((B, 1), np.int32)
+        for st in active:
+            last[st.slot, 0] = st.tokens[-1]
+        last_dev = jnp.asarray(last)
+        seq = cache.seq_lens_device()
+        tbl = cache.page_table_device()
+        draft, cache.tree = self._draft(engine.draft_params, cache.tree,
+                                        last_dev, seq, tbl)
+        block = jnp.concatenate([last_dev, draft], axis=1)    # [B, k+1]
+        accept_len, next_tok, _, cache.tree = self._verify(
+            engine.params, cache.tree, block, seq, tbl)
+        engine.decode_dispatches += 2          # 1 fused draft + 1 verify
+        self.stats.rounds += 1
+        self.stats.draft_dispatches += 1
+        self.stats.verify_dispatches += 1
+        draft_np = np.asarray(draft)
+        a_np = np.asarray(accept_len)
+        n_np = np.asarray(next_tok)
+        now = time.monotonic()
+        for st in active:
+            b = st.slot
+            a = int(a_np[b])
+            emit = [int(t) for t in draft_np[b, :a]] + [int(n_np[b])]
+            self.stats.drafted += k
+            self.stats.accepted += a
+            n0 = int(cache.seq_lens[b])
+            # verify wrote rows [n0, n0+k]; advance over the whole block,
+            # then roll the rejected suffix back (`emit` beyond the
+            # request's own termination is dropped by on_tokens)
+            cache.advance(b, k + 1)
+            consumed, finished = sched.on_tokens(st.rid, emit, now)
+            self.stats.emitted += consumed
+            if finished:
+                cache.free(b)
+            else:
+                cache.rollback(b, n0 + consumed)

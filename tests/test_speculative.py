@@ -1,0 +1,196 @@
+"""Self-speculative decoding invariants.
+
+The correctness oracle (ISSUE 3): greedy speculative decode must be
+**token-identical** to plain paged decode for ANY drafter — the draft
+only decides how many dense-verified tokens each round emits.  Pinned
+here across dense, windowed, runtime-expert-mask, and stage-2
+weight-mask drafters, plus EOS / ``max_new_tokens`` firing mid-block,
+overdraft page accounting, and submit-time rejection of unservable
+speculative requests.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import Request, ServeEngine
+
+
+def _tiny_moe(n_experts=8, top_k=2, seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2,
+                  n_experts=n_experts, top_k=top_k)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+def _requests(cfg, specs, seed=7):
+    rs = np.random.RandomState(seed)
+    return [Request(rs.randint(0, cfg.vocab, n).astype(np.int32), m)
+            for n, m in specs]
+
+
+def _clone(reqs):
+    return [Request(r.prompt, r.max_new_tokens, eos_id=r.eos_id,
+                    temperature=r.temperature) for r in reqs]
+
+
+SPECS = [(5, 7), (12, 4), (3, 9), (9, 8), (2, 1)]
+
+
+def test_spec_identical_to_plain_paged_moe(moe):
+    """Expert-mask drafter: spec output == plain dense paged decode,
+    for several spec_k values (including k=1, the minimal block)."""
+    cfg, params = moe
+    reqs = _requests(cfg, SPECS)
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=3,
+                        prefill_chunk=8, page_size=8)
+    ref = plain.generate(_clone(reqs))
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-cfg.n_experts // 4:] = 0.0
+    for k in (1, 4):
+        spec = ServeEngine(params, cfg, max_len=32, max_batch=3,
+                           prefill_chunk=8, page_size=8,
+                           spec_decode="pruned", spec_k=k,
+                           expert_mask=mask)
+        outs = spec.generate(_clone(reqs))
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+        st = spec.latency_stats()
+        assert 0.0 <= st["spec_accept_rate"] <= 1.0
+        assert st["spec_tokens_per_verify"] > 0
+        # every lane emits >= 1 token per verify round
+        assert st["spec_emitted"] >= st["spec_rounds"]
+        assert spec.cache.free_pages == spec.cache.page_budget
+
+
+def test_spec_identity_drafter_accepts_everything(moe):
+    """draft params == dense params: every draft token must be accepted
+    and each round emits the full spec_k + 1 block per lane."""
+    cfg, params = moe
+    reqs = _requests(cfg, [(6, 9), (4, 9)])
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                       prefill_chunk=8, page_size=8,
+                       spec_decode="pruned", spec_k=3)
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                        prefill_chunk=8, page_size=8)
+    outs, ref = spec.generate(_clone(reqs)), plain.generate(_clone(reqs))
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(a, b)
+    st = spec.latency_stats()
+    assert st["spec_accept_rate"] == 1.0
+    assert st["spec_drafted"] == st["spec_accepted"]
+
+
+def test_spec_weight_mask_drafter(moe):
+    """Stage-2 weight-masked drafter (the STUN artifact): still
+    token-identical — and the engine must serve the UNMASKED weights."""
+    from repro.core.stun import unstructured_only
+    from repro.data.synthetic import calibration_batches
+
+    cfg, params = moe
+    batches = calibration_batches(cfg, n_batches=2)
+    _, masks, _ = unstructured_only(params, cfg, batches,
+                                    target_sparsity=0.5, method="wanda")
+    reqs = _requests(cfg, [(5, 8), (11, 6)])
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                        prefill_chunk=8, page_size=8)
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                       prefill_chunk=8, page_size=8,
+                       spec_decode="pruned", spec_k=3, weight_masks=masks)
+    for a, b in zip(spec.generate(_clone(reqs)), plain.generate(_clone(reqs))):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spec_windowed_dense():
+    """Sliding-window attention through draft + verify blocks."""
+    cfg = reduced(get_config("qwen2-7b"), n_layers=2)
+    cfg = dataclasses.replace(cfg, dtype="float32", remat_policy="full",
+                              local_window=8)
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(2))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    reqs = _requests(cfg, [(13, 5), (3, 7), (21, 4)], seed=5)
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                        prefill_chunk=4, page_size=8)
+    # draft from a perturbed copy: disagreement exercises rollback under
+    # the window
+    draft = jax.tree.map(lambda x: x + 0.05 * jnp.ones_like(x), params)
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                       prefill_chunk=4, page_size=8,
+                       spec_decode="pruned", spec_k=4, draft_params=draft)
+    for a, b in zip(spec.generate(_clone(reqs)), plain.generate(_clone(reqs))):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spec_eos_fires_mid_block(moe):
+    """EOS inside an accepted block must terminate exactly where plain
+    decode does — the block's rejected/overrun suffix is dropped."""
+    cfg, params = moe
+    req = _requests(cfg, [(6, 12)])[0]
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                        prefill_chunk=8, page_size=8)
+    ref = plain.generate([Request(req.prompt, 12)])[0]
+    assert len(ref) == 12
+    # pick an eos that plain decode hits mid-stream
+    eos = int(ref[5])
+    plain2 = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                         prefill_chunk=8, page_size=8)
+    ref_eos = plain2.generate([Request(req.prompt, 12, eos_id=eos)])[0]
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                       prefill_chunk=8, page_size=8,
+                       spec_decode="pruned", spec_k=4)
+    out = spec.generate([Request(req.prompt, 12, eos_id=eos)])[0]
+    np.testing.assert_array_equal(out, ref_eos)
+    assert out[-1] == eos and len(out) <= 12
+
+
+def test_spec_overdraft_reservation(moe):
+    """Admission reserves ceil((total + spec_k - 1)/ps) pages so verify
+    blocks never write onto the sentinel page; submit() gates on the
+    same lifetime reservation."""
+    cfg, params = moe
+    k = 4
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                       prefill_chunk=8, page_size=8,
+                       spec_decode="pruned", spec_k=k, page_budget=4)
+    assert spec.cache.overdraft == k - 1
+    # 9 + 8 = 17 lifetime tokens + 3 overdraft rows -> ceil(20/8) = 3 pages
+    rs = np.random.RandomState(0)
+    spec.submit(Request(rs.randint(0, cfg.vocab, 9).astype(np.int32), 8))
+    spec.step()
+    g = spec.latency_stats()
+    assert g["pages_in_use"] == spec.cache.lifetime_pages(17) == 3
+    spec.run()
+    assert spec.cache.free_pages == spec.cache.page_budget
+    with pytest.raises(ValueError, match="overdraft"):
+        # 22 + 8 = 30 tokens (4 pages, fits the budget) + 3 overdraft
+        # rows = 33 -> 5 pages > budget 4: the submit gate must count the
+        # overdraft, not just the request's own lifetime
+        spec.submit(Request(rs.randint(0, cfg.vocab, 22).astype(np.int32), 8))
+
+
+def test_spec_rejects_unservable(moe):
+    cfg, params = moe
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, max_len=32, kv_layout="slot",
+                    spec_decode="pruned")
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(params, cfg, max_len=32, spec_decode="pruned", spec_k=0)
+    with pytest.raises(ValueError, match="spec_decode"):
+        ServeEngine(params, cfg, max_len=32, spec_decode="layerdrop")
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                       prefill_chunk=8, page_size=8, spec_decode="pruned")
+    with pytest.raises(ValueError, match="greedy"):
+        spec.submit(Request(np.zeros(4, np.int32), 4, temperature=0.7))
+    assert not spec.scheduler.has_pending

@@ -1,0 +1,67 @@
+"""Docs checker (CI `docs` job, `make docs-check`).
+
+Two checks over the project's markdown docs:
+
+  * every relative markdown link ``[text](target)`` resolves to a file
+    or directory in the repo (anchors and external URLs are skipped);
+  * ``python -m doctest`` passes on every doctested document (doctest
+    scans text files for ``>>>`` examples; documents without examples
+    pass trivially).
+
+Run from the repo root: ``python tools/check_docs.py``.
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# the doctests import repro.*; make `python tools/check_docs.py` work
+# without requiring the caller to export PYTHONPATH=src
+sys.path.insert(0, str(ROOT / "src"))
+DOCS = ["README.md", "docs/serving.md", "ROADMAP.md", "PAPER.md"]
+
+# [text](target) — excluding images and fenced code spans is overkill for
+# these docs; inline code never contains the ](... sequence we match
+LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def check_links(md: Path) -> list:
+    errors = []
+    for target in LINK.findall(md.read_text()):
+        if re.match(r"^[a-z]+://", target) or target.startswith("mailto:"):
+            continue                                  # external URL
+        path = target.split("#", 1)[0]
+        if not path:
+            continue                                  # same-file anchor
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for name in DOCS:
+        md = ROOT / name
+        if not md.exists():
+            errors.append(f"missing document: {name}")
+            continue
+        link_errs = check_links(md)
+        errors.extend(link_errs)
+        fails, tests = doctest.testfile(str(md), module_relative=False)
+        if fails:
+            errors.append(f"{name}: {fails} doctest failure(s)")
+        print(f"{name}: {len(link_errs)} broken links, "
+              f"{tests - fails}/{tests} doctests passed")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print("docs check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
