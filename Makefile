@@ -1,11 +1,21 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
+# extra pytest flags (CI passes --timeout=N; needs pytest-timeout)
+PYTEST_FLAGS ?=
 
-.PHONY: test bench bench-serving example-serve docs-check
+.PHONY: test test-fast test-stress bench bench-serving example-serve \
+	docs-check
 
-# tier-1 verification (ROADMAP.md)
+# tier-1 verification (ROADMAP.md) — runs everything
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_FLAGS)
+
+# CI split: deterministic tests vs randomized/property stress suites
+test-fast:
+	$(PY) -m pytest -q -m "not stress" $(PYTEST_FLAGS)
+
+test-stress:
+	$(PY) -m pytest -q -m stress $(PYTEST_FLAGS)
 
 # docs job: markdown links resolve + doctested examples run
 docs-check:

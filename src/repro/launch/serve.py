@@ -30,6 +30,18 @@ def main():
                     help="cache slots (concurrent in-flight requests)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens per prefill dispatch")
+    ap.add_argument("--schedule", choices=["interleaved", "blocking"],
+                    default="interleaved",
+                    help="interleaved (default): at most --prefill-budget "
+                         "prompt tokens of chunked prefill per step next "
+                         "to the decode dispatch, so decode lanes never "
+                         "stall behind a long prompt; blocking: each "
+                         "admitted prompt prefills to completion first "
+                         "(the PR-1 reference)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt tokens of prefill per engine step under "
+                         "--schedule=interleaved (rounded down to whole "
+                         "chunks, min one; default one --prefill-chunk)")
     ap.add_argument("--kv-layout", choices=["paged", "slot"],
                     default="paged",
                     help="paged KV cache (default) or the legacy "
@@ -94,7 +106,9 @@ def main():
                       max_batch=args.max_batch,
                       prefill_chunk=args.prefill_chunk,
                       kv_layout=args.kv_layout, page_size=args.page_size,
-                      page_budget=args.page_budget, **spec_kwargs)
+                      page_budget=args.page_budget,
+                      schedule=args.schedule,
+                      prefill_budget=args.prefill_budget, **spec_kwargs)
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req{i}: {o.tolist()}")

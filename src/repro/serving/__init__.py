@@ -4,7 +4,12 @@ from repro.serving.engine import (  # noqa: F401
     greedy_generate,
 )
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
-from repro.serving.scheduler import Request, RequestState, Scheduler  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request,
+    RequestState,
+    Scheduler,
+    SchedulerError,
+)
 from repro.serving.speculative import (  # noqa: F401
     SpecStats,
     SpeculativeDecoder,

@@ -9,6 +9,18 @@ block-sparse kernel exploits stage-2 masks.  The engine:
     jitted dispatch that computes the chunk forward, writes its K/V
     through the lane's page table, and masks padded / unwritten
     positions.  Cost is ``ceil(S/chunk)`` dispatches, independent of S.
+  * **interleaved prefill/decode schedule** (``schedule="interleaved"``,
+    the default) — each admitted request carries a resumable prefill
+    cursor (``RequestState.prefill_pos``), and every engine step packs at
+    most ``prefill_budget`` prompt-chunk tokens (Sarathi-style token
+    budget, FIFO over mid-prefill requests) *before* the batched decode
+    dispatch.  Decode lanes therefore never stall more than one budget's
+    worth of prefill per token, instead of a whole prompt's
+    ``ceil(S/chunk)`` dispatches.  ``schedule="blocking"`` keeps the
+    PR-1 behaviour — an admitted prompt prefills to completion before
+    the next decode dispatch — as the tested-identical reference
+    (greedy outputs are token-identical between the two schedules; only
+    latency differs).
   * **paged KV cache** (`kv_cache.PagedKVCache`, the default layout) —
     K/V in fixed-size pages with per-lane page tables; admission is
     page-budget-gated (a request needs pages for its whole
@@ -101,6 +113,15 @@ class ServeEngine:
     identical to plain greedy decode); outside spec mode they prune the
     served model itself, as before.  ``spec_k`` draft tokens are proposed
     per round (default 4).
+
+    ``schedule="interleaved"`` (default) meters prefill at
+    ``prefill_budget`` prompt tokens per step (rounded down to whole
+    ``prefill_chunk`` chunks, min one; default one chunk) so decode lanes
+    never stall behind a long prompt; ``schedule="blocking"`` runs each
+    admitted prompt's prefill to completion first — the reference
+    schedule interleaved is tested token-identical against (greedy;
+    sampled requests draw from the engine's single PRNG stream, whose
+    per-token order differs between schedules).
     """
 
     def __init__(self, params, cfg, max_len: int = 512, mesh=None,
@@ -109,9 +130,14 @@ class ServeEngine:
                  seed: int = 0, kv_layout: str = "paged",
                  page_size: int = 16, page_budget: Optional[int] = None,
                  spec_decode: Optional[str] = None, spec_k: int = 4,
-                 draft_params=None):
+                 draft_params=None, schedule: str = "interleaved",
+                 prefill_budget: Optional[int] = None):
         if kv_layout not in ("paged", "slot"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if schedule not in ("interleaved", "blocking"):
+            raise ValueError(f"unknown schedule {schedule!r}")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1")
         if spec_decode not in (None, "pruned"):
             raise ValueError(f"unknown spec_decode {spec_decode!r}")
         if spec_decode is not None:
@@ -140,10 +166,24 @@ class ServeEngine:
         self.mesh = mesh
         self.max_batch = max_batch
         self.prefill_chunk = min(prefill_chunk, max_len)
+        self.schedule = schedule
+        # Sarathi-style per-step prompt-token budget (interleaved
+        # schedule): each step dispatches at most this many prompt tokens
+        # of chunked prefill before the decode dispatch.  Rounded down to
+        # whole chunks, minimum one chunk per step so prefill always
+        # progresses.  Default: one chunk — decode lanes stall at most
+        # one chunk dispatch per token.
+        self.prefill_budget = (self.prefill_chunk if prefill_budget is None
+                               else prefill_budget)
+        self._budget_chunks = max(1, self.prefill_budget // self.prefill_chunk)
         self.kv_layout = kv_layout
         self.spec_decode = spec_decode
         self.spec_k = spec_k if spec_decode else 0
         self.scheduler = Scheduler(max_request_tokens=max_len)
+        # rid -> (padded prompt buffer, S, n_pad, prefill ref) for
+        # requests mid-prefill; the resumable cursor itself lives in
+        # RequestState.prefill_pos
+        self._prefills: Dict[int, tuple] = {}
         self.prefill_dispatches = 0      # jitted prefill calls (bench hook)
         self.decode_dispatches = 0
         self.requests_admitted = 0
@@ -249,21 +289,31 @@ class ServeEngine:
         self.run()
         return [self.scheduler.result(rid) for rid in rids]
 
+    @property
+    def busy(self) -> bool:
+        """True while any request is pending, mid-prefill, or decoding."""
+        s = self.scheduler
+        return s.has_pending or s.has_prefilling or s.has_active
+
     def run(self):
-        """Drive admissions + decode until queue and slots are empty."""
+        """Drive admissions + prefill + decode until every request is done."""
         if not self._attn_cache:
             self._run_sequential()
             return
-        while self.scheduler.has_pending or self.scheduler.has_active:
+        while self.busy:
             self.step()
 
     def latency_stats(self) -> Dict[str, float]:
         """Engine observability snapshot, all values float.
 
-        Keys ending ``_s`` are p50/p95 full-request / first-token latency
-        percentiles in seconds over the recent completion window (absent
-        until a request completes).  Cache gauges: ``pages_in_use`` /
-        ``pages_total`` / ``page_utilization`` / ``kv_fragmentation``
+        Keys ending ``_s`` are p50/p95 latency percentiles in seconds
+        over recent windows: full-request and first-token (absent until a
+        request completes) and inter-token / TPOT — the gap between
+        consecutive tokens of one request, the metric a blocking prefill
+        schedule inflates (absent until some request has emitted two
+        tokens).  Cache gauges: ``pages_in_use`` / ``pages_total`` /
+        ``page_utilization`` / ``kv_fragmentation`` plus the in-flight
+        prefill gauges ``lanes_prefilling`` / ``prefill_pages_in_use``
         (paged) or their ``slot*`` analogues.  In spec-decode mode also
         ``spec_accept_rate`` (accepted / drafted), ``spec_tokens_per_verify``
         (emitted tokens per verify dispatch, summed over the batch — up to
@@ -292,13 +342,28 @@ class ServeEngine:
     # continuous-batching loop (attention families)
     # ------------------------------------------------------------------
     def step(self):
-        """One engine iteration: admit while the page budget (and a lane)
-        allows, then one decode round for every active lane — a single
-        batched ragged decode step, or in spec-decode mode one fused
-        ``spec_k``-token draft dispatch plus one dense verify dispatch
-        (emitting 1..spec_k+1 tokens per lane).  Idempotent when nothing
-        is pending or active.  Never raises for admissible workloads;
-        unservable requests were already rejected at ``submit()``."""
+        """One engine iteration of the token-budgeted schedule:
+
+        1. **Admit** while the page budget (and a lane) allows.  Under
+           ``schedule="blocking"`` each admitted prompt prefills to
+           completion right here (the PR-1 reference behaviour); under
+           ``schedule="interleaved"`` admission only allocates the lane
+           and reserves pages — prefill is metered in step 2.
+        2. **Budgeted prefill** (interleaved only) — dispatch up to
+           ``prefill_budget`` prompt tokens of chunked prefill, FIFO over
+           mid-prefill requests, resuming each request at its
+           ``prefill_pos`` cursor.  A request whose final chunk lands
+           here samples its first token and becomes decode-active.
+        3. **Decode round** for every active lane — a single batched
+           ragged decode step, or in spec-decode mode one fused
+           ``spec_k``-token draft dispatch plus one dense verify dispatch
+           (emitting 1..spec_k+1 tokens per lane).  Runs every step that
+           has an active lane, so no lane ever waits on more than one
+           step's prefill budget between tokens.
+
+        Idempotent when nothing is pending, prefilling, or active.
+        Never raises for admissible workloads; unservable requests were
+        already rejected at ``submit()``."""
         sched, cache = self.scheduler, self.cache
         while sched.has_pending:
             nxt = sched.pending[0]
@@ -310,7 +375,15 @@ class ServeEngine:
             self.requests_admitted += 1
             if isinstance(cache, PagedKVCache):
                 self.pages_allocated += cache.lifetime_pages(total)
-            self._prefill_into_slot(st)
+            self._begin_prefill(st)
+            if self.schedule == "blocking":
+                while st.rid in sched.prefilling:   # run prompt to the end
+                    self._prefill_chunk(st)
+        if self.schedule == "interleaved":
+            for _ in range(self._budget_chunks):
+                if not sched.has_prefilling:
+                    break
+                self._prefill_chunk(sched.next_prefilling())
         if not sched.has_active:
             return
         if self._spec is not None:
@@ -339,30 +412,54 @@ class ServeEngine:
             if sched.on_token(st.rid, int(toks[st.slot]), now):
                 cache.free(st.slot)
 
-    def _prefill_into_slot(self, st):
-        """Chunked prefill of ``st.req.prompt`` into lane ``st.slot``
-        + sample the first generated token from the last-prompt-token
-        logits."""
+    def _begin_prefill(self, st):
+        """Stage lane ``st.slot`` for chunked prefill of
+        ``st.req.prompt``: build the right-padded prompt buffer, resolve
+        the dispatch ref (page-table row / slot index), and mark the lane
+        mid-prefill for the cache gauges."""
         cache = self.cache
         prompt = np.asarray(st.req.prompt, np.int32)
         S, C = len(prompt), self.prefill_chunk
         n_pad = ((S + C - 1) // C) * C
-        paged = isinstance(cache, PagedKVCache)
-        if paged:
-            page_row = cache.page_table_device(st.slot)
+        if isinstance(cache, PagedKVCache):
+            ref = cache.page_table_device(st.slot)
         else:
             assert n_pad <= cache.max_len, (n_pad, cache.max_len)
+            ref = jnp.int32(st.slot)
         buf = np.zeros(n_pad, np.int32)
         buf[:S] = prompt
-        logits = None
-        for c0 in range(0, n_pad, C):
-            ref = page_row if paged else jnp.int32(st.slot)
-            logits, cache.tree = self._prefill(
-                self.params, cache.tree,
-                jnp.asarray(buf[None, c0: c0 + C]), ref, jnp.int32(c0))
-            self.prefill_dispatches += 1
+        cache.mark_prefilling(st.slot)
+        self._prefills[st.rid] = (buf, S, n_pad, ref)
+
+    def _prefill_chunk(self, st):
+        """Dispatch ONE prefill chunk at ``st.prefill_pos`` and advance
+        the cursor.  On the final chunk, sample the first generated token
+        from the last-prompt-token logits and activate the request.
+
+        Mid-prefill, ``cache.seq_lens[slot]`` tracks the chunk-aligned
+        written prefix (< prompt length by construction).  That makes the
+        lane safe under interleaved decode / speculative dispatches:
+        their placeholder write for this lane lands at the cursor row,
+        which the *next* prefill chunk rewrites before ``seq_lens`` ever
+        advances past it — so no row is attended before it holds real
+        prompt K/V, on either cache layout."""
+        cache = self.cache
+        buf, S, n_pad, ref = self._prefills[st.rid]
+        C = self.prefill_chunk
+        c0 = st.prefill_pos
+        logits, cache.tree = self._prefill(
+            self.params, cache.tree,
+            jnp.asarray(buf[None, c0: c0 + C]), ref, jnp.int32(c0))
+        self.prefill_dispatches += 1
+        st.prefill_pos = c0 + C
+        if st.prefill_pos < n_pad:
+            cache.seq_lens[st.slot] = st.prefill_pos
+            return
+        # final chunk: the last prompt token's logits live here
+        del self._prefills[st.rid]
         cache.seq_lens[st.slot] = S
-        # last prompt token always lives in the final chunk
+        cache.unmark_prefilling(st.slot)
+        self.scheduler.activate(st.rid)
         last = logits[0, (S - 1) - (n_pad - C)][None]         # [1, Vp]
         tok = np.asarray(self._sample_batch(last, [st]))[0]
         if self.scheduler.on_token(st.rid, int(tok), time.monotonic()):
@@ -394,6 +491,7 @@ class ServeEngine:
         sched = self.scheduler
         while sched.has_pending:
             st = sched.admit(slot=0)
+            sched.activate(st.rid)     # sequential path has no chunk stage
             prompt = np.asarray(st.req.prompt, np.int32)
             cache = init_cache(self.cfg, 1, self.max_len)
             logits = None

@@ -83,6 +83,7 @@ class PagedKVCache:
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0
         self._free_pages = list(range(self.n_pages - 1, 0, -1))  # never 0
         self._pages_of: Dict[int, List[int]] = {}
+        self._prefilling: set = set()    # lanes mid-prefill (gauges)
         self._table_dev = None           # device copy, rebuilt on mutation
 
     # ---- lifecycle ------------------------------------------------------
@@ -150,8 +151,19 @@ class PagedKVCache:
         self._free_pages.extend(reversed(self._pages_of.pop(slot)))
         self.page_table[slot] = 0
         self.seq_lens[slot] = 0
+        self._prefilling.discard(slot)
         self._free_slots.append(slot)
         self._table_dev = None
+
+    def mark_prefilling(self, slot: int):
+        """Flag an allocated lane as mid-prefill — its reservation shows
+        up in the ``prefill_pages_in_use`` / ``lanes_prefilling`` gauges
+        until ``unmark_prefilling`` (or ``free``)."""
+        assert slot in self._pages_of, slot
+        self._prefilling.add(slot)
+
+    def unmark_prefilling(self, slot: int):
+        self._prefilling.discard(slot)
 
     def advance(self, slot: int, n: int = 1):
         """Mark ``n`` more rows of lane ``slot`` as written.  Must stay
@@ -178,33 +190,47 @@ class PagedKVCache:
 
     # ---- device views ---------------------------------------------------
     def seq_lens_device(self):
-        # jnp.array (not asarray): on CPU, asarray can alias the numpy
-        # buffer zero-copy, and the engine mutates seq_lens while the async
-        # decode dispatch may still be reading it — a data race.
-        return jnp.array(self.seq_lens)
+        # hand jax a PRIVATE numpy snapshot.  Despite jnp.array's
+        # documented copy semantics, on CPU jax 0.4.37 was OBSERVED
+        # materializing ``jnp.array(self.seq_lens)`` with values the
+        # engine wrote AFTER the call (dispatched decodes read
+        # post-``advance`` lengths; ~half of runs produced wrong tokens,
+        # the eligibility apparently alignment-/timing-dependent, hence
+        # the nondeterminism).  Do not "simplify" the .copy() away —
+        # re-aliasing the live buffer resurrects a silent correctness
+        # bug.  The snapshot itself is never mutated, so jax aliasing
+        # it is safe.
+        return jnp.asarray(self.seq_lens.copy())
 
     def page_table_device(self, slot: Optional[int] = None):
         if slot is not None:
-            return jnp.array(self.page_table[slot])
+            return jnp.asarray(self.page_table[slot].copy())
         # the table only mutates at admission/free, so the decode loop's
-        # per-step copy is cached (jnp.array snapshots, so there is no
-        # aliasing race with the host-side numpy mutations)
+        # per-step copy is cached (the .copy() snapshot is private to
+        # jax — see seq_lens_device for the aliasing rationale)
         if self._table_dev is None:
-            self._table_dev = jnp.array(self.page_table)
+            self._table_dev = jnp.asarray(self.page_table.copy())
         return self._table_dev
 
     # ---- gauges ---------------------------------------------------------
     def gauges(self) -> Dict[str, float]:
-        """Cache-utilization gauges: page occupancy and internal
-        fragmentation (reserved-but-unwritten rows / reserved rows)."""
+        """Cache-utilization gauges: page occupancy, internal
+        fragmentation (reserved-but-unwritten rows / reserved rows), and
+        in-flight prefill — pages reserved by lanes whose prompt is still
+        being chunk-prefilled under the interleaved schedule (these pages
+        are committed but not yet earning decode tokens)."""
         used_rows = int(self.seq_lens.sum())
         reserved_rows = self.pages_in_use * self.page_size
         frag = 0.0 if reserved_rows == 0 else 1.0 - used_rows / reserved_rows
+        prefill_pages = sum(len(self._pages_of[s]) for s in self._prefilling
+                            if s in self._pages_of)
         return {
             "pages_in_use": float(self.pages_in_use),
             "pages_total": float(self.page_budget),
             "page_utilization": self.pages_in_use / self.page_budget,
             "kv_fragmentation": frag,
+            "lanes_prefilling": float(len(self._prefilling)),
+            "prefill_pages_in_use": float(prefill_pages),
         }
 
     def bytes_resident(self) -> int:
@@ -224,6 +250,7 @@ class SlotKVCache:
         self.tree = init_cache(cfg, n_slots, max_len)
         self.seq_lens = np.zeros(n_slots, np.int32)
         self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
+        self._prefilling: set = set()    # lanes mid-prefill (gauges)
 
     # ---- slot lifecycle -------------------------------------------------
     @property
@@ -247,7 +274,17 @@ class SlotKVCache:
         """Return a finished request's slot to the pool."""
         assert 0 <= slot < self.n_slots and slot not in self._free, slot
         self.seq_lens[slot] = 0
+        self._prefilling.discard(slot)
         self._free.append(slot)
+
+    def mark_prefilling(self, slot: int):
+        """Flag an allocated lane as mid-prefill (``lanes_prefilling``
+        gauge) until ``unmark_prefilling`` (or ``free``)."""
+        assert slot not in self._free, slot
+        self._prefilling.add(slot)
+
+    def unmark_prefilling(self, slot: int):
+        self._prefilling.discard(slot)
 
     def advance(self, slot: int, n: int = 1):
         """Mark ``n`` more rows of ``slot`` as written (bounded by the
@@ -258,8 +295,8 @@ class SlotKVCache:
 
     # ---- device views ---------------------------------------------------
     def seq_lens_device(self):
-        # see PagedKVCache.seq_lens_device for the jnp.array rationale
-        return jnp.array(self.seq_lens)
+        # see PagedKVCache.seq_lens_device for the snapshot rationale
+        return jnp.asarray(self.seq_lens.copy())
 
     # ---- gauges ---------------------------------------------------------
     def gauges(self) -> Dict[str, float]:
@@ -275,6 +312,7 @@ class SlotKVCache:
             "slots_total": float(self.n_slots),
             "slot_utilization": self.n_active / self.n_slots,
             "kv_fragmentation": frag,
+            "lanes_prefilling": float(len(self._prefilling)),
         }
 
     def bytes_resident(self) -> int:

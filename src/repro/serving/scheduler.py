@@ -1,10 +1,26 @@
 """Admission queue + per-request lifecycle for the continuous-batching engine.
 
-Requests wait in a FIFO admission queue until a cache slot frees up, then
-stream tokens until *their own* termination condition — EOS or
-``max_new_tokens`` — and release the slot immediately, so a long request
-never makes short batchmates burn decode steps past their end (the seed
-engine ran every request to the batch max and sliced afterward).
+Requests move through three stages:
+
+  * **pending** — submitted, waiting in FIFO order for a cache lane and
+    (paged layout) their lifetime page reservation.
+  * **prefilling** — admitted to a lane; the prompt is being replayed in
+    fixed-size chunks.  ``RequestState.prefill_pos`` is the resumable
+    cursor (chunk-aligned prompt tokens already dispatched), so the engine
+    can spread one prompt's chunks across many steps — the interleaved
+    schedule packs at most ``prefill_budget`` prompt tokens per step next
+    to the decode dispatch instead of running a whole prompt to
+    completion while decode lanes stall.
+  * **active** — prefill complete (first token sampled); streams tokens
+    until *its own* termination condition — EOS or ``max_new_tokens`` —
+    and releases the lane immediately, so a long request never makes
+    short batchmates burn decode steps past their end.
+
+Latency accounting covers the three serving metrics: full-request and
+first-token (TTFT) percentiles per completed request, plus **inter-token
+latency** (TPOT) — the gap between consecutive tokens of the same
+request — which is what a blocking prefill schedule inflates and the
+interleaved schedule bounds.
 """
 from __future__ import annotations
 
@@ -13,6 +29,12 @@ import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
+
+
+class SchedulerError(RuntimeError):
+    """A scheduling invariant was violated (e.g. a token delivered to a
+    request that already finished).  A real exception — unlike ``assert``
+    it does not vanish under ``python -O``."""
 
 
 @dataclasses.dataclass
@@ -36,8 +58,13 @@ class RequestState:
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # resumable prefill cursor: prompt (+ chunk padding) tokens already
+    # dispatched; always a multiple of the engine's prefill_chunk while
+    # the request is mid-prefill
+    prefill_pos: int = 0
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
     t_done: Optional[float] = None
 
 
@@ -50,12 +77,18 @@ class Scheduler:
         self.max_request_tokens = max_request_tokens
         self._next_rid = 0
         self.pending: collections.deque = collections.deque()
+        # insertion-ordered: the engine prefills the FIFO head first
+        self.prefilling: Dict[int, RequestState] = {}
         self.active: Dict[int, RequestState] = {}
         self.finished: Dict[int, RequestState] = {}
         # bounded latency history: a long-lived engine must not grow
-        # without bound, so percentile stats run over a recent window
+        # without bound, so percentile stats run over recent windows.
+        # Inter-token gaps arrive ~max_new_tokens times per request, so
+        # their window is wider than the per-request one.
         self._latency: collections.deque = collections.deque(
             maxlen=latency_window)
+        self._itl: collections.deque = collections.deque(
+            maxlen=8 * latency_window)
 
     # ---- submission / admission ----------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> int:
@@ -74,15 +107,37 @@ class Scheduler:
         return rid
 
     def admit(self, slot: int) -> RequestState:
-        """Move the oldest pending request into a (pre-allocated) slot."""
+        """Move the oldest pending request into a (pre-allocated) lane.
+
+        The request enters the **prefilling** stage; ``activate()`` moves
+        it to decode-active once its prompt is fully prefilled."""
         st = self.pending.popleft()
         st.slot = slot
-        self.active[st.rid] = st
+        self.prefilling[st.rid] = st
         return st
+
+    def activate(self, rid: int) -> RequestState:
+        """Prefill complete: move a prefilling request to decode-active.
+        The caller samples the first token (from the final prefill
+        chunk's logits) and feeds it through ``on_token`` next."""
+        st = self.prefilling.pop(rid, None)
+        if st is None:
+            raise SchedulerError(f"activate() for request {rid}, which is "
+                                 f"not mid-prefill")
+        self.active[rid] = st
+        return st
+
+    def next_prefilling(self) -> RequestState:
+        """FIFO head of the prefilling stage (oldest admitted)."""
+        return next(iter(self.prefilling.values()))
 
     @property
     def has_pending(self) -> bool:
         return bool(self.pending)
+
+    @property
+    def has_prefilling(self) -> bool:
+        return bool(self.prefilling)
 
     @property
     def has_active(self) -> bool:
@@ -91,12 +146,26 @@ class Scheduler:
     # ---- token stream ---------------------------------------------------
     def on_token(self, rid: int, token: int, now: float = 0.0) -> bool:
         """Record one generated token; returns True if the request finished
-        (its slot should be freed)."""
-        st = self.active[rid]
-        assert not st.done, f"token for finished request {rid}"
+        (its slot should be freed).
+
+        Raises :class:`SchedulerError` if ``rid`` is not decode-active —
+        a token delivered to a finished (or mid-prefill / unknown)
+        request is an engine bug that must not be silently swallowed."""
+        st = self.active.get(rid)
+        if st is None or st.done:
+            stage = ("finished" if rid in self.finished else
+                     "mid-prefill" if rid in self.prefilling else
+                     "unknown")
+            raise SchedulerError(
+                f"token delivered to {stage} request {rid}")
         st.tokens.append(int(token))
         if st.t_first_token is None:
             st.t_first_token = now
+        else:
+            # inter-token (TPOT) gap — the stall a blocking prefill
+            # schedule inflates; percentiles over the recent window
+            self._itl.append(now - st.t_last_token)
+        st.t_last_token = now
         eos = st.req.eos_id
         if (eos is not None and token == eos) or \
                 len(st.tokens) >= st.req.max_new_tokens:
@@ -134,25 +203,33 @@ class Scheduler:
         st = self.finished[rid] if keep else self.finished.pop(rid)
         out = np.asarray(st.tokens, np.int32)
         eos = st.req.eos_id
-        if eos is not None and np.any(out == eos):
+        if eos is not None and np.any(out == eos) and \
+                int(np.argmax(out == eos)) != len(out) - 1:
             # invariant: generation stopped at the first EOS
-            assert int(np.argmax(out == eos)) == len(out) - 1, \
-                f"tokens after EOS in request {rid}"
+            raise SchedulerError(f"tokens after EOS in request {rid}")
         return out
 
     def latencies(self) -> Dict[str, float]:
-        """p50/p95 full-request and first-token latencies (seconds) over
-        the recent completion window."""
-        if not self._latency:
-            return {}
-        total = np.array([t for t, _ in self._latency])
-        first = np.array([f for _, f in self._latency])
-        return {
-            "p50_latency_s": float(np.percentile(total, 50)),
-            "p95_latency_s": float(np.percentile(total, 95)),
-            "p50_first_token_s": float(np.percentile(first, 50)),
-            "p95_first_token_s": float(np.percentile(first, 95)),
-        }
+        """Latency percentiles (seconds) over the recent windows:
+        p50/p95 full-request and first-token (per completed request) and
+        p50/p95 inter-token — TPOT, the gap between consecutive tokens of
+        one request (present once any request has emitted two tokens)."""
+        out: Dict[str, float] = {}
+        if self._latency:
+            total = np.array([t for t, _ in self._latency])
+            first = np.array([f for _, f in self._latency])
+            out.update({
+                "p50_latency_s": float(np.percentile(total, 50)),
+                "p95_latency_s": float(np.percentile(total, 95)),
+                "p50_first_token_s": float(np.percentile(first, 50)),
+                "p95_first_token_s": float(np.percentile(first, 95)),
+            })
+        if self._itl:
+            itl = np.asarray(self._itl)
+            out["p50_inter_token_s"] = float(np.percentile(itl, 50))
+            out["p95_inter_token_s"] = float(np.percentile(itl, 95))
+        return out
 
     def reset_latencies(self):
         self._latency.clear()
+        self._itl.clear()

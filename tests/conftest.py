@@ -8,3 +8,11 @@ assert "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    # tier-1 runs everything; CI splits it into a fast job (-m "not
+    # stress") and a stress job (-m stress) with per-test timeouts
+    config.addinivalue_line(
+        "markers",
+        "stress: randomized/property stress tests (separate CI job)")

@@ -74,6 +74,7 @@ def _check_invariants(cache: PagedKVCache):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.stress
 def test_page_table_invariants_random_lifecycle(moe):
     cfg, _ = moe
     rs = np.random.RandomState(0)
@@ -120,6 +121,7 @@ def test_alloc_rejects_when_pages_short(moe):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.stress
 def test_paged_engine_stress_matches_slot_and_reference(moe):
     cfg, params = moe
     rs = np.random.RandomState(42)
@@ -137,7 +139,7 @@ def test_paged_engine_stress_matches_slot_and_reference(moe):
     # invariants after every decode step (mid-flight admission + free)
     rids = []
     pending = list(reqs)
-    while pending or paged.scheduler.has_pending or paged.scheduler.has_active:
+    while pending or paged.busy:
         while pending and rs.rand() < 0.6:
             rids.append(paged.submit(pending.pop(0)))
         paged.step()
@@ -157,6 +159,7 @@ def test_paged_engine_stress_matches_slot_and_reference(moe):
         np.testing.assert_array_equal(outs_paged[idx], ref)
 
 
+@pytest.mark.stress
 def test_spec_engine_stress_rollback_keeps_invariants(moe):
     """Speculative engine under the randomized stress harness: bursty
     submits, mid-flight admission/free, and per-round seq_len rollback
@@ -178,7 +181,7 @@ def test_spec_engine_stress_rollback_keeps_invariants(moe):
 
     rids = []
     pending = list(reqs)
-    while pending or spec.scheduler.has_pending or spec.scheduler.has_active:
+    while pending or spec.busy:
         while pending and rs.rand() < 0.6:
             rids.append(spec.submit(pending.pop(0)))
         spec.step()

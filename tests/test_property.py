@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # optional dev dep (see requirements.txt)
+pytestmark = pytest.mark.stress
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.clustering import agglomerative_to_count

@@ -204,8 +204,10 @@ def test_temperature_sampling_and_stats(moe):
     stats = eng.latency_stats()
     assert set(stats) == {"p50_latency_s", "p95_latency_s",
                           "p50_first_token_s", "p95_first_token_s",
+                          "p50_inter_token_s", "p95_inter_token_s",
                           "pages_in_use", "pages_total",
-                          "page_utilization", "kv_fragmentation"}
+                          "page_utilization", "kv_fragmentation",
+                          "lanes_prefilling", "prefill_pages_in_use"}
     assert all(v >= 0 for v in stats.values())
     # all requests finished -> every page back in the pool
     assert stats["pages_in_use"] == 0 and stats["page_utilization"] == 0
