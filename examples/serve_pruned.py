@@ -108,6 +108,13 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prompt tokens of prefill per step under the "
                          "interleaved schedule (default: one chunk)")
+    ap.add_argument("--sparse-runtime", action="store_true",
+                    help="also serve through the sparse pruned-artifact "
+                         "runtime: stage-2 masks (+ the stage-1 expert "
+                         "keep-mask) are planned into block bitmaps, "
+                         "packed into block pools (repro.sparse), and "
+                         "served physically smaller — output is "
+                         "token-identical to dense-masked serving")
     args = ap.parse_args()
     sched_kwargs = {"schedule": args.schedule,
                     "prefill_budget": args.prefill_budget}
@@ -150,6 +157,40 @@ def main():
     print(f"first-8-token agreement pruned vs unpruned: {agree:.2%}")
     print(f"expert-weight reduction: "
           f"{1 - expert_bytes(pruned)/expert_bytes(params):.0%}")
+
+    if args.sparse_runtime:
+        from repro import sparse
+        from repro.core.expert_prune import expert_prune_moe
+        from repro.core.stun import unstructured_only
+
+        print("== serving: sparse pruned-artifact runtime ==")
+        # mask-form STUN: stage-1 keep-mask + stage-2 masks on the FULL
+        # model, then plan/pack the expert FFNs into block pools.  The
+        # dense-masked engine serving the plan's masks is the baseline
+        # the packed engine must reproduce token for token.
+        _, _, keep_mask, _ = expert_prune_moe(params, cfg, 0.25, mode="mask")
+        _, masks, _ = unstructured_only(params, cfg, batches,
+                                        target_sparsity=0.2, method="owl")
+        plan = sparse.plan_sparse_ffn(
+            masks, sparse.ffn_weights_from_params(params, cfg),
+            block=(16, 16), expert_mask=keep_mask,
+            target_block_sparsity=0.4)
+        packed, prep = sparse.pack_sparse_ffn(params, cfg, plan)
+        masks.update(plan.element_masks())
+        out_m, tps_m, _ = serve_and_time(params, cfg, requests,
+                                         expert_mask=keep_mask,
+                                         weight_masks=masks, **sched_kwargs)
+        out_s, tps_s, _ = serve_and_time(params, cfg, requests,
+                                         expert_mask=keep_mask,
+                                         weight_masks=masks,
+                                         sparse_weights=packed,
+                                         **sched_kwargs)
+        identical = all(bool(np.all(a == b)) for a, b in zip(out_m, out_s))
+        print(f"tokens/s={tps_s:.1f} ({tps_s / tps_m:.2f}x dense-masked) "
+              f"expert_ffn_bytes={prep['packed_bytes'] / 1e6:.2f}MB "
+              f"({prep['bytes_ratio']:.2f}x dense) "
+              f"block_sparsity={prep['block_sparsity']:.1%} "
+              f"token-identical-to-dense-masked={identical}")
 
     if args.spec_decode:
         from repro.core.expert_prune import expert_prune_moe

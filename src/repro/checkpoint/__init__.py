@@ -4,3 +4,7 @@ from repro.checkpoint.store import (  # noqa: F401
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.checkpoint.sparse_artifact import (  # noqa: F401
+    masks_from_tree,
+    masks_to_tree,
+)

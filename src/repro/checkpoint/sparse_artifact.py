@@ -1,0 +1,53 @@
+"""Checkpoint format for pruning artifacts: masks + packed sparse FFN.
+
+``save_checkpoint`` flattens any nested dict of arrays, so both artifacts
+are stored as plain subtrees next to ``params`` in the same step
+directory (block index, pool, and permutations all land in the manifest
+as ordinary leaves — no side files, atomicity for free):
+
+    step_N/
+      manifest.msgpack      params/..., masks/..., sparse_ffn/...
+      shard_0.bin
+
+``masks`` — the ``{(layer, path) -> bool ndarray}`` dict from
+``core.unstructured.sparsify_model``, stored under
+``masks/<layer>/<path...>`` so pruning runs are resumable and
+inspectable without recomputing Wanda/OWL scores.
+
+``sparse_ffn`` — the packed artifact from ``sparse.pack_sparse_ffn``
+(already a plain dict of arrays: ``pool`` / ``index`` / ``perm_k`` /
+``perm_n`` per expert FFN matrix), stored verbatim; feed it back to
+``ServeEngine(sparse_weights=...)`` or ``sparse.install_sparse_ffn``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def masks_to_tree(masks: Dict[Tuple[int, tuple], np.ndarray]) -> Dict:
+    """{(layer, path) -> mask} -> nested checkpoint subtree."""
+    tree: Dict = {}
+    for (layer, path), mask in masks.items():
+        node = tree.setdefault(str(layer), {})
+        for key in path[:-1]:
+            node = node.setdefault(key, {})
+        node[path[-1]] = np.asarray(mask, bool)
+    return tree
+
+
+def masks_from_tree(tree: Dict) -> Dict[Tuple[int, tuple], np.ndarray]:
+    """Inverse of ``masks_to_tree`` (restore path)."""
+    masks: Dict = {}
+
+    def walk(node, layer, prefix):
+        for key, val in node.items():
+            if isinstance(val, dict):
+                walk(val, layer, prefix + (key,))
+            else:
+                masks[(layer, prefix + (key,))] = np.asarray(val, bool)
+
+    for layer_str, sub in tree.items():
+        walk(sub, int(layer_str), ())
+    return masks

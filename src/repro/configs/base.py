@@ -75,6 +75,11 @@ class ModelConfig:
     # float8_e4m3fn halves the decode memory term — the TPU-idiomatic
     # analogue of the paper's 4-bit serving quantization.
     kv_cache_dtype: str = ""
+    # sparse pruned-artifact runtime (repro.sparse): execute-mode override
+    # for packed expert-FFN weights.  "" = backend default (Pallas gather
+    # kernel on TPU, bit-exact densify elsewhere); "exact" | "gather" |
+    # "pallas" | "interpret" force a path (see sparse/execute.py).
+    sparse_exec: str = ""
 
     @property
     def heads_eff(self) -> int:

@@ -38,14 +38,22 @@ class StunReport:
     expert_report: Optional[object] = None
     unstructured_report: Optional[dict] = None
     forward_passes: int = 0
+    # post-stage-1 / pre-stage-2 params (host tree), kept only on
+    # request: consumers that re-plan the stage-2 masks (e.g. the sparse
+    # runtime's block re-rounding, which revives pruned weights) need
+    # the pre-masking values — they are zeros in the returned params
+    stage1_params: Optional[object] = None
 
 
 def stun_prune(params, cfg, calib_batches, *, target_sparsity: float,
                expert_ratio: float = 0.25, unstructured: str = "owl",
                lam1: float = 1.0, lam2: float = 0.0, kappa: int = 3,
                cluster_method: str = "agglomerative",
-               nm: Optional[tuple] = None):
-    """Full STUN. Returns (pruned_params, pruned_cfg, masks, StunReport)."""
+               nm: Optional[tuple] = None, keep_stage1: bool = False):
+    """Full STUN. Returns (pruned_params, pruned_cfg, masks, StunReport).
+
+    ``keep_stage1=True`` additionally stows the post-stage-1 params on
+    ``report.stage1_params`` (see the field's comment)."""
     kurt0 = model_kurtosis(params)
     fwd = 0
 
@@ -89,6 +97,7 @@ def stun_prune(params, cfg, calib_batches, *, target_sparsity: float,
         expert_report=erep,
         unstructured_report=urep,
         forward_passes=fwd,
+        stage1_params=params1 if keep_stage1 else None,
     )
     return params2, cfg1, masks, report
 

@@ -109,7 +109,13 @@ def mask_per_output(scores: np.ndarray, sparsity: float, in_axis
 def nm_rounding(scores: np.ndarray, in_axis, n: int = 2, m: int = 4
                 ) -> np.ndarray:
     """N:M re-rounding of a score tensor (TPU/accelerator-friendly pattern):
-    keep the top-n of every m consecutive weights along the input axis."""
+    keep the top-n of every m consecutive weights along the input axis.
+
+    Exactly n survive per group even under score ties (deterministic:
+    stable ascending argsort takes the last n, so among equal scores the
+    higher-indexed weights survive) — a threshold comparison would keep
+    every tied weight and break the hardware pattern's <= n guarantee.
+    """
     ax = in_axis if not isinstance(in_axis, tuple) else in_axis[0]
     s = np.moveaxis(np.asarray(scores, np.float32), ax, -1)
     orig = s.shape[-1]
@@ -118,8 +124,10 @@ def nm_rounding(scores: np.ndarray, in_axis, n: int = 2, m: int = 4
         s = np.concatenate([s, np.full(s.shape[:-1] + (pad,), -np.inf,
                                        s.dtype)], axis=-1)
     grp = s.reshape(s.shape[:-1] + (s.shape[-1] // m, m))
-    thresh = np.sort(grp, axis=-1)[..., m - n: m - n + 1]
-    mask = (grp >= thresh).reshape(s.shape)[..., :orig]
+    order = np.argsort(grp, axis=-1, kind="stable")
+    mask_g = np.zeros(grp.shape, bool)
+    np.put_along_axis(mask_g, order[..., m - n:], True, axis=-1)
+    mask = mask_g.reshape(s.shape)[..., :orig]
     return np.moveaxis(mask, -1, ax)
 
 

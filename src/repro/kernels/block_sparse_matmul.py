@@ -86,3 +86,75 @@ def build_block_mask(mask: np.ndarray, block_k: int, block_n: int
     assert K % block_k == 0 and N % block_n == 0
     m = mask.reshape(K // block_k, block_k, N // block_n, block_n)
     return m.any(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Gather variant: the weight never exists densely — live blocks sit in a
+# [n_slots, bk, bn] pool (slot 0 is an all-zero sentinel) and a
+# [K/bk, N/bn] int32 index maps each logical block to its pool slot
+# (paged-KV-for-weights).  The index rides in scalar-prefetch SMEM and
+# drives the pool BlockSpec index map, so a dead block neither streams
+# bytes from its own storage (there is none) nor issues an MXU dot.
+# ---------------------------------------------------------------------------
+
+
+def _bsgmm_kernel(idx_ref, x_ref, pool_ref, o_ref, acc_scr, *, n_k, n_n):
+    j_n = pl.program_id(1)
+    k_k = pl.program_id(2)
+
+    @pl.when(k_k == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(idx_ref[k_k * n_n + j_n] != 0)
+    def _compute():
+        acc_scr[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), pool_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k_k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def block_sparse_gather_matmul(x, pool, block_index, *, block_m=128,
+                               interpret=False):
+    """x [M,K] @ block-compressed w -> [M,N].
+
+    ``pool`` [n_slots, bk, bn] holds the live weight blocks (slot 0 MUST
+    be all zeros — the dead-block sentinel); ``block_index`` [K/bk, N/bn]
+    int32 maps logical block (k, j) to its pool slot, 0 where dead.  The
+    index is scalar-prefetched and both selects the pool block to DMA and
+    gates the dot with ``pl.when``, so dead blocks cost neither bandwidth
+    nor MXU time (the sentinel block's DMA is shared and cache-resident).
+    """
+    M, K = x.shape
+    _, bk, bn = pool.shape
+    n_k, n_n = block_index.shape
+    assert K == n_k * bk, (K, n_k, bk)
+    N = n_n * bn
+    block_m = min(block_m, M)
+    assert M % block_m == 0, (M, block_m)
+    idx_flat = block_index.astype(jnp.int32).reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M // block_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, bk), lambda i, j, k, idx: (i, k)),
+            pl.BlockSpec((1, bk, bn),
+                         lambda i, j, k, idx: (idx[k * n_n + j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, bn),
+                               lambda i, j, k, idx: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bsgmm_kernel, n_k=n_k, n_n=n_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(idx_flat, x, pool)

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.block_sparse_matmul import block_sparse_matmul
+from repro.kernels.block_sparse_matmul import (block_sparse_gather_matmul,
+                                               block_sparse_matmul)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.paged_decode_attention import paged_decode_attention
@@ -79,17 +80,47 @@ def gmm_op(buf, w, *, force=None):
     return ref.moe_gmm_ref(buf, w)
 
 
+def choose_block_m(M: int, cap: int = 128) -> int:
+    """Largest divisor of M that is <= cap — the one shape-driven tile
+    chooser for every block-sparse dispatch (kernel asserts M % bm == 0,
+    so a non-divisor tile is a shape error, not a slow path).  A ragged M
+    (e.g. prime) degrades gracefully toward smaller tiles instead of
+    failing; M itself is always a valid fallback when M <= cap."""
+    for bm in range(min(M, cap), 0, -1):
+        if M % bm == 0:
+            return bm
+    return 1  # pragma: no cover — range above always hits a divisor
+
+
 def sparse_matmul_op(x, w, block_mask, *, block_k=128, block_n=128,
                      force=None):
+    """x [M,K] @ w [K,N] skipping dead blocks of ``block_mask``
+    [K/block_k, N/block_n].  block_k/block_n are fixed by the caller's
+    bitmap; the M tile is chosen from the shape by ``choose_block_m`` on
+    both kernel paths (previously the interpret branch hardcoded
+    block_m=32, which broke for M not divisible by 32)."""
     mode = force or ("pallas" if on_tpu() else "ref")
-    if mode == "pallas":
-        return block_sparse_matmul(x, w, block_mask, block_k=block_k,
-                                   block_n=block_n)
-    if mode == "interpret":
-        return block_sparse_matmul(x, w, block_mask, block_m=32,
+    if mode in ("pallas", "interpret"):
+        return block_sparse_matmul(x, w, block_mask,
+                                   block_m=choose_block_m(x.shape[0]),
                                    block_n=block_n, block_k=block_k,
-                                   interpret=True)
+                                   interpret=mode == "interpret")
     return ref.block_sparse_matmul_ref(x, w, block_mask, block_k, block_n)
+
+
+def sparse_gather_matmul_op(x, pool, block_index, *, force=None):
+    """x [M,K] @ block-compressed weight -> [M,N] (see
+    ``block_sparse_gather_matmul``): ``pool`` [n_slots, bk, bn] with slot
+    0 the all-zero sentinel, ``block_index`` [K/bk, N/bn] int32 (0 =
+    dead).  The sparse runtime's expert-FFN execute path dispatches here;
+    the jnp reference unpacks the pool and runs one dense matmul, so the
+    CPU path is bit-identical to serving the mask-multiplied weight."""
+    mode = force or ("pallas" if on_tpu() else "ref")
+    if mode in ("pallas", "interpret"):
+        return block_sparse_gather_matmul(
+            x, pool, block_index, block_m=choose_block_m(x.shape[0]),
+            interpret=mode == "interpret")
+    return ref.block_sparse_gather_matmul_ref(x, pool, block_index)
 
 
 def wanda_prune_op(w, xnorm, sparsity: float, *, force=None):

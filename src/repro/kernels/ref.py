@@ -73,6 +73,25 @@ def block_sparse_matmul_ref(x, w, block_mask, bk, bn):
     return (x.astype(jnp.float32) @ wm.astype(jnp.float32)).astype(x.dtype)
 
 
+def unpack_blocks_ref(pool, block_index):
+    """Block pool [n_slots, bk, bn] + index [Kb, Nb] -> dense [Kb*bk, Nb*bn].
+
+    Slot 0 is the all-zero dead-block sentinel, so ``pool[block_index]``
+    reconstructs exactly the masked dense matrix the pack stage consumed
+    (same float values — no arithmetic happens, only gather/transpose).
+    """
+    Kb, Nb = block_index.shape
+    _, bk, bn = pool.shape
+    blocks = pool[block_index]                        # [Kb, Nb, bk, bn]
+    return blocks.transpose(0, 2, 1, 3).reshape(Kb * bk, Nb * bn)
+
+
+def block_sparse_gather_matmul_ref(x, pool, block_index):
+    """x [M,K] @ unpacked(pool, index) -> [M,N]; fp32 accumulation."""
+    w = unpack_blocks_ref(pool, block_index)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
 def wanda_mask_apply_ref(w, xnorm, thresh):
     """w [K,N], xnorm [K], thresh [N] -> w masked where |w|·xnorm <= thresh."""
     score = jnp.abs(w.astype(jnp.float32)) * xnorm.astype(jnp.float32)[:, None]

@@ -2,11 +2,18 @@
 
     python -m repro.launch.prune --arch olmoe-1b-7b \
         --checkpoint-dir /ckpt/in --out-dir /ckpt/pruned \
-        --sparsity 0.4 --expert-ratio 0.25 --unstructured owl
+        --sparsity 0.4 --expert-ratio 0.25 --unstructured owl --pack
 
 Mirrors the paper's deployment recipe: the whole decision is host-side
 (router weights only for λ=(1,0)) — one machine, no accelerator required,
 O(1) in the number of experts.
+
+The output checkpoint always carries the stage-2 ``masks`` subtree (see
+``checkpoint.sparse_artifact``) so pruning runs are resumable and
+inspectable without recomputing Wanda/OWL scores.  ``--pack``
+additionally plans + packs the expert FFN masks into the block-compressed
+``sparse_ffn`` artifact (``repro.sparse``), served directly via
+``launch.serve --sparse-runtime``.
 """
 import argparse
 import dataclasses
@@ -14,7 +21,8 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (masks_to_tree, restore_checkpoint,
+                              save_checkpoint)
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
 from repro.core import stun_prune
 from repro.data.synthetic import calibration_batches
@@ -33,12 +41,30 @@ def main():
                     help="coactivation weight (0 = no forward passes)")
     ap.add_argument("--kappa", type=int, default=3)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--pack", action="store_true",
+                    help="also emit the block-compressed sparse_ffn "
+                         "artifact (MoE archs): expert FFN masks are "
+                         "planned into MXU-tile block bitmaps and live "
+                         "blocks packed into per-matrix pools "
+                         "(repro.sparse), so the pruned model is "
+                         "physically smaller at serve time")
+    ap.add_argument("--pack-block", type=int, default=0,
+                    help="square block size for --pack (0 = auto: "
+                         "largest power-of-two divisor <= 128)")
+    ap.add_argument("--pack-block-sparsity", type=float, default=None,
+                    help="optional dead-block target for --pack: "
+                         "sparsity-preserving block re-rounding "
+                         "concentrates the element budget into "
+                         "skippable blocks (see docs/sparse.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = dataclasses.replace(reduced(cfg), dtype="float32",
                                   moe_impl="dense", remat_policy="full")
+    if args.pack and cfg.family != "moe":
+        ap.error("--pack packs expert FFNs; "
+                 f"--arch {args.arch} is family {cfg.family!r}")
     step, tree = restore_checkpoint(args.checkpoint_dir)
     params = jax.tree.map(jax.numpy.asarray, tree["params"])
     batches = calibration_batches(cfg, n_batches=4)
@@ -46,10 +72,45 @@ def main():
     pruned, pcfg, masks, report = stun_prune(
         params, cfg, batches, target_sparsity=args.sparsity,
         expert_ratio=structured, unstructured=args.unstructured,
-        lam2=args.lam2, kappa=args.kappa)
-    save_checkpoint(args.out_dir, step,
-                    {"params": jax.tree.map(np.asarray, pruned)})
-    print(f"pruned checkpoint written to {args.out_dir}")
+        lam2=args.lam2, kappa=args.kappa, keep_stage1=args.pack)
+    pruned = jax.tree.map(np.asarray, pruned)
+    out_tree = {"params": pruned, "masks": masks_to_tree(masks)}
+    if args.pack:
+        from repro import sparse
+        from repro.serving import apply_weight_masks
+
+        # plan on the PRE-stage-2 weights: block re-rounding revives
+        # pruned weights, whose values are zeros in `pruned` but live in
+        # report.stage1_params
+        stage1 = jax.tree.map(np.asarray, report.stage1_params)
+        plan = sparse.plan_sparse_ffn(
+            masks, sparse.ffn_weights_from_params(stage1, pcfg),
+            block=("auto" if args.pack_block == 0
+                   else (args.pack_block, args.pack_block)),
+            target_block_sparsity=args.pack_block_sparsity)
+        # the plan's (possibly re-rounded) masks are what the artifact
+        # realizes — persist them and re-derive params from the stage-1
+        # weights so revived elements carry their real values
+        masks.update(plan.element_masks())
+        out_tree["masks"] = masks_to_tree(masks)
+        pruned = jax.tree.map(np.asarray,
+                              apply_weight_masks(stage1, pcfg, masks))
+        out_tree["params"] = pruned
+        packed, prep = sparse.pack_sparse_ffn(stage1, pcfg, plan)
+        out_tree["sparse_ffn"] = packed
+        print(f"  packed: {prep['packed_bytes']}B / {prep['dense_bytes']}B "
+              f"expert-FFN ({prep['bytes_ratio']:.2f}x), block sparsity "
+              f"{prep['block_sparsity']:.1%}"
+              + (f", {prep['blocks_rerounded']} blocks re-rounded"
+                 if prep["blocks_rerounded"] else ""))
+        if prep["bytes_ratio"] >= 0.95:
+            print("  note: little block yield — compact checkpoints have "
+                  "no dead experts to fold; pass --pack-block-sparsity "
+                  "(e.g. 0.3) to concentrate the element budget into "
+                  "skippable blocks (sparsity-preserving re-rounding)")
+    save_checkpoint(args.out_dir, step, out_tree)
+    print(f"pruned checkpoint written to {args.out_dir} "
+          f"(masks persisted{'; sparse_ffn packed' if args.pack else ''})")
     print(f"  structured: {report.structured_ratio:.1%}  "
           f"unstructured: {report.unstructured_ratio:.1%}  "
           f"forward passes: {report.forward_passes}")

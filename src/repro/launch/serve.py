@@ -67,6 +67,17 @@ def main():
                     help="fraction of experts masked off in the drafter "
                          "(MoE archs; non-MoE archs draft with the dense "
                          "model itself)")
+    ap.add_argument("--sparse-runtime", action="store_true",
+                    help="serve the block-compressed sparse_ffn artifact "
+                         "from the checkpoint (written by launch.prune "
+                         "--pack): expert FFN weights stay packed in "
+                         "memory and execute through the block-sparse "
+                         "path instead of being densified at load")
+    ap.add_argument("--sparse-exec", default=None,
+                    choices=["exact", "gather", "pallas", "interpret"],
+                    help="force the packed execute path (default: Pallas "
+                         "gather kernel on TPU, bit-exact unpack "
+                         "elsewhere)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -75,6 +86,16 @@ def main():
                                   moe_impl="dense", remat_policy="full")
     _, tree = restore_checkpoint(args.checkpoint_dir)
     params = jax.tree.map(jax.numpy.asarray, tree["params"])
+    sparse_kwargs = {}
+    if args.sparse_runtime:
+        if "sparse_ffn" not in tree:
+            ap.error("--sparse-runtime: checkpoint has no sparse_ffn "
+                     "artifact (re-run launch.prune with --pack)")
+        sparse_kwargs = {"sparse_weights": tree["sparse_ffn"],
+                         "sparse_exec": args.sparse_exec}
+        from repro.sparse import sparse_ffn_bytes
+        print(f"sparse runtime: packed expert-FFN artifact = "
+              f"{sparse_ffn_bytes(tree['sparse_ffn'])} bytes")
     # infer pruned expert count from the checkpoint (compact STUN output)
     if cfg.family == "moe":
         e = params["layers"]["moe"]["router"].shape[1]
@@ -108,7 +129,8 @@ def main():
                       kv_layout=args.kv_layout, page_size=args.page_size,
                       page_budget=args.page_budget,
                       schedule=args.schedule,
-                      prefill_budget=args.prefill_budget, **spec_kwargs)
+                      prefill_budget=args.prefill_budget,
+                      **sparse_kwargs, **spec_kwargs)
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req{i}: {o.tolist()}")

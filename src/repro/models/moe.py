@@ -11,6 +11,13 @@ would inflate dispatch FLOPs ~quadratically in group size).
 
 The router weight is stored as ``[E, D]`` — rows are exactly the W_i vectors
 STUN's behavioral similarity (Eq. 8) clusters on.
+
+Expert FFN weights may be *packed* sparse entries instead of dense
+arrays (``repro.sparse``): every expert matmul goes through
+``sparse.maybe_expert_einsum``, which runs the identical einsum for dense
+weights and dispatches packed ones through the block-sparse execute path
+(Pallas gather kernel on TPU, bit-exact densify elsewhere;
+``cfg.sparse_exec`` overrides).
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import swiglu
+from repro.sparse.execute import maybe_expert_einsum, sparse_exec_force
 
 
 def router_probs(x_flat, router_w):
@@ -84,10 +92,14 @@ def moe_block(x, params, cfg, *, mesh=None, capacity_factor=None,
                                            "model", None, None)))
 
     # --- expert computation (batched over E; TPU fast path = moe_gmm) ---
-    g = jnp.einsum("gecd,edf->gecf", buf, params["we_gate"])
-    u = jnp.einsum("gecd,edf->gecf", buf, params["we_up"])
+    sf = sparse_exec_force(cfg)
+    g = maybe_expert_einsum("gecd,edf->gecf", buf, params["we_gate"],
+                            n_experts=E, force=sf)
+    u = maybe_expert_einsum("gecd,edf->gecf", buf, params["we_up"],
+                            n_experts=E, force=sf)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    y = jnp.einsum("gecf,efd->gecd", h, params["we_down"])          # [G,E,C,D]
+    y = maybe_expert_einsum("gecf,efd->gecd", h, params["we_down"],
+                            n_experts=E, force=sf)                  # [G,E,C,D]
 
     # --- combine: scatter-add back to tokens with router weights ---
     y_flat = y.reshape(G, E * C, D)
@@ -118,10 +130,15 @@ def moe_block_dense(x, params, cfg, expert_mask=None):
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
     gate = jnp.sum(jax.nn.one_hot(top_i, cfg.n_experts, dtype=jnp.float32)
                    * top_p[..., None], axis=-2)                   # [B,S,E]
-    g = jnp.einsum("bsd,edf->bsef", x, params["we_gate"])
-    u = jnp.einsum("bsd,edf->bsef", x, params["we_up"])
+    sf = sparse_exec_force(cfg)
+    E = cfg.n_experts
+    g = maybe_expert_einsum("bsd,edf->bsef", x, params["we_gate"],
+                            n_experts=E, force=sf)
+    u = maybe_expert_einsum("bsd,edf->bsef", x, params["we_up"],
+                            n_experts=E, force=sf)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    y = jnp.einsum("bsef,efd->bsed", h, params["we_down"])
+    y = maybe_expert_einsum("bsef,efd->bsed", h, params["we_down"],
+                            n_experts=E, force=sf)
     out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), gate)
     out = out.astype(x.dtype)
     if cfg.shared_expert:

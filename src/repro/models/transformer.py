@@ -7,6 +7,16 @@ Params are ParamSpec trees (models/param.py).  Homogeneous stacks are
 scanned (`lax.scan` over stacked [L, ...] params, jax.checkpoint remat
 inside) so HLO size is O(1) in depth; the heterogeneous hybrid stack is
 unrolled (26 small layers).
+
+MoE expert FFN weights may be *packed* sparse entries
+(``repro.sparse.install_sparse_ffn``) instead of dense arrays: an entry
+is itself a pytree (block pool + index + permutations), so every path
+here — ``forward``, chunked prefill, ragged/paged decode, and the
+spec-decode draft/verify steps — carries it transparently (``lax.scan``
+slices its leading layer axis exactly like a dense weight) and
+``models.moe`` dispatches the expert matmuls through the block-sparse
+execute path.  Oracle: packed forward/decode logits are bit-identical
+to the dense-masked params' (tests/test_sparse_runtime.py).
 """
 from __future__ import annotations
 

@@ -39,6 +39,16 @@ block-sparse kernel exploits stage-2 masks.  The engine:
     flows into every prefill/decode dispatch, and stage-2 unstructured
     masks from ``core.unstructured.sparsify_model`` can be re-applied to
     the weights at load time via ``weight_masks=``.
+  * **sparse pruned-artifact runtime** (``sparse_weights=`` — a packed
+    artifact from ``repro.sparse.pack_sparse_ffn``) — expert FFN weights
+    load block-compressed (live MXU-tile blocks in a pool + per-expert
+    block index, paged-KV-for-weights) instead of being densified by a
+    load-time multiply, so a φ-block-sparse FFN is *physically smaller*
+    in memory and its matmuls dispatch through the Pallas block-sparse
+    gather kernel on TPU.  Off-TPU the execute path unpacks inside the
+    dispatch and replays the identical einsum, so packed serving is
+    bit-identical to ``weight_masks=`` serving with the plan's masks
+    (oracle-pinned in tests/test_disaggregation.py).
   * **self-speculative decoding** (``spec_decode="pruned"``, paged layout
     only — `speculative.SpeculativeDecoder`) — the pruned artifact drafts
     ``spec_k`` tokens per round in one fused dispatch and the dense model
@@ -52,6 +62,7 @@ back to a correct sequential per-request path.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional
 
@@ -61,6 +72,7 @@ import numpy as np
 
 from repro.models import (decode_step, decode_step_paged, decode_step_ragged,
                           init_cache, prefill_step, prefill_step_paged)
+from repro.sparse import install_sparse_ffn
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.speculative import SpeculativeDecoder
@@ -108,11 +120,18 @@ class ServeEngine:
     ``spec_decode="pruned"`` turns on self-speculative decoding on the
     paged layout: the engine holds TWO param sets — the dense ``params``
     (prefill + verify) and a pruned drafter built from the same weights.
-    In spec mode ``expert_mask`` / ``weight_masks`` / ``draft_params``
-    describe the *drafter* (served output is dense-model quality, token-
-    identical to plain greedy decode); outside spec mode they prune the
-    served model itself, as before.  ``spec_k`` draft tokens are proposed
-    per round (default 4).
+    In spec mode ``expert_mask`` / ``weight_masks`` / ``draft_params`` /
+    ``sparse_weights`` describe the *drafter* (served output is
+    dense-model quality, token-identical to plain greedy decode); outside
+    spec mode they prune the served model itself, as before.  ``spec_k``
+    draft tokens are proposed per round (default 4).
+
+    ``sparse_weights`` is a packed artifact from
+    ``repro.sparse.pack_sparse_ffn``: expert FFN weights are replaced by
+    their block-compressed form (applied after ``weight_masks``, which
+    then only dense-masks the non-FFN weights).  ``sparse_exec``
+    optionally forces the execute path ("exact" | "gather" | "pallas" |
+    "interpret"; default: kernel on TPU, bit-exact unpack elsewhere).
 
     ``schedule="interleaved"`` (default) meters prefill at
     ``prefill_budget`` prompt tokens per step (rounded down to whole
@@ -131,7 +150,9 @@ class ServeEngine:
                  page_size: int = 16, page_budget: Optional[int] = None,
                  spec_decode: Optional[str] = None, spec_k: int = 4,
                  draft_params=None, schedule: str = "interleaved",
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 sparse_weights: Optional[Dict] = None,
+                 sparse_exec: Optional[str] = None):
         if kv_layout not in ("paged", "slot"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if schedule not in ("interleaved", "blocking"):
@@ -140,6 +161,13 @@ class ServeEngine:
             raise ValueError("prefill_budget must be >= 1")
         if spec_decode not in (None, "pruned"):
             raise ValueError(f"unknown spec_decode {spec_decode!r}")
+        if sparse_weights is not None and cfg.family != "moe":
+            raise ValueError("sparse_weights packs expert FFNs; "
+                             f"family={cfg.family!r} has none")
+        if sparse_exec:
+            if sparse_weights is None:
+                raise ValueError("sparse_exec without sparse_weights")
+            cfg = dataclasses.replace(cfg, sparse_exec=sparse_exec)
         if spec_decode is not None:
             if kv_layout != "paged":
                 raise ValueError(
@@ -155,10 +183,14 @@ class ServeEngine:
             draft = params if draft_params is None else draft_params
             if weight_masks:
                 draft = apply_weight_masks(draft, cfg, weight_masks)
+            if sparse_weights is not None:
+                draft = install_sparse_ffn(draft, cfg, sparse_weights)
             self.draft_params = draft
         else:
             if weight_masks:
                 params = apply_weight_masks(params, cfg, weight_masks)
+            if sparse_weights is not None:
+                params = install_sparse_ffn(params, cfg, sparse_weights)
             self.draft_params = None
         self.params = params
         self.cfg = cfg

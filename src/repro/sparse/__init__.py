@@ -1,0 +1,26 @@
+"""Sparse pruned-artifact runtime: plan -> pack -> execute.
+
+Bridges ``core`` (mask production) and ``serving`` (mask consumption):
+stage-2 unstructured masks become block-compressed weights that are
+*physically smaller* and execute through the Pallas block-sparse path.
+See docs/sparse.md for the artifact format and contracts.
+"""
+from repro.sparse.execute import (  # noqa: F401
+    densify,
+    densify_full,
+    expert_einsum,
+    is_packed,
+    maybe_expert_einsum,
+)
+from repro.sparse.pack import (  # noqa: F401
+    install_sparse_ffn,
+    pack_sparse_ffn,
+    sparse_ffn_bytes,
+)
+from repro.sparse.plan import (  # noqa: F401
+    FFN_PATHS,
+    MatrixPlan,
+    SparsePlan,
+    ffn_weights_from_params,
+    plan_sparse_ffn,
+)

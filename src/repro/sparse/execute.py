@@ -1,0 +1,225 @@
+"""Execute stage: expert FFN matmuls straight from block-compressed
+weights.
+
+``expert_einsum`` is the single entry point ``models.moe`` dispatches
+through whenever a weight leaf is a packed entry (see ``pack``).  The
+runtime entry stores only the experts that still own live blocks: a
+fully-dead expert (STUN stage-1 in mask form) is *absent* — its compute
+is skipped in every mode and its output rows are exact zeros scattered
+through the ``alive_e`` map, which is what the dense-masked path also
+produces for an all-zero weight (bitwise: x @ 0 == 0).
+
+Modes:
+
+  * ``"pallas"`` (TPU default) / ``"interpret"`` — per-alive-expert
+    dispatch through ``kernels.block_sparse_matmul.
+    block_sparse_gather_matmul``: the scalar-prefetched block index
+    gathers live blocks out of the pool and skips dead ones entirely (no
+    bytes, no MXU dots).  Activations are gathered through ``perm_k``
+    before the kernel and un-permuted through ``inv_perm_n`` after, so
+    permutation costs two cheap gathers on activations, never a weight
+    materialization.
+  * ``"exact"`` (CPU default) — unpacks the pool to the dense masked
+    matrices of the alive experts (gather + transpose + inverse
+    permutation: pure data movement, no arithmetic) and replays the
+    *identical* einsum the dense path runs, restricted to alive experts.
+    Packed serving is therefore bit-identical to dense-masked serving
+    (the property the serving oracle pins) while skipping the dead
+    experts' FLOPs.
+  * ``"gather"`` — FLOP-proportional jnp path: per live pool slot, the
+    matching activation tile multiplies its block and scatter-adds into
+    the output (compute scales with live blocks, like the kernel).
+    Numerically allclose, not bit-equal (different reduction order).
+
+The mode comes from ``force`` (or ``cfg.sparse_exec`` via the model),
+else the backend default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+#: entry marker — a packed weight is a dict with these keys (see pack.py)
+_PACKED_KEY = "pool"
+
+#: einsum specs models.moe dispatches: (x layout, w layout) -> out layout
+SUPPORTED_SPECS = ("bsd,edf->bsef", "gecd,edf->gecf",
+                   "bsef,efd->bsed", "gecf,efd->gecd")
+
+
+def is_packed(w) -> bool:
+    return isinstance(w, dict) and _PACKED_KEY in w
+
+
+def densify(entry):
+    """Packed entry (one layer) -> dense [A, K, N] in original
+    coordinates for the A stored (alive) experts, elementwise equal to
+    ``W * element_mask``.  Gathers and transposes only — no arithmetic —
+    so feeding the result to the dense einsum reproduces dense-masked
+    serving bit for bit."""
+    pool, index = entry["pool"], entry["index"]
+    A, Kb, Nb = index.shape
+    bk, bn = pool.shape[-2], pool.shape[-1]
+    blocks = pool[index]                              # [A, Kb, Nb, bk, bn]
+    w = blocks.transpose(0, 1, 3, 2, 4).reshape(A, Kb * bk, Nb * bn)
+    if "inv_perm_n" in entry:
+        w = jnp.take_along_axis(w, entry["inv_perm_n"][:, None, :], axis=2)
+    if "inv_perm_k" in entry:
+        w = jnp.take_along_axis(w, entry["inv_perm_k"][:, :, None], axis=1)
+    return w
+
+
+def densify_full(entry, n_experts: int):
+    """Like ``densify`` but scattered back to all ``n_experts`` rows
+    (zeros for dead experts) — the exact operand dense-masked serving
+    multiplies with.  Debug/oracle helper; execute paths never build
+    it."""
+    w = densify(entry)
+    if "alive_e" not in entry:
+        return w
+    full = jnp.zeros((n_experts,) + w.shape[1:], w.dtype)
+    return full.at[entry["alive_e"]].set(w)
+
+
+def _default_mode() -> str:
+    return "pallas" if ops.on_tpu() else "exact"
+
+
+def _gather_matmul(xA, entry):
+    """FLOP-skipping jnp path: xA [A, M, K] (already perm_k-gathered,
+    permuted coords) -> y [A, M, N] (permuted coords), fp32 accumulate.
+    Work scales with pool slots: slot s multiplies activation tile
+    (slot_e[s], slot_kb[s]) by pool[s] and scatter-adds at slot_nb[s];
+    the sentinel slot 0 contributes exact zeros."""
+    pool = entry["pool"]
+    A, M, K = xA.shape
+    S, bk, bn = pool.shape
+    Kb = K // bk
+    Nb = entry["index"].shape[-1]
+    xt = xA.reshape(A, M, Kb, bk).transpose(0, 2, 1, 3)    # [A, Kb, M, bk]
+    xg = xt[entry["slot_e"], entry["slot_kb"]]             # [S, M, bk]
+    yb = jnp.einsum("smk,skn->smn", xg.astype(jnp.float32),
+                    pool.astype(jnp.float32))
+    acc = jnp.zeros((A, Nb, M, bn), jnp.float32)
+    acc = acc.at[entry["slot_e"], entry["slot_nb"]].add(yb)
+    return acc.transpose(0, 2, 1, 3).reshape(A, M, Nb * bn)
+
+
+def _kernel_matmul(xA, entry, mode):
+    """Per-alive-expert dispatch through the Pallas gather kernel (or
+    its interpreter).  xA [A, M, K] in permuted coords -> [A, M, N]."""
+    A = xA.shape[0]
+    return jnp.stack([
+        ops.sparse_gather_matmul_op(xA[e], entry["pool"],
+                                    entry["index"][e], force=mode)
+        for e in range(A)])
+
+
+def _resolve_n_experts(spec, x, entry, n_experts):
+    if n_experts is not None:
+        return n_experts
+    if spec in ("gecd,edf->gecf", "gecf,efd->gecd"):
+        return x.shape[1]
+    if spec == "bsef,efd->bsed":
+        return x.shape[2]
+    if "alive_e" in entry:                       # "bsd" carries no E
+        raise ValueError("expert_einsum needs n_experts= for spec "
+                         f"{spec!r} when dead experts were stripped")
+    return entry["index"].shape[0]
+
+
+def expert_einsum(spec: str, x, entry, *, n_experts=None, force=None):
+    """Contract activations with a packed expert FFN weight.
+
+    ``spec`` must be one of ``SUPPORTED_SPECS`` — the exact einsums
+    ``models.moe`` uses, so the ``"exact"`` mode can replay them verbatim
+    on the densified operand.  ``entry`` is one layer's packed entry
+    (leading layer axis already sliced off by ``lax.scan`` or indexing);
+    ``n_experts`` is the model's expert count (``cfg.n_experts``) —
+    required for the ``"bsd,..."`` spec when the entry stripped dead
+    experts, derivable from ``x`` otherwise.  Entries whose ``alive_e``
+    holds the out-of-range sentinel in padded rows rely on jax scatter
+    semantics (out-of-bounds updates are dropped) and on those rows'
+    all-dead block index (their product is exactly zero).
+    """
+    if spec not in SUPPORTED_SPECS:
+        raise ValueError(f"unsupported packed einsum {spec!r}; "
+                         f"known: {SUPPORTED_SPECS}")
+    mode = force or _default_mode()
+    E = _resolve_n_experts(spec, x, entry, n_experts)
+    alive = entry.get("alive_e")                 # None -> all E stored
+
+    if mode in ("exact", "ref"):
+        w = densify(entry)                       # [A, K, N]
+        if alive is None:
+            return jnp.einsum(spec, x, w)
+        if spec == "bsd,edf->bsef":
+            ya = jnp.einsum(spec, x, w)          # [B, S, A, F]
+            B, S = x.shape[:2]
+            out = jnp.zeros((B, S, E, ya.shape[-1]), ya.dtype)
+            return out.at[:, :, alive].set(ya)
+        if spec == "bsef,efd->bsed":
+            ya = jnp.einsum(spec, x[:, :, alive], w)
+            B, S = x.shape[:2]
+            out = jnp.zeros((B, S, E, ya.shape[-1]), ya.dtype)
+            return out.at[:, :, alive].set(ya)
+        # "gecd,edf->gecf" / "gecf,efd->gecd"
+        ya = jnp.einsum(spec, x[:, alive], w)
+        G, _, C = x.shape[:3]
+        out = jnp.zeros((G, E, C, ya.shape[-1]), ya.dtype)
+        return out.at[:, alive].set(ya)
+
+    A = entry["index"].shape[0]
+    # normalize x to [A, M, K] and remember how to restore the output
+    if spec == "bsd,edf->bsef":
+        B, S, D = x.shape
+        xA = jnp.broadcast_to(x.reshape(1, B * S, D), (A, B * S, D))
+        restore = lambda y: y.transpose(1, 0, 2).reshape(  # noqa: E731
+            B, S, E, -1)
+    elif spec == "bsef,efd->bsed":
+        B, S = x.shape[:2]
+        xT = x.transpose(2, 0, 1, 3)
+        xA = (xT if alive is None else xT[alive]).reshape(A, B * S, -1)
+        restore = lambda y: y.transpose(1, 0, 2).reshape(  # noqa: E731
+            B, S, E, -1)
+    else:  # "gecd,edf->gecf" / "gecf,efd->gecd"
+        G, _, C = x.shape[:3]
+        xT = x.transpose(1, 0, 2, 3)
+        xA = (xT if alive is None else xT[alive]).reshape(A, G * C, -1)
+        restore = lambda y: y.reshape(E, G, C, -1).transpose(  # noqa: E731
+            1, 0, 2, 3)
+
+    # activations into packed row coordinates (x column k multiplies
+    # original weight row k; packed row r holds original row perm_k[r])
+    if "perm_k" in entry:
+        xA = jnp.take_along_axis(xA, entry["perm_k"][:, None, :], axis=2)
+    if mode == "gather":
+        y = _gather_matmul(xA, entry)
+    elif mode in ("pallas", "interpret"):
+        y = _kernel_matmul(xA, entry, mode)
+    else:
+        raise ValueError(f"unknown sparse exec mode {mode!r}")
+    # outputs back to original column coordinates, dead experts to zeros
+    if "inv_perm_n" in entry:
+        y = jnp.take_along_axis(y, entry["inv_perm_n"][:, None, :], axis=2)
+    y = y.astype(x.dtype)
+    if alive is not None:
+        full = jnp.zeros((E,) + y.shape[1:], y.dtype)
+        y = full.at[alive].set(y)
+    return restore(y)
+
+
+def maybe_expert_einsum(spec: str, x, w, *, n_experts=None, force=None):
+    """Dense or packed: one call site for models.moe."""
+    if is_packed(w):
+        return expert_einsum(spec, x, w, n_experts=n_experts, force=force)
+    return jnp.einsum(spec, x, w)
+
+
+def sparse_exec_force(cfg):
+    """Model-config override for the execute mode ('' -> backend
+    default)."""
+    mode = getattr(cfg, "sparse_exec", "")
+    return mode or None

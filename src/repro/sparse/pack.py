@@ -1,0 +1,275 @@
+"""Pack stage: realize a ``SparsePlan`` as block-compressed storage.
+
+Paged-KV-for-weights: per (layer, matrix) the live blocks of every expert
+drop into one ``[n_slots, bk, bn]`` pool — slot 0 is an all-zero sentinel
+— and a per-expert ``[Kb, Nb]`` int32 index maps logical blocks to slots
+(0 = dead).  A φ-block-sparse expert FFN therefore *loads* at
+~(1 - φ_block) of its dense bytes; dead blocks have no storage at all,
+exactly like unreserved pages in the paged KV cache.
+
+Artifact layout (plain dict of arrays — checkpoint- and scan-friendly):
+
+  scan-stacked model (``cfg.scan_layers``)::
+
+      packed = {"we_gate": {"pool":   [L, S, bk, bn]  (weight dtype),
+                            "index":  [L, E, Kb, Nb]  int32,
+                            "perm_k": [L, E, K]       int32,
+                            "perm_n": [L, E, N]       int32},
+                "we_up": ..., "we_down": ...}
+
+  per-layer model::
+
+      packed = {"0": {"we_gate": {... same, no leading L ...}}, "1": ...}
+
+Layer pools are zero-padded to the deepest layer's slot count so the
+stacked leaves scan cleanly; padding slots are never referenced by any
+index.  ``install_sparse_ffn`` substitutes these entries for the dense
+``we_*`` leaves of a param tree (adding host-precomputed inverse
+permutations and slot coordinate maps the execute stage needs), and the
+model's forward/prefill/decode/verify paths consume them transparently —
+the packed entry is a pytree, so ``lax.scan`` slices its leading layer
+axis just like a dense weight.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.plan import FFN_PATHS, SparsePlan
+
+ARTIFACT_KEYS = ("pool", "index", "perm_k", "perm_n")
+
+
+def _is_stacked(cfg) -> bool:
+    return cfg.family != "hybrid" and cfg.scan_layers
+
+
+def _pack_matrix(W: np.ndarray, mp) -> Tuple[np.ndarray, np.ndarray]:
+    """W [E, K, N] + MatrixPlan -> (pool [1+n_live, bk, bn], index
+    [E, Kb, Nb] int32).  Blocks are stored in permuted coordinates with
+    the planned mask applied, enumerated in (e, kb, nb) order.
+    Vectorized — at real checkpoint scale this runs per (layer, matrix)
+    over millions of blocks."""
+    E, K, N = W.shape
+    bk, bn = mp.block
+    Kb, Nb = K // bk, N // bn
+    wp = np.take_along_axis(W, mp.perm_k[:, :, None], axis=1)
+    wp = np.take_along_axis(wp, mp.perm_n[:, None, :], axis=2)
+    wp = wp * mp.permuted_mask().astype(W.dtype)
+    blocks = wp.reshape(E, Kb, bk, Nb, bn).transpose(0, 1, 3, 2, 4)
+    live = mp.block_mask                                  # [E, Kb, Nb]
+    index = np.zeros((E, Kb, Nb), np.int32)
+    index[live] = np.arange(1, int(live.sum()) + 1, dtype=np.int32)
+    pool = np.concatenate([np.zeros((1, bk, bn), W.dtype), blocks[live]])
+    return pool, index
+
+
+def pack_sparse_ffn(params, cfg, plan: SparsePlan) -> Tuple[Dict, Dict]:
+    """Pack every planned expert FFN matrix of ``params``.
+
+    Returns ``(packed, report)``: the artifact dict described in the
+    module docstring, and a report with ``dense_bytes`` /
+    ``packed_bytes`` / ``bytes_ratio`` plus the plan's block-sparsity
+    numbers.  Raises if the plan does not cover every (layer, FFN path)
+    of the model — stacked storage cannot mix packed and dense layers.
+    """
+    stacked = _is_stacked(cfg)
+    L = cfg.n_layers
+    for l in range(L):
+        for path in FFN_PATHS:
+            if (l, path) not in plan.matrices:
+                raise ValueError(f"plan is missing layer {l} {path}")
+
+    dense_bytes = 0
+    per_path: Dict[str, list] = {}
+    for path in FFN_PATHS:
+        name = path[1]
+        for l in range(L):
+            tree = (params["layers"] if stacked
+                    else params["layers"][str(l)])
+            W = np.asarray(tree[path[0]][path[1]])
+            if stacked:
+                W = W[l]
+            dense_bytes += W.nbytes
+            mp = plan.matrices[(l, path)]
+            pool, index = _pack_matrix(W, mp)
+            per_path.setdefault(name, []).append(
+                {"pool": pool, "index": index,
+                 "perm_k": mp.perm_k.astype(np.int32),
+                 "perm_n": mp.perm_n.astype(np.int32)})
+
+    if stacked:
+        packed: Dict = {}
+        for name, entries in per_path.items():
+            S = max(e["pool"].shape[0] for e in entries)
+            pools = [np.concatenate(
+                [e["pool"],
+                 np.zeros((S - e["pool"].shape[0],) + e["pool"].shape[1:],
+                          e["pool"].dtype)]) for e in entries]
+            packed[name] = {
+                "pool": np.stack(pools),
+                "index": np.stack([e["index"] for e in entries]),
+                "perm_k": np.stack([e["perm_k"] for e in entries]),
+                "perm_n": np.stack([e["perm_n"] for e in entries]),
+            }
+    else:
+        packed = {str(l): {name: entries[l]
+                           for name, entries in per_path.items()}
+                  for l in range(L)}
+
+    packed_bytes = sparse_ffn_bytes(packed)
+    report = {
+        "dense_bytes": int(dense_bytes),
+        "packed_bytes": int(packed_bytes),
+        "bytes_ratio": packed_bytes / max(dense_bytes, 1),
+        **plan.report,
+    }
+    return packed, report
+
+
+def sparse_ffn_bytes(packed: Dict) -> int:
+    """Bytes of the stored artifact (pool + index + permutations)."""
+    total = 0
+    for sub in packed.values():
+        entries = sub.values() if "pool" not in sub else [sub]
+        for e in entries:
+            total += sum(np.asarray(e[k]).nbytes for k in ARTIFACT_KEYS)
+    return total
+
+
+def _alive_experts(index: np.ndarray) -> np.ndarray:
+    """Experts that still own at least one live block (index row != 0)."""
+    return np.flatnonzero((np.asarray(index) > 0).any(axis=(1, 2))
+                          ).astype(np.int32)
+
+
+def _is_identity_perm(perm: np.ndarray) -> bool:
+    perm = np.asarray(perm)
+    return np.array_equal(perm, np.broadcast_to(
+        np.arange(perm.shape[-1], dtype=perm.dtype), perm.shape))
+
+
+def _runtime_entry(entry: Dict, n_alive: Optional[int] = None,
+                   keep_perms: Optional[Dict[str, bool]] = None) -> Dict:
+    """Artifact entry (one layer) -> execute-ready entry: device arrays
+    plus host-precomputed inverse permutations and the slot -> (alive
+    expert, kb, nb) coordinate maps the FLOP-skipping gather path uses.
+    Derived arrays are recomputed at install, so the stored artifact
+    stays minimal.
+
+    Two static (pytree-structure) specializations, so jit traces the
+    cheap path without runtime branches:
+
+      * identity permutations are dropped entirely (the common case
+        when the plan ran with ``permute=False``).  ``keep_perms``
+        overrides the per-layer decision: stacked callers pass the OR
+        over all layers, because key presence is pytree structure and
+        must be layer-uniform — a layer whose permutation happens to be
+        identity still stores it when any sibling layer's is not;
+      * with ``n_alive`` set, fully-dead experts (STUN stage-1 in mask
+        form) are stripped — only alive experts' index/permutation rows
+        are kept, plus the ``alive_e`` scatter map, so their FLOPs are
+        skipped in every execute mode.  Rows past the layer's alive
+        count are padded with an all-dead index (exact-zero product) and
+        the out-of-range expert id (scatter-dropped), which keeps
+        stacked layers with different alive sets scannable.
+    """
+    index = np.asarray(entry["index"])                # [E, Kb, Nb]
+    E, Kb, Nb = index.shape
+    S = int(np.asarray(entry["pool"]).shape[0])
+    alive = _alive_experts(index)
+    strip = n_alive is not None
+    if strip:
+        pad = n_alive - len(alive)
+        assert pad >= 0, (n_alive, alive)
+        alive_pad = np.concatenate([alive, np.full(pad, E, np.int32)])
+        index_rt = np.concatenate(
+            [index[alive], np.zeros((pad, Kb, Nb), np.int32)])
+    else:
+        index_rt = index
+    # slot maps address the RUNTIME expert axis (alive position)
+    pos = np.zeros(E, np.int32)
+    pos[alive] = np.arange(len(alive), dtype=np.int32)
+    slot_e = np.zeros(S, np.int32)
+    slot_kb = np.zeros(S, np.int32)
+    slot_nb = np.zeros(S, np.int32)
+    e_i, kb_i, nb_i = np.nonzero(index > 0)
+    slots = index[e_i, kb_i, nb_i]
+    slot_e[slots] = pos[e_i] if strip else e_i
+    slot_kb[slots] = kb_i
+    slot_nb[slots] = nb_i
+    out = {
+        "pool": jnp.asarray(entry["pool"]),
+        "index": jnp.asarray(index_rt),
+        "slot_e": jnp.asarray(slot_e),
+        "slot_kb": jnp.asarray(slot_kb),
+        "slot_nb": jnp.asarray(slot_nb),
+    }
+    if strip:
+        out["alive_e"] = jnp.asarray(alive_pad)
+    for ax in ("k", "n"):
+        perm = np.asarray(entry[f"perm_{ax}"])
+        dim = perm.shape[-1]
+        keep = (keep_perms[ax] if keep_perms is not None
+                else not _is_identity_perm(perm))
+        if not keep:
+            continue
+        if strip:
+            perm = np.concatenate(
+                [perm[alive],
+                 np.broadcast_to(np.arange(dim, dtype=perm.dtype),
+                                 (n_alive - len(alive), dim))])
+        out[f"perm_{ax}"] = jnp.asarray(perm)
+        out[f"inv_perm_{ax}"] = jnp.asarray(
+            np.argsort(perm, axis=-1).astype(np.int32))
+    return out
+
+
+def install_sparse_ffn(params, cfg, packed: Dict):
+    """Substitute packed entries for the dense ``we_*`` leaves.
+
+    Returns a new param tree whose expert FFN weights are the execute-
+    ready packed entries (dicts — valid pytree leaves-of-subtrees, so
+    every model path that scans or indexes ``params["layers"]`` keeps
+    working unchanged).  The dense router / shared-expert / attention
+    weights are untouched.
+    """
+    stacked = _is_stacked(cfg)
+    if stacked:
+        stacked_rt: Dict[str, Dict] = {}
+        for name, entry in packed.items():
+            index = np.asarray(entry["index"])
+            L, E = index.shape[:2]
+            n_alive = max(max(len(_alive_experts(index[l]))
+                              for l in range(L)), 1)
+            # strip dead experts only when some layer actually has one,
+            # and keep a permutation axis if ANY layer's is non-identity
+            # (key presence is pytree structure — must be layer-uniform)
+            n_alive = None if n_alive == E else n_alive
+            keep_perms = {
+                ax: any(not _is_identity_perm(
+                    np.asarray(entry[f"perm_{ax}"])[l]) for l in range(L))
+                for ax in ("k", "n")}
+            per_layer = [
+                _runtime_entry({k: np.asarray(entry[k])[l]
+                                for k in ARTIFACT_KEYS}, n_alive,
+                               keep_perms)
+                for l in range(L)]
+            stacked_rt[name] = {
+                k: jnp.stack([p[k] for p in per_layer])
+                for k in per_layer[0]}
+        moe = {**params["layers"]["moe"], **stacked_rt}
+        return {**params, "layers": {**params["layers"], "moe": moe}}
+    layers = dict(params["layers"])
+    for l_str, sub in packed.items():
+        moe = {**layers[l_str]["moe"], **{
+            name: _runtime_entry(
+                entry,
+                (lambda a, e: None if a == e else a)(
+                    max(len(_alive_experts(entry["index"])), 1),
+                    np.asarray(entry["index"]).shape[0]))
+            for name, entry in sub.items()}}
+        layers[l_str] = {**layers[l_str], "moe": moe}
+    return {**params, "layers": layers}

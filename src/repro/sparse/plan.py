@@ -1,0 +1,293 @@
+"""Plan stage of the sparse pruned-artifact runtime.
+
+Turns the element-unstructured stage-2 masks (Wanda/OWL, ``core.
+unstructured``) into a *hardware-skippable* layout for every expert FFN
+matrix: a per-matrix block bitmap aligned to MXU tiles, plus the lossless
+and lossy transforms that maximize dead-block yield:
+
+  * **expert-mask folding** — STUN stage-1 keep-masks ([E] or [L, E])
+    zero whole experts; folded in, every block of a pruned expert is dead
+    (the dominant yield source for mask-form serving).
+  * **row/column permutation** (lossless) — rows are sorted by occupancy
+    per expert, columns likewise, so near-empty rows/columns cluster into
+    fully-dead tiles.  Exact: the pack stage stores permuted blocks and
+    the permutation; execute un-permutes (or gathers activations), so the
+    computed product is unchanged.
+  * **N:M re-rounding** (lossy, optional) — intersects the mask with a
+    keep-top-n-of-every-m pattern along the input axis
+    (``core.unstructured.nm_rounding``), the accelerator-friendly
+    structure the paper's limitation section points at.
+  * **block re-rounding** (lossy, optional, ``target_block_sparsity``) —
+    OWL's insight at tile granularity: reallocate the element budget so
+    dead weight *concentrates* into skippable blocks.  The cheapest live
+    blocks (lowest surviving |W| score mass) are killed and, element for
+    element, the highest-score pruned weights inside surviving blocks are
+    revived — total nonzeros are preserved, so "40% total sparsity"
+    still means 40%.
+
+The plan's ``element_masks()`` are the masks the packed artifact actually
+realizes — any dense-masked baseline (serving oracle, benchmarks) must
+use them, which is what makes packed-vs-dense comparisons exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.unstructured import nm_rounding
+
+FFN_PATHS = (("moe", "we_gate"), ("moe", "we_up"), ("moe", "we_down"))
+
+_BLOCK_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _auto_block_dim(n: int) -> int:
+    for b in _BLOCK_CANDIDATES:
+        if n % b == 0:
+            return b
+    return 1
+
+
+@dataclasses.dataclass
+class MatrixPlan:
+    """Block-sparse layout decision for one [E, K, N] expert weight."""
+    layer: int
+    path: Tuple[str, ...]
+    block: Tuple[int, int]           # (bk, bn)
+    perm_k: np.ndarray               # [E, K] int32: packed row r <- perm_k[r]
+    perm_n: np.ndarray               # [E, N] int32: packed col c <- perm_n[c]
+    element_mask: np.ndarray         # [E, K, N] bool, ORIGINAL coordinates
+    block_mask: np.ndarray           # [E, Kb, Nb] bool (permuted), True=live
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_mask.size
+
+    @property
+    def n_live(self) -> int:
+        return int(self.block_mask.sum())
+
+    @property
+    def block_sparsity(self) -> float:
+        return 1.0 - self.n_live / max(self.n_blocks, 1)
+
+    def permuted_mask(self) -> np.ndarray:
+        """element_mask in packed (permuted) coordinates [E, K, N]."""
+        return np.stack([self.element_mask[e][self.perm_k[e]]
+                         [:, self.perm_n[e]]
+                         for e in range(self.element_mask.shape[0])])
+
+
+@dataclasses.dataclass
+class SparsePlan:
+    matrices: Dict[Tuple[int, Tuple[str, ...]], MatrixPlan]
+    report: dict
+
+    def element_masks(self) -> Dict:
+        """Masks the packed artifact realizes — the dense-masked baseline
+        (``ServeEngine(weight_masks=...)``) must use these for packed ==
+        dense-masked equivalence to hold when lossy transforms ran."""
+        return {key: mp.element_mask for key, mp in self.matrices.items()}
+
+
+def _fold_expert_mask(mask: np.ndarray, expert_mask, layer: int
+                      ) -> np.ndarray:
+    em = np.asarray(expert_mask)
+    if em.ndim == 2:
+        em = em[layer]
+    dead = em <= 0
+    out = mask.copy()
+    out[dead] = False
+    return out
+
+
+def _occupancy_perms(mask: np.ndarray):
+    """Per-expert stable occupancy sort of rows and columns (ascending:
+    emptiest first, so dead/near-dead lines cluster at the low corner)."""
+    E = mask.shape[0]
+    pk = np.stack([np.argsort(mask[e].sum(axis=1), kind="stable")
+                   for e in range(E)]).astype(np.int32)
+    pn = np.stack([np.argsort(mask[e].sum(axis=0), kind="stable")
+                   for e in range(E)]).astype(np.int32)
+    return pk, pn
+
+
+def _to_blocks(a: np.ndarray, bk: int, bn: int) -> np.ndarray:
+    """[E, K, N] -> [E, Kb, Nb, bk, bn]."""
+    E, K, N = a.shape
+    return a.reshape(E, K // bk, bk, N // bn, bn).transpose(0, 1, 3, 2, 4)
+
+
+def _from_blocks(b: np.ndarray) -> np.ndarray:
+    E, Kb, Nb, bk, bn = b.shape
+    return b.transpose(0, 1, 3, 2, 4).reshape(E, Kb * bk, Nb * bn)
+
+
+def _block_reround(mask_p: np.ndarray, score_p: np.ndarray, bk: int, bn: int,
+                   target: float):
+    """Kill the cheapest live blocks until ``target`` of all blocks are
+    dead, reviving an equal number of top-score pruned elements inside
+    surviving blocks (total nonzeros preserved).  Operates in permuted
+    coordinates.  Returns (new mask_p, n_killed, n_revived)."""
+    mb = _to_blocks(mask_p, bk, bn)                  # [E,Kb,Nb,bk,bn] bool
+    sb = _to_blocks(score_p, bk, bn)
+    E, Kb, Nb = mb.shape[:3]
+    live = mb.any(axis=(3, 4))                       # [E,Kb,Nb]
+    n_blocks = live.size
+    n_dead = n_blocks - int(live.sum())
+    n_need = int(np.ceil(target * n_blocks)) - n_dead
+    if n_need <= 0:
+        return mask_p, 0, 0
+    kept_cost = np.where(mb, sb, 0.0).sum(axis=(3, 4))       # [E,Kb,Nb]
+    flat_live = np.flatnonzero(live.reshape(-1))
+    order = flat_live[np.argsort(kept_cost.reshape(-1)[flat_live],
+                                 kind="stable")]
+    # feasibility: revivals must fit in the pruned slots of blocks that
+    # STAY live — shrink the kill set from the expensive end if not
+    kill = order[:n_need]
+    while len(kill) > 0:
+        kill_mask = np.zeros(n_blocks, bool)
+        kill_mask[kill] = True
+        kill_b = kill_mask.reshape(E, Kb, Nb)
+        n_revive = int(mb[kill_b].sum())
+        stay = live & ~kill_b
+        capacity = int((~mb[stay]).sum())
+        if n_revive <= capacity:
+            break
+        kill = kill[:-1]
+    else:
+        return mask_p, 0, 0
+    if len(kill) == 0:
+        return mask_p, 0, 0
+    # kill: drop every survivor in the killed blocks
+    mb = mb.copy()
+    mb[kill_b] = False
+    # revive: top-score pruned elements within blocks that stay live
+    stay_elems = np.broadcast_to(stay[..., None, None], mb.shape)
+    cand = (~mb) & stay_elems
+    cand_flat = np.flatnonzero(cand.reshape(-1))
+    top = cand_flat[np.argsort(-sb.reshape(-1)[cand_flat],
+                               kind="stable")[:n_revive]]
+    mbf = mb.reshape(-1)
+    mbf[top] = True
+    mb = mbf.reshape(mb.shape)
+    return _from_blocks(mb), len(kill), n_revive
+
+
+def plan_sparse_ffn(masks: Dict, weights: Optional[Dict] = None, *,
+                    block="auto", permute: bool = True,
+                    nm: Optional[Tuple[int, int]] = None,
+                    expert_mask=None,
+                    target_block_sparsity: Optional[float] = None
+                    ) -> SparsePlan:
+    """Plan block-compressed storage for every expert FFN mask.
+
+    Args:
+      masks: ``{(layer, path) -> bool [E, K, N]}`` from
+        ``core.unstructured.sparsify_model`` (non-FFN paths are ignored —
+        attention masks stay dense-masked).
+      weights: ``{(layer, path) -> ndarray}`` of the matching weights
+        (see ``ffn_weights_from_params``) — required for ``nm`` and
+        ``target_block_sparsity`` scoring, unused otherwise.
+      block: ``(bk, bn)`` tile, or ``"auto"`` (largest power-of-two
+        divisor <= 128 per dim — the MXU tile when shapes allow).
+      permute: sort rows/columns by occupancy per expert (lossless).
+      nm: ``(n, m)`` re-rounding along the input axis (lossy).
+      expert_mask: stage-1 keep mask [E] or [L, E] folded into the
+        element masks (mask-form serving: pruned experts become all-dead
+        blocks).
+      target_block_sparsity: dead-block fraction to reach per matrix via
+        sparsity-preserving block re-rounding (lossy, see module doc).
+
+    Returns a ``SparsePlan``; ``plan.report`` has per-layer and overall
+    planned block sparsity plus a bytes estimate.
+    """
+    if nm is not None and weights is None:
+        raise ValueError("nm re-rounding needs `weights` for scoring")
+    if target_block_sparsity is not None and weights is None:
+        raise ValueError("target_block_sparsity needs `weights` for scoring")
+    matrices: Dict = {}
+    per_layer: Dict[int, list] = {}
+    killed = revived = 0
+    for (layer, path), mask in sorted(masks.items(), key=lambda kv: (
+            kv[0][0], kv[0][1])):
+        if tuple(path) not in FFN_PATHS:
+            continue
+        m = np.asarray(mask, bool)
+        E, K, N = m.shape
+        if expert_mask is not None:
+            m = _fold_expert_mask(m, expert_mask, layer)
+        W = (np.abs(np.asarray(weights[(layer, path)], np.float32))
+             if weights is not None else None)
+        if nm is not None:
+            score = np.where(m, W, -np.inf)
+            m = m & nm_rounding(score, 1, *nm)
+        bk, bn = ((_auto_block_dim(K), _auto_block_dim(N))
+                  if block == "auto" else block)
+        if K % bk or N % bn:
+            raise ValueError(f"block ({bk},{bn}) does not divide "
+                             f"{path} shape ({K},{N})")
+        if permute:
+            perm_k, perm_n = _occupancy_perms(m)
+        else:
+            perm_k = np.broadcast_to(np.arange(K, dtype=np.int32),
+                                     (E, K)).copy()
+            perm_n = np.broadcast_to(np.arange(N, dtype=np.int32),
+                                     (E, N)).copy()
+        mp = np.stack([m[e][perm_k[e]][:, perm_n[e]] for e in range(E)])
+        if target_block_sparsity is not None:
+            sp = np.stack([W[e][perm_k[e]][:, perm_n[e]] for e in range(E)])
+            mp, nk, nr = _block_reround(mp, sp, bk, bn,
+                                        target_block_sparsity)
+            killed += nk
+            revived += nr
+        block_mask = _to_blocks(mp, bk, bn).any(axis=(3, 4))
+        # back to original coordinates
+        m_final = np.zeros_like(m)
+        for e in range(E):
+            m_final[e][np.ix_(perm_k[e], perm_n[e])] = mp[e]
+        plan_m = MatrixPlan(layer, tuple(path), (bk, bn), perm_k, perm_n,
+                            m_final, block_mask)
+        matrices[(layer, tuple(path))] = plan_m
+        per_layer.setdefault(layer, []).append(plan_m)
+
+    layer_report = {
+        l: {
+            "n_blocks": sum(p.n_blocks for p in ps),
+            "n_live": sum(p.n_live for p in ps),
+            "block_sparsity": 1.0 - (sum(p.n_live for p in ps)
+                                     / max(sum(p.n_blocks for p in ps), 1)),
+        }
+        for l, ps in sorted(per_layer.items())
+    }
+    n_blocks = sum(p.n_blocks for p in matrices.values())
+    n_live = sum(p.n_live for p in matrices.values())
+    report = {
+        "per_layer": layer_report,
+        "n_blocks": n_blocks,
+        "n_live": n_live,
+        "block_sparsity": 1.0 - n_live / max(n_blocks, 1),
+        "element_sparsity": 1.0 - (
+            sum(int(p.element_mask.sum()) for p in matrices.values())
+            / max(sum(p.element_mask.size for p in matrices.values()), 1)),
+        "blocks_rerounded": killed,
+        "elements_revived": revived,
+    }
+    return SparsePlan(matrices, report)
+
+
+def ffn_weights_from_params(params, cfg) -> Dict:
+    """Extract ``{(layer, path) -> [E, K, N] ndarray}`` for plan scoring,
+    handling both scan-stacked ([L, E, K, N]) and per-layer param trees."""
+    out = {}
+    stacked = cfg.family != "hybrid" and cfg.scan_layers
+    for l in range(cfg.n_layers):
+        tree = params["layers"] if stacked else params["layers"][str(l)]
+        if "moe" not in tree:
+            continue
+        for path in FFN_PATHS:
+            W = np.asarray(tree[path[0]][path[1]])
+            out[(l, path)] = W[l] if stacked else W
+    return out

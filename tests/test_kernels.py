@@ -142,6 +142,89 @@ def test_block_sparse_matmul(density):
     np.testing.assert_allclose(o, r, atol=1e-4)
 
 
+def _random_packed(rs, K, N, bk, bn, density):
+    """Random block pool + index with slot 0 the zero sentinel."""
+    Kb, Nb = K // bk, N // bn
+    live = rs.rand(Kb, Nb) < density
+    index = np.zeros((Kb, Nb), np.int32)
+    index[live] = np.arange(1, int(live.sum()) + 1)
+    pool = np.zeros((int(live.sum()) + 1, bk, bn), np.float32)
+    pool[1:] = rs.randn(int(live.sum()), bk, bn)
+    return jnp.asarray(pool), jnp.asarray(index)
+
+
+@pytest.mark.parametrize("density", [0.0, 0.4, 1.0])
+@pytest.mark.parametrize("M,K,N,bk,bn", [(64, 128, 96, 32, 32),
+                                         (48, 64, 32, 16, 8),
+                                         (7, 32, 64, 8, 16)])
+def test_block_sparse_gather_matmul(density, M, K, N, bk, bn):
+    """The pool-gather kernel (scalar-prefetched block index selects the
+    pool block to DMA) matches the unpack-then-matmul reference."""
+    from repro.kernels.block_sparse_matmul import block_sparse_gather_matmul
+    from repro.kernels.ops import choose_block_m
+
+    rs = np.random.RandomState(int(density * 10) + M)
+    pool, index = _random_packed(rs, K, N, bk, bn, density)
+    x = jnp.asarray(rs.randn(M, K), jnp.float32)
+    o = block_sparse_gather_matmul(x, pool, index,
+                                   block_m=choose_block_m(M),
+                                   interpret=True)
+    r = ref.block_sparse_gather_matmul_ref(x, pool, index)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-4)
+
+
+def test_choose_block_m():
+    from repro.kernels.ops import choose_block_m
+    assert choose_block_m(256) == 128          # capped at the MXU tile
+    assert choose_block_m(96) == 96
+    assert choose_block_m(48, cap=32) == 24    # largest divisor <= cap
+    assert choose_block_m(7) == 7
+    assert choose_block_m(97, cap=32) == 1     # prime beyond cap
+
+
+@pytest.mark.parametrize("M,K,N,bk,bn", [
+    (40, 96, 48, 32, 16),       # uneven M: chooser must pick 40, not 32
+    (24, 64, 80, 16, 16),
+    (12, 48, 32, 16, 32),
+    (100, 32, 64, 8, 64),
+])
+def test_sparse_matmul_op_chooser_parity(M, K, N, bk, bn):
+    """The unified shape-driven tile chooser: ops.sparse_matmul_op in
+    interpret mode must agree with the jnp reference on uneven M/K/N
+    (the old hardcoded block_m=32 interpret branch failed whenever
+    32 did not divide M)."""
+    from repro.kernels import ops
+
+    rs = np.random.RandomState(M + K)
+    x = jnp.asarray(rs.randn(M, K), jnp.float32)
+    w = rs.randn(K, N)
+    bm_mask = rs.rand(K // bk, N // bn) < 0.5
+    for i in range(K // bk):
+        for j in range(N // bn):
+            if not bm_mask[i, j]:
+                w[i * bk:(i + 1) * bk, j * bn:(j + 1) * bn] = 0
+    w = jnp.asarray(w, jnp.float32)
+    r = ref.block_sparse_matmul_ref(x, w, jnp.asarray(bm_mask), bk, bn)
+    o = ops.sparse_matmul_op(x, w, jnp.asarray(bm_mask), block_k=bk,
+                             block_n=bn, force="interpret")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-4)
+    o_ref = ops.sparse_matmul_op(x, w, jnp.asarray(bm_mask), block_k=bk,
+                                 block_n=bn)                # ref on CPU
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(r), atol=0)
+
+
+def test_sparse_gather_op_dispatch():
+    """ops.sparse_gather_matmul_op: CPU ref vs interpreted kernel."""
+    from repro.kernels import ops
+
+    rs = np.random.RandomState(5)
+    pool, index = _random_packed(rs, 64, 32, 16, 8, 0.5)
+    x = jnp.asarray(rs.randn(20, 64), jnp.float32)
+    a = ops.sparse_gather_matmul_op(x, pool, index)
+    b = ops.sparse_gather_matmul_op(x, pool, index, force="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
 def test_build_block_mask():
     m = np.zeros((64, 64), bool)
     m[0, 0] = True          # one nonzero in block (0,0)

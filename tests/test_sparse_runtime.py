@@ -1,0 +1,391 @@
+"""Sparse pruned-artifact runtime: plan/pack/execute contracts.
+
+The load-bearing property is the **exactness chain**: the pool stores the
+masked weight values verbatim (pack is pure data movement), ``densify``
+reconstructs elementwise-equal dense matrices (gather + transpose +
+inverse permutation — no arithmetic), and the "exact" execute mode
+replays the dense path's einsum on that operand — so packed serving is
+*bit-identical* to dense-masked serving with the plan's masks.  The
+FLOP-skipping paths (jnp gather, Pallas kernel in interpret mode) are
+pinned allclose against the same oracle.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.configs import get_config, reduced
+from repro.core.stun import unstructured_only
+from repro.core.unstructured import _get_path
+from repro.data.synthetic import calibration_batches
+from repro.models import abstract_params, decode_step_ragged, forward
+from repro.models import init_cache
+from repro.models import param as pm
+from repro.serving import Request, ServeEngine
+from repro.serving.engine import apply_weight_masks
+
+BLOCK = (8, 8)
+
+
+def _tiny_moe(seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, n_experts=8,
+                  top_k=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def pruned():
+    """(cfg, params, masks, weights) with stage-2 masks on the tiny MoE."""
+    cfg, params = _tiny_moe()
+    batches = calibration_batches(cfg, n_batches=2)
+    _, masks, _ = unstructured_only(params, cfg, batches,
+                                    target_sparsity=0.3, method="owl")
+    return cfg, params, masks, sparse.ffn_weights_from_params(params, cfg)
+
+
+@pytest.fixture(scope="module")
+def planned(pruned):
+    """A representative full plan: permutation + expert fold + block
+    re-rounding, packed and installed."""
+    cfg, params, masks, weights = pruned
+    em = np.ones(cfg.n_experts, np.float32)
+    em[-2:] = 0.0
+    plan = sparse.plan_sparse_ffn(masks, weights, block=BLOCK,
+                                  expert_mask=em,
+                                  target_block_sparsity=0.4)
+    packed, report = sparse.pack_sparse_ffn(params, cfg, plan)
+    base_masks = dict(masks)
+    base_masks.update(plan.element_masks())
+    dense_masked = apply_weight_masks(params, cfg, base_masks)
+    return cfg, params, em, plan, packed, report, base_masks, dense_masked
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+
+def test_plan_block_mask_matches_element_mask(planned):
+    cfg, params, em, plan, *_ = planned
+    for (l, path), mp in plan.matrices.items():
+        bk, bn = mp.block
+        m = mp.permuted_mask()
+        E, K, N = m.shape
+        blocks = m.reshape(E, K // bk, bk, N // bn, bn).any(axis=(2, 4))
+        np.testing.assert_array_equal(blocks, mp.block_mask)
+        assert 0.0 <= mp.block_sparsity <= 1.0
+
+
+def test_plan_expert_mask_folding(planned):
+    """Pruned experts contribute only dead blocks: block sparsity >= the
+    expert drop fraction, and their element masks are all-False."""
+    cfg, params, em, plan, *_ = planned
+    for mp in plan.matrices.values():
+        assert not mp.element_mask[-2:].any()
+        assert not mp.block_mask[-2:].any()
+        assert mp.block_sparsity >= 0.25
+    assert plan.report["block_sparsity"] >= 0.25
+
+
+def test_plan_reround_preserves_nonzeros(pruned):
+    """Block re-rounding reallocates the element budget — the total
+    kept-element count must not change, while dead blocks increase."""
+    cfg, params, masks, weights = pruned
+    base = sparse.plan_sparse_ffn(masks, weights, block=BLOCK)
+    rer = sparse.plan_sparse_ffn(masks, weights, block=BLOCK,
+                                 target_block_sparsity=0.25)
+    for key in base.matrices:
+        n0 = int(base.matrices[key].element_mask.sum())
+        n1 = int(rer.matrices[key].element_mask.sum())
+        assert n0 == n1, key
+    assert rer.report["block_sparsity"] > base.report["block_sparsity"]
+    assert rer.report["blocks_rerounded"] > 0
+    # the target is a ceiling request: achieved yield may fall short when
+    # revival capacity (pruned slots in surviving blocks) runs out, but
+    # must get most of the way there at this sparsity
+    assert rer.report["block_sparsity"] >= 0.20
+
+
+def test_plan_nm_rounding_subsets_mask(pruned):
+    cfg, params, masks, weights = pruned
+    plain = sparse.plan_sparse_ffn(masks, weights, block=BLOCK)
+    nm = sparse.plan_sparse_ffn(masks, weights, block=BLOCK, nm=(2, 4))
+    for key in plain.matrices:
+        m_plain = plain.matrices[key].element_mask
+        m_nm = nm.matrices[key].element_mask
+        assert not (m_nm & ~m_plain).any(), "N:M must never revive"
+        # keep-at-most-n per m consecutive inputs along the K axis
+        E, K, N = m_nm.shape
+        grp = m_nm.reshape(E, K // 4, 4, N).sum(axis=2)
+        assert grp.max() <= 2
+
+
+def test_plan_requires_weights_for_lossy_transforms(pruned):
+    cfg, params, masks, _ = pruned
+    with pytest.raises(ValueError, match="weights"):
+        sparse.plan_sparse_ffn(masks, None, nm=(2, 4))
+    with pytest.raises(ValueError, match="weights"):
+        sparse.plan_sparse_ffn(masks, None, target_block_sparsity=0.5)
+    with pytest.raises(ValueError, match="divide"):
+        sparse.plan_sparse_ffn(masks, None, block=(7, 8))
+
+
+# ---------------------------------------------------------------------------
+# pack
+# ---------------------------------------------------------------------------
+
+
+def test_pack_sentinel_and_index_invariants(planned):
+    cfg, params, em, plan, packed, report, *_ = planned
+    for name, entry in packed.items():
+        pool, index = np.asarray(entry["pool"]), np.asarray(entry["index"])
+        L = index.shape[0]
+        for l in range(L):
+            assert not pool[l, 0].any(), "slot 0 must be the zero sentinel"
+            mp = plan.matrices[(l, ("moe", name))]
+            # index is 0 exactly on dead blocks, and live slots are
+            # unique (each block owns its storage)
+            np.testing.assert_array_equal(index[l] > 0, mp.block_mask)
+            live = index[l][index[l] > 0]
+            assert len(np.unique(live)) == len(live)
+    assert report["packed_bytes"] < report["dense_bytes"]
+    assert report["bytes_ratio"] < 0.95
+
+
+def test_densify_is_bitwise_masked_weight(planned):
+    """The whole exactness chain: pool -> densify == W * planned_mask."""
+    cfg, params, em, plan, packed, *_ = planned
+    installed = sparse.install_sparse_ffn(params, cfg, packed)
+    for name in ("we_gate", "we_up", "we_down"):
+        W = np.asarray(_get_path(params["layers"], ("moe", name)))
+        entry = installed["layers"]["moe"][name]
+        # the runtime entry strips fully-dead experts (2 of 8 here) —
+        # densify_full scatters them back as exact zeros
+        assert "alive_e" in entry and entry["index"].shape[1] == 6
+        for l in range(cfg.n_layers):
+            rt = {k: v[l] for k, v in entry.items()}
+            got = np.asarray(sparse.densify_full(rt, cfg.n_experts))
+            want = W[l] * plan.matrices[(l, ("moe", name))].element_mask
+            np.testing.assert_array_equal(got, want)
+
+
+def test_install_drops_identity_perms(pruned):
+    cfg, params, masks, weights = pruned
+    plan = sparse.plan_sparse_ffn(masks, weights, block=BLOCK,
+                                  permute=False)
+    packed, _ = sparse.pack_sparse_ffn(params, cfg, plan)
+    installed = sparse.install_sparse_ffn(params, cfg, packed)
+    entry = installed["layers"]["moe"]["we_gate"]
+    assert "perm_k" not in entry and "inv_perm_n" not in entry
+    # and densify still reconstructs exactly
+    rt = {k: v[0] for k, v in entry.items()}
+    W = np.asarray(params["layers"]["moe"]["we_gate"])[0]
+    np.testing.assert_array_equal(
+        np.asarray(sparse.densify(rt)),
+        W * plan.matrices[(0, ("moe", "we_gate"))].element_mask)
+
+
+def test_install_keeps_perms_when_only_some_layers_permute(pruned):
+    """Key presence is pytree structure, so the identity-perm drop must
+    be uniform across stacked layers: if any layer's permutation is
+    real, every layer stores one (regression: per-layer dropping let
+    the stacking comprehension discard or KeyError on the others)."""
+    cfg, params, masks, weights = pruned
+    plan = sparse.plan_sparse_ffn(masks, weights, block=BLOCK,
+                                  permute=True)
+    packed, _ = sparse.pack_sparse_ffn(params, cfg, plan)
+    name = "we_gate"
+    # force layer 0's permutations to identity, keep layer 1's real
+    E, K = np.asarray(packed[name]["perm_k"]).shape[1:]
+    N = np.asarray(packed[name]["perm_n"]).shape[-1]
+    pk = np.asarray(packed[name]["perm_k"]).copy()
+    pn = np.asarray(packed[name]["perm_n"]).copy()
+    assert not np.array_equal(pk[1], np.broadcast_to(np.arange(K), (E, K)))
+    pk[0] = np.arange(K, dtype=pk.dtype)
+    pn[0] = np.arange(N, dtype=pn.dtype)
+    forced = dict(packed)
+    forced[name] = {**packed[name], "perm_k": pk, "perm_n": pn}
+    # ...and make the plan's masks consistent with the forced perms:
+    # simplest is to check install-level reconstruction directly
+    installed = sparse.install_sparse_ffn(params, cfg, forced)
+    entry = installed["layers"]["moe"][name]
+    # perm_k must survive for BOTH layers (layer 1's is real); perm_n is
+    # identity in every layer here (per-output pruning gives uniform
+    # column occupancy) so its drop is legitimate
+    assert "perm_k" in entry
+    for l in range(cfg.n_layers):
+        rt = {k: v[l] for k, v in entry.items()}
+        pool, index = np.asarray(rt["pool"]), np.asarray(rt["index"])
+        # reconstruct by hand from the forced artifact and compare
+        got = np.asarray(sparse.densify_full(rt, cfg.n_experts))
+        bk, bn = pool.shape[-2:]
+        Kb, Nb = index.shape[-2:]
+        for e in range(E):
+            wperm = pool[index[e]].transpose(0, 2, 1, 3).reshape(
+                Kb * bk, Nb * bn)
+            want = np.empty_like(wperm)
+            want[np.ix_(pk[l, e], pn[l, e])] = wperm
+            np.testing.assert_array_equal(got[e], want)
+
+
+def test_pack_rejects_partial_plans(pruned):
+    cfg, params, masks, weights = pruned
+    partial = {k: v for k, v in masks.items() if k[0] == 0}
+    plan = sparse.plan_sparse_ffn(partial, weights, block=BLOCK)
+    with pytest.raises(ValueError, match="missing layer"):
+        sparse.pack_sparse_ffn(params, cfg, plan)
+
+
+# ---------------------------------------------------------------------------
+# execute
+# ---------------------------------------------------------------------------
+
+SPECS_X = {
+    "bsd,edf->bsef": lambda rs, cfg: rs.randn(2, 3, cfg.d_model),
+    "gecd,edf->gecf": lambda rs, cfg: rs.randn(2, cfg.n_experts, 3,
+                                               cfg.d_model),
+    "bsef,efd->bsed": lambda rs, cfg: rs.randn(2, 3, cfg.n_experts,
+                                               cfg.moe_d_ff),
+    "gecf,efd->gecd": lambda rs, cfg: rs.randn(2, cfg.n_experts, 3,
+                                               cfg.moe_d_ff),
+}
+
+
+def _entry_for(planned, spec, layer=0):
+    cfg, params, em, plan, packed, *_ = planned
+    name = "we_down" if spec.split(",")[1].startswith("ef") else "we_gate"
+    installed = sparse.install_sparse_ffn(params, cfg, packed)
+    return {k: v[layer]
+            for k, v in installed["layers"]["moe"][name].items()}
+
+
+@pytest.mark.parametrize("spec", sorted(SPECS_X))
+def test_exact_mode_is_bitwise(planned, spec):
+    cfg, *_ = planned
+    entry = _entry_for(planned, spec)
+    x = jnp.asarray(SPECS_X[spec](np.random.RandomState(0), cfg),
+                    jnp.float32)
+    want = jnp.einsum(spec, x, sparse.densify_full(entry, cfg.n_experts))
+    got = sparse.expert_einsum(spec, x, entry, n_experts=cfg.n_experts,
+                               force="exact")
+    assert bool(jnp.all(want == got))
+
+
+@pytest.mark.parametrize("mode", ["gather", "interpret"])
+@pytest.mark.parametrize("spec", sorted(SPECS_X))
+def test_flop_skipping_modes_allclose(planned, spec, mode):
+    cfg, *_ = planned
+    entry = _entry_for(planned, spec)
+    x = jnp.asarray(SPECS_X[spec](np.random.RandomState(1), cfg),
+                    jnp.float32)
+    want = np.asarray(jnp.einsum(spec, x,
+                                 sparse.densify_full(entry, cfg.n_experts)))
+    got = np.asarray(sparse.expert_einsum(spec, x, entry,
+                                          n_experts=cfg.n_experts,
+                                          force=mode))
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_execute_rejects_unknown(planned):
+    entry = _entry_for(planned, "bsd,edf->bsef")
+    x = jnp.zeros((1, 1, entry["index"].shape[1] * entry["pool"].shape[-2]))
+    with pytest.raises(ValueError, match="unsupported"):
+        sparse.expert_einsum("bd,edf->bef", x, entry)
+    with pytest.raises(ValueError, match="mode"):
+        sparse.expert_einsum("bsd,edf->bsef", x, entry, n_experts=8,
+                             force="fused")
+    # the "bsd" spec carries no expert axis: with dead experts stripped,
+    # the caller must say how many experts the output has
+    with pytest.raises(ValueError, match="n_experts"):
+        sparse.expert_einsum("bsd,edf->bsef", x, entry)
+
+
+# ---------------------------------------------------------------------------
+# model + engine integration (the serving oracle's fast-tier edition;
+# the full {layout} x {spec} matrix lives in test_disaggregation.py)
+# ---------------------------------------------------------------------------
+
+
+def test_forward_and_decode_bitwise_vs_dense_masked(planned):
+    cfg, params, em, plan, packed, report, base_masks, dense_masked = planned
+    installed = sparse.install_sparse_ffn(dense_masked, cfg, packed)
+    batch = {"tokens": jnp.asarray(
+        np.random.RandomState(2).randint(0, cfg.vocab, (2, 8)))}
+    a = forward(dense_masked, cfg, batch, expert_mask=em)
+    b = forward(installed, cfg, batch, expert_mask=em)
+    assert bool(jnp.all(a == b)), "packed forward must be bit-identical"
+
+    cache = init_cache(cfg, 2, 16)
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    lens = jnp.asarray([0, 5], jnp.int32)
+    la, _ = decode_step_ragged(dense_masked, cfg, cache, toks, lens,
+                               expert_mask=em)
+    lb, _ = decode_step_ragged(installed, cfg, cache, toks, lens,
+                               expert_mask=em)
+    assert bool(jnp.all(la == lb))
+
+
+def test_engine_packed_token_identical(planned):
+    cfg, params, em, plan, packed, report, base_masks, _ = planned
+    rs = np.random.RandomState(3)
+    reqs = lambda: [Request(np.array(p, np.int32), n)  # noqa: E731
+                    for p, n in zip(
+                        [rs2.randint(0, cfg.vocab, 9) for rs2 in
+                         [np.random.RandomState(i) for i in range(4)]],
+                        [6, 4, 7, 5])]
+    kwargs = dict(max_len=32, max_batch=3, prefill_chunk=8,
+                  expert_mask=em, weight_masks=base_masks)
+    outs_dense = ServeEngine(params, cfg, **kwargs).generate(reqs())
+    eng = ServeEngine(params, cfg, sparse_weights=packed, **kwargs)
+    outs_packed = eng.generate(reqs())
+    for a, b in zip(outs_dense, outs_packed):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_sparse_validation(planned):
+    cfg, params, *_ = planned
+    with pytest.raises(ValueError, match="sparse_exec"):
+        ServeEngine(params, cfg, max_len=16, sparse_exec="exact")
+    dense_cfg = reduced(get_config("qwen2-7b"))
+    with pytest.raises(ValueError, match="family"):
+        ServeEngine(params, dense_cfg, max_len=16, sparse_weights={})
+
+
+# ---------------------------------------------------------------------------
+# checkpoint artifact roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_artifact_roundtrip(planned, tmp_path):
+    from repro.checkpoint import (masks_from_tree, masks_to_tree,
+                                  restore_checkpoint, save_checkpoint)
+
+    cfg, params, em, plan, packed, report, base_masks, _ = planned
+    tree = {"params": jax.tree.map(np.asarray, params),
+            "masks": masks_to_tree(base_masks),
+            "sparse_ffn": packed}
+    save_checkpoint(str(tmp_path), 7, tree)
+    step, back = restore_checkpoint(str(tmp_path))
+    assert step == 7
+    masks_back = masks_from_tree(back["masks"])
+    assert set(masks_back) == set(base_masks)
+    for key in base_masks:
+        np.testing.assert_array_equal(masks_back[key], base_masks[key])
+    # the restored artifact installs and reconstructs bit-identically
+    installed = sparse.install_sparse_ffn(params, cfg, back["sparse_ffn"])
+    for name in ("we_gate", "we_up", "we_down"):
+        W = np.asarray(params["layers"]["moe"][name])
+        for l in range(cfg.n_layers):
+            rt = {k: v[l] for k, v in
+                  installed["layers"]["moe"][name].items()}
+            np.testing.assert_array_equal(
+                np.asarray(sparse.densify_full(rt, cfg.n_experts)),
+                W[l] * plan.matrices[(l, ("moe", name))].element_mask)
+    assert sparse.sparse_ffn_bytes(back["sparse_ffn"]) == \
+        report["packed_bytes"]

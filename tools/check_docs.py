@@ -21,7 +21,8 @@ ROOT = Path(__file__).resolve().parent.parent
 # the doctests import repro.*; make `python tools/check_docs.py` work
 # without requiring the caller to export PYTHONPATH=src
 sys.path.insert(0, str(ROOT / "src"))
-DOCS = ["README.md", "docs/serving.md", "ROADMAP.md", "PAPER.md"]
+DOCS = ["README.md", "docs/serving.md", "docs/sparse.md", "ROADMAP.md",
+        "PAPER.md"]
 
 # [text](target) — excluding images and fenced code spans is overkill for
 # these docs; inline code never contains the ](... sequence we match
