@@ -4,7 +4,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_FLAGS ?=
 
 .PHONY: test test-fast test-stress bench bench-serving example-serve \
-	docs-check
+	docs-check lint
 
 # tier-1 verification (ROADMAP.md) — runs everything
 test:
@@ -20,6 +20,12 @@ test-stress:
 # docs job: markdown links resolve + doctested examples run
 docs-check:
 	$(PY) tools/check_docs.py
+
+# lint job: dispatch-safety static analysis (aliasing-hazard,
+# jit-discipline, pallas-invariants, dtype-discipline) — stdlib-only,
+# fails on any finding or unexplained suppression
+lint:
+	$(PY) tools/lint_repro.py src/ --strict
 
 bench:
 	$(PY) benchmarks/run.py

@@ -1,0 +1,46 @@
+"""Dispatch-safety static analysis for the serving stack.
+
+The same bug class bit this repo twice — PR 1's ``SlotKVCache.seq_lens``
+zero-copy race and PR 4's alignment-dependent numpy<->jax aliasing in
+device views — each found late, by a randomized stress oracle, after
+shipping.  This package turns that bug class (and its neighbours) into
+lint-time findings and deterministic test failures:
+
+  * :mod:`repro.analysis.core` — the shared AST visitor / reporting
+    core: :class:`Finding`, :class:`Checker`, per-line
+    ``# repro-lint: disable=<check> -- <why>`` suppressions, and the
+    ``analyze_source`` / ``analyze_file`` drivers.  Pure stdlib ``ast``;
+    importing this package pulls in no jax/numpy.
+  * :mod:`repro.analysis.aliasing` — **aliasing-hazard**: mutable
+    ``np.ndarray`` attributes aliased into device arrays (or handed to
+    jitted callables) without a ``.copy()`` snapshot — the exact
+    PR-1/PR-4 pattern.
+  * :mod:`repro.analysis.jit` — **jit-discipline**: bad
+    ``static_argnums``/``static_argnames`` (unknown names, out-of-range
+    nums, unhashable defaults), Python-side mutation of captured state
+    inside jitted bodies, shape-dependent Python branches that retrace.
+  * :mod:`repro.analysis.pallas` — **pallas-invariants**: BlockSpec
+    index-map arity vs grid + scalar-prefetch count, index maps that
+    read anything but prefetched scalars, literal grid/BlockSpec
+    divisibility, version-skew Pallas symbols used outside
+    ``kernels/compat.py`` (the shim registry the checker consumes via
+    ``compat.capabilities()``).
+  * :mod:`repro.analysis.dtype` — **dtype-discipline**: sub-fp32
+    (f8/bf16/f16) boundary crossings into accumulating ops without an
+    explicit cast site in ``serving/`` and ``sparse/``.
+  * :mod:`repro.analysis.sanitizer` — the runtime half: version-stamped
+    buffer guards (``REPRO_SANITIZE=1``) that turn a mutate-while-
+    aliased race from an alignment-dependent coin flip into a
+    deterministic :class:`DispatchRaceError`.  Imported lazily (needs
+    numpy) — ``from repro.analysis import sanitizer``.
+
+``tools/lint_repro.py`` is the CLI; ``make lint`` runs it over ``src/``
+in strict mode.  See docs/analysis.md for the checker catalog and how to
+add a checker.
+"""
+from repro.analysis.core import (Checker, Finding, SourceFile,
+                                 all_checkers, analyze_file,
+                                 analyze_source, checkers_for)
+
+__all__ = ["Checker", "Finding", "SourceFile", "all_checkers",
+           "analyze_file", "analyze_source", "checkers_for"]

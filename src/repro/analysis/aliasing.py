@@ -1,0 +1,177 @@
+"""aliasing-hazard: mutable numpy state aliased into device arrays.
+
+The PR-1/PR-4 bug class: a class keeps mutable host bookkeeping as
+``np.ndarray`` attributes (``seq_lens``, ``page_table``), hands them to
+jax (``jnp.asarray`` zero-copy aliases aligned numpy buffers on CPU),
+and mutates them while an async dispatch may still read the shared
+memory — producing alignment-/timing-dependent wrong tokens.  The fix is
+always the same: hand jax a private ``.copy()`` snapshot.
+
+This checker flags, per class:
+
+  * a mutable numpy attribute (assigned ``self.X = np.zeros(...)`` etc.,
+    possibly wrapped in ``sanitizer.guard(...)``) converted to a device
+    array — ``jnp.asarray`` / ``jnp.array`` / ``sanitizer.device_view``
+    — without a ``.copy()`` anywhere in the converted expression;
+  * the same attribute returned bare (or via ``np.asarray``) from a
+    ``*_device`` view method — the caller will alias it;
+  * the same attribute passed raw into a jitted dispatch callable
+    (an attribute assigned ``self._f = jax.jit(...)``).
+
+The heuristic is syntactic: an expression that *derives* a fresh array
+from the attribute (e.g. ``np.maximum(self.x, 0)``) may be flagged —
+suppress with ``# repro-lint: disable=aliasing-hazard -- <why>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from repro.analysis.core import Checker, Finding, SourceFile, call_name
+
+# numpy constructors that produce a fresh mutable buffer
+NP_CTORS = {"zeros", "ones", "empty", "full", "arange", "array", "asarray",
+            "zeros_like", "ones_like", "empty_like", "full_like"}
+# converters that hand a host buffer to jax (potentially zero-copy)
+DEVICE_CONVERTERS = {"jnp.asarray", "jnp.array", "jax.numpy.asarray",
+                     "jax.numpy.array"}
+DEVICE_CONVERTER_SUFFIXES = (".device_view",)
+
+
+def _is_np_ctor(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    if name is None:
+        return False
+    head, _, tail = name.rpartition(".")
+    return head in ("np", "numpy") and tail in NP_CTORS
+
+
+def _unwrap_guard(node: ast.AST) -> ast.AST:
+    """``sanitizer.guard(np.zeros(...), name)`` -> the inner ctor."""
+    if isinstance(node, ast.Call) and node.args:
+        name = call_name(node) or ""
+        if name.endswith("guard"):
+            return node.args[0]
+    return node
+
+
+def _has_copy(expr: ast.AST) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "copy":
+            return True
+    return False
+
+
+def _aliased_attr(expr: ast.AST, mutable: Set[str]) -> Optional[str]:
+    """Name of a mutable ``self.X`` aliased by ``expr`` sans snapshot."""
+    if _has_copy(expr):
+        return None
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self" and node.attr in mutable:
+            return node.attr
+    return None
+
+
+def _is_device_converter(call: ast.Call) -> bool:
+    name = call_name(call)
+    if name is None:
+        return False
+    return name in DEVICE_CONVERTERS or \
+        any(name.endswith(s) for s in DEVICE_CONVERTER_SUFFIXES)
+
+
+class AliasingHazardChecker(Checker):
+    name = "aliasing-hazard"
+    severity = "error"
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        for cls in ast.walk(src.tree):
+            if isinstance(cls, ast.ClassDef):
+                yield from self._check_class(src, cls)
+
+    # -- per-class analysis ----------------------------------------------
+    def _collect(self, cls: ast.ClassDef):
+        """Mutable numpy attrs + jitted dispatch attrs of one class."""
+        mutable: Set[str] = set()
+        dispatchers: Set[str] = set()
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt in node.targets:
+                if not (isinstance(tgt, ast.Attribute) and
+                        isinstance(tgt.value, ast.Name) and
+                        tgt.value.id == "self"):
+                    continue
+                value = _unwrap_guard(node.value)
+                if _is_np_ctor(value):
+                    mutable.add(tgt.attr)
+                if isinstance(value, ast.Call) and \
+                        call_name(value) in ("jax.jit", "jit"):
+                    dispatchers.add(tgt.attr)
+        return mutable, dispatchers
+
+    def _check_class(self, src: SourceFile,
+                     cls: ast.ClassDef) -> Iterator[Finding]:
+        mutable, dispatchers = self._collect(cls)
+        if not mutable:
+            return
+        seen = set()
+
+        def emit(node, attr, why):
+            key = (node.lineno, attr)
+            if key not in seen:
+                seen.add(key)
+                yield self.finding(
+                    src, node,
+                    f"mutable numpy attribute self.{attr} {why} without a "
+                    f".copy() snapshot — an async dispatch may read the "
+                    f"live buffer after a later mutation (PR-1/PR-4 bug "
+                    f"class)")
+
+        for fn in [n for n in ast.walk(cls)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and _is_device_converter(node):
+                    for arg in node.args:
+                        attr = _aliased_attr(arg, mutable)
+                        if attr:
+                            yield from emit(node, attr,
+                                            "aliased into a device array")
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        isinstance(node.func.value, ast.Name) and \
+                        node.func.value.id == "self" and \
+                        node.func.attr in dispatchers:
+                    for arg in list(node.args) + \
+                            [kw.value for kw in node.keywords]:
+                        attr = _aliased_attr(arg, mutable)
+                        if attr:
+                            yield from emit(
+                                node, attr,
+                                f"passed into jitted dispatch "
+                                f"self.{node.func.attr}")
+                elif isinstance(node, ast.Return) and \
+                        fn.name.endswith("_device") and \
+                        node.value is not None and \
+                        not isinstance(node.value, ast.Call):
+                    attr = _aliased_attr(node.value, mutable)
+                    if attr:
+                        yield from emit(node, attr,
+                                        f"returned from device view "
+                                        f"{fn.name}()")
+                elif isinstance(node, ast.Return) and \
+                        fn.name.endswith("_device") and \
+                        isinstance(node.value, ast.Call) and \
+                        (call_name(node.value) or "").startswith(
+                            ("np.", "numpy.")):
+                    attr = _aliased_attr(node.value, mutable)
+                    if attr:
+                        yield from emit(node, attr,
+                                        f"returned from device view "
+                                        f"{fn.name}() as a host alias")

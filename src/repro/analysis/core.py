@@ -1,0 +1,244 @@
+"""Shared visitor/reporting core for the repro-lint checkers.
+
+Everything here is stdlib-only (``ast`` + ``re``): the lint CLI must run
+in a bare CI job and must never need the heavyweight runtime deps of the
+code it checks.
+
+A checker is a small class over this core: it names itself, declares a
+default severity and (optionally) the path fragments it applies to, and
+implements ``check(src)`` yielding :class:`Finding`s.  The driver
+(:func:`analyze_source` / :func:`analyze_file`) parses once, runs every
+applicable checker, and applies the suppression comments.
+
+Suppression syntax (one per line, checked by CI for a justification)::
+
+    hazardous_line()  # repro-lint: disable=aliasing-hazard -- why it's safe
+
+    # repro-lint: disable=jit-discipline,dtype-discipline -- spans next line
+    hazardous_line()
+
+A trailing comment suppresses findings on its own line; a comment alone
+on a line also covers the following line.  A disable comment *without*
+the ``-- <justification>`` tail is itself reported as an
+``unexplained-suppression`` error (which cannot be suppressed), so the
+tree ships with zero unexplained suppressions by construction.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+SEVERITIES = ("error", "warning")
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,-]+)(?:\s*--\s*(\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit: a file/line, the checker that fired, and why."""
+    check: str
+    severity: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.severity}] "
+                f"{self.check}: {self.message}")
+
+
+class SourceFile:
+    """One parsed python source: text, line table, AST, suppressions."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path.replace("\\", "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.AST] = None
+        self.parse_error: Optional[Finding] = None
+        try:
+            self.tree = ast.parse(text, filename=path)
+        except SyntaxError as e:
+            self.parse_error = Finding(
+                "parse-error", "error", self.path, e.lineno or 1,
+                f"file does not parse: {e.msg}")
+        # line -> suppressed check names; a comment-only line also covers
+        # the next line (the statement it annotates)
+        self._suppress: Dict[int, Set[str]] = {}
+        self._unexplained: List[Finding] = []
+        for i, raw in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(raw)
+            if not m:
+                continue
+            checks = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            self._suppress.setdefault(i, set()).update(checks)
+            if raw.lstrip().startswith("#"):
+                self._suppress.setdefault(i + 1, set()).update(checks)
+            if not m.group(2):
+                self._unexplained.append(Finding(
+                    "unexplained-suppression", "error", self.path, i,
+                    "suppression without a justification: append "
+                    "'-- <why this is safe>'"))
+
+    def suppressed(self, check: str, line: int) -> bool:
+        return check in self._suppress.get(line, ())
+
+    def unexplained_suppressions(self) -> List[Finding]:
+        return list(self._unexplained)
+
+
+class Checker:
+    """Base class: subclasses set ``name``/``severity``/``paths`` and
+    implement :meth:`check`.
+
+    ``paths`` is a tuple of path fragments (e.g. ``("kernels/",)``): the
+    checker only runs on files whose path contains one of them; empty
+    means every file.
+    """
+    name: str = "checker"
+    severity: str = "error"
+    paths: Sequence[str] = ()
+
+    @classmethod
+    def applies_to(cls, path: str) -> bool:
+        path = path.replace("\\", "/")
+        return not cls.paths or any(p in path for p in cls.paths)
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        raise NotImplementedError
+        yield  # pragma: no cover
+
+    # -- reporting helper -------------------------------------------------
+    def finding(self, src: SourceFile, node, message: str,
+                severity: Optional[str] = None) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        sev = severity or self.severity
+        assert sev in SEVERITIES, sev
+        return Finding(self.name, sev, src.path, line, message)
+
+
+def all_checkers() -> List[type]:
+    """Every registered checker class (imported lazily to keep
+    ``repro.analysis`` import-light and cycle-free)."""
+    from repro.analysis.aliasing import AliasingHazardChecker
+    from repro.analysis.dtype import DtypeDisciplineChecker
+    from repro.analysis.jit import JitDisciplineChecker
+    from repro.analysis.pallas import PallasInvariantsChecker
+    return [AliasingHazardChecker, JitDisciplineChecker,
+            PallasInvariantsChecker, DtypeDisciplineChecker]
+
+
+def checkers_for(path: str,
+                 checkers: Optional[Iterable[type]] = None) -> List[Checker]:
+    return [cls() for cls in (checkers or all_checkers())
+            if cls.applies_to(path)]
+
+
+def analyze_source(text: str, path: str = "<string>",
+                   checkers: Optional[Iterable] = None) -> List[Finding]:
+    """Run checkers over one source string; returns surviving findings.
+
+    ``checkers`` may be classes or instances; defaults to every
+    registered checker applicable to ``path``.  Suppressed findings are
+    dropped; unexplained suppression comments are appended as findings.
+    """
+    src = SourceFile(path, text)
+    if src.parse_error is not None:
+        return [src.parse_error]
+    insts: List[Checker] = []
+    for c in (checkers if checkers is not None else all_checkers()):
+        inst = c() if isinstance(c, type) else c
+        if type(inst).applies_to(path):
+            insts.append(inst)
+    out: List[Finding] = []
+    for inst in insts:
+        for f in inst.check(src):
+            if not src.suppressed(f.check, f.line):
+                out.append(f)
+    out.extend(src.unexplained_suppressions())
+    out.sort(key=lambda f: (f.path, f.line, f.check))
+    return out
+
+
+def analyze_file(path, checkers: Optional[Iterable] = None) -> List[Finding]:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    return analyze_source(text, str(path), checkers)
+
+
+# ---------------------------------------------------------------------------
+# small AST utilities shared by the checkers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c" for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def int_literal(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def tuple_elts(node: ast.AST) -> Optional[List[ast.AST]]:
+    """Elements of a tuple/list literal, else None (symbolic)."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def jit_decorations(fn: ast.AST) -> List[ast.Call]:
+    """``jax.jit`` decorator call sites on a function def.
+
+    Matches ``@jax.jit``, ``@jit``, ``@functools.partial(jax.jit, ...)``
+    and ``@partial(jax.jit, ...)``; returns the Call nodes carrying the
+    static_argnums/static_argnames keywords (bare ``@jax.jit`` yields a
+    synthetic empty-call marker is NOT needed — callers test truthiness
+    of the list and read keywords off each call).
+    """
+    out: List[ast.Call] = []
+    for dec in getattr(fn, "decorator_list", []):
+        if dotted_name(dec) in ("jax.jit", "jit"):
+            out.append(ast.Call(func=dec, args=[], keywords=[]))
+            continue
+        if isinstance(dec, ast.Call):
+            name = call_name(dec)
+            if name in ("jax.jit", "jit"):
+                out.append(dec)
+            elif name in ("functools.partial", "partial") and dec.args \
+                    and dotted_name(dec.args[0]) in ("jax.jit", "jit"):
+                out.append(dec)
+    return out
+
+
+def lambda_or_def_params(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    names += [p.arg for p in a.kwonlyargs]
+    return names

@@ -1,0 +1,97 @@
+"""dtype-discipline: explicit casts at fp32 / sub-fp32 boundaries.
+
+The serving and sparse runtimes accumulate in fp32 by policy (docstring
+contracts in ``sparse/execute.py`` and the kernels).  As f8/bf16 weight
+pools and KV caches land (ROADMAP: quantized block pools), the dangerous
+pattern is an accumulating op whose operands silently inherit a sub-fp32
+dtype — the matmul then accumulates in low precision with no visible
+cast site to review.
+
+Rule (``serving/`` and ``sparse/`` only): inside any function that
+*touches* a sub-fp32 dtype (``float8_e4m3fn``, ``float8_e5m2``,
+``bfloat16``, ``float16`` — as an attribute or a string literal), every
+accumulating op — ``jnp.einsum`` / ``jnp.matmul`` / ``jnp.dot`` /
+``jnp.tensordot`` / ``lax.dot_general`` / ``lax.dot`` / the ``@``
+operator — must carry an explicit cast site: either a
+``preferred_element_type=`` keyword or ``.astype(...)`` on every array
+operand.  Functions that never touch a sub-fp32 dtype are exempt — pure
+fp32 code keeps its idiomatic, cast-free einsums.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from repro.analysis.core import (Checker, Finding, SourceFile, call_name,
+                                 keyword_arg)
+
+SUB_FP32 = ("float8_e4m3fn", "float8_e5m2", "float8", "bfloat16", "float16")
+ACCUMULATORS = {"jnp.einsum", "jnp.matmul", "jnp.dot", "jnp.tensordot",
+                "jax.numpy.einsum", "jax.numpy.matmul", "jax.numpy.dot",
+                "jax.numpy.tensordot", "lax.dot_general", "lax.dot",
+                "jax.lax.dot_general", "jax.lax.dot"}
+
+
+def _touches_sub_fp32(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr in SUB_FP32:
+            return True
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and any(t in node.value for t in SUB_FP32):
+            return True
+    return False
+
+
+def _is_cast(node: ast.AST) -> bool:
+    """Operand carries its own explicit cast (``x.astype(...)``)."""
+    return isinstance(node, ast.Call) and \
+        isinstance(node.func, ast.Attribute) and node.func.attr == "astype"
+
+
+def _array_operands(call: ast.Call, name: str) -> List[ast.AST]:
+    args = list(call.args)
+    if name.endswith("einsum") and args and \
+            isinstance(args[0], ast.Constant) and \
+            isinstance(args[0].value, str):
+        args = args[1:]                       # spec string is not an array
+    if name.endswith(("dot_general", "dot")) and len(args) > 2:
+        args = args[:2]                       # dimension_numbers et al.
+    return args
+
+
+class DtypeDisciplineChecker(Checker):
+    name = "dtype-discipline"
+    severity = "warning"
+    paths = ("serving/", "sparse/")
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _touches_sub_fp32(fn):
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    name = call_name(node) or ""
+                    if name not in ACCUMULATORS:
+                        continue
+                    if keyword_arg(node, "preferred_element_type") is not None:
+                        continue
+                    ops = _array_operands(node, name)
+                    if ops and all(_is_cast(a) for a in ops):
+                        continue
+                    yield self.finding(
+                        src, node, f"{name} in a function touching a "
+                        f"sub-fp32 dtype has no explicit cast site — add "
+                        f".astype(...) on the operands or "
+                        f"preferred_element_type= so the accumulation "
+                        f"dtype is reviewable")
+                elif isinstance(node, ast.BinOp) and \
+                        isinstance(node.op, ast.MatMult):
+                    if _is_cast(node.left) and _is_cast(node.right):
+                        continue
+                    yield self.finding(
+                        src, node, "'@' matmul in a function touching a "
+                        "sub-fp32 dtype has no explicit cast site — cast "
+                        "both operands so the accumulation dtype is "
+                        "reviewable")

@@ -1,0 +1,273 @@
+"""jit-discipline: static-argument hygiene and trace-time side effects.
+
+Three families of findings on ``@jax.jit`` /
+``@functools.partial(jax.jit, ...)`` functions (and ``jax.jit(f, ...)``
+call sites that can be resolved statically):
+
+  * **bad static arguments** — ``static_argnames`` naming a parameter
+    the wrapped signature does not have (a typo silently traces the
+    argument instead of specializing on it), ``static_argnums`` out of
+    the positional range or negative, and static parameters whose
+    *default* is unhashable / array-valued (lists, dicts, sets,
+    ``np.array(...)``) — jit raises on these only at call time, or
+    worse, retraces per call.
+  * **trace-time mutation** — Python-side writes to captured state
+    inside a jitted body (``self.x = ...``, ``captured[k] = ...``,
+    ``captured.append(...)``, ``global``/``nonlocal``): they run once at
+    trace time, then silently never again.
+  * **shape-dependent branches** (warning) — ``if``/``while`` tests
+    reading ``<traced-param>.shape``: legal, but every new shape
+    silently retraces the whole function; hoist to a static argument if
+    the branch is intentional.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from repro.analysis.core import (Checker, Finding, SourceFile, call_name,
+                                 int_literal, jit_decorations, keyword_arg,
+                                 lambda_or_def_params, tuple_elts)
+
+MUTATORS = {"append", "extend", "insert", "update", "setdefault", "pop",
+            "popitem", "clear", "remove", "add", "discard", "sort",
+            "reverse", "fill"}
+UNHASHABLE_DEFAULTS = (ast.List, ast.Dict, ast.Set)
+ARRAY_CTOR_HEADS = ("np.", "numpy.", "jnp.", "jax.numpy.")
+
+
+def _str_items(node: ast.AST) -> Optional[List[str]]:
+    """String elements of a str/tuple-of-str literal, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    elts = tuple_elts(node)
+    if elts is None:
+        return None
+    out = []
+    for e in elts:
+        if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+            return None
+        out.append(e.value)
+    return out
+
+
+def _int_items(node: ast.AST) -> Optional[List[int]]:
+    lit = int_literal(node)
+    if lit is not None:
+        return [lit]
+    elts = tuple_elts(node)
+    if elts is None:
+        return None
+    out = []
+    for e in elts:
+        lit = int_literal(e)
+        if lit is None:
+            return None
+        out.append(lit)
+    return out
+
+
+def _local_names(fn) -> Set[str]:
+    """Names bound inside ``fn``: params, plain assignments, loop and
+    comprehension targets, with-aliases.  Anything else a statement
+    mutates is captured (closure / global / attribute) state."""
+    names = set(lambda_or_def_params(fn))
+
+    def add_target(t):
+        if isinstance(t, ast.Name):
+            names.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add_target(e)
+        elif isinstance(t, ast.Starred):
+            add_target(t.value)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                add_target(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            add_target(node.target)
+        elif isinstance(node, ast.For):
+            add_target(node.target)
+        elif isinstance(node, ast.comprehension):
+            add_target(node.target)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            add_target(node.optional_vars)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            names.add(node.name)
+    return names
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class JitDisciplineChecker(Checker):
+    name = "jit-discipline"
+    severity = "error"
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        defs = {n.name: n for n in ast.walk(src.tree)
+                if isinstance(n, ast.FunctionDef)}
+        # decorated defs
+        for fn in defs.values():
+            for dec in jit_decorations(fn):
+                yield from self._check_static_args(src, dec, fn)
+            if jit_decorations(fn):
+                yield from self._check_body(src, fn)
+        # jax.jit(<fn>, ...) call sites resolvable to a local def/lambda
+        for node in ast.walk(src.tree):
+            if not (isinstance(node, ast.Call) and
+                    call_name(node) in ("jax.jit", "jit") and node.args):
+                continue
+            target = node.args[0]
+            fn = None
+            if isinstance(target, ast.Name) and target.id in defs:
+                fn = defs[target.id]
+            elif isinstance(target, ast.Lambda):
+                fn = target
+            yield from self._check_static_args(src, node, fn)
+
+    # -- static_argnums / static_argnames ---------------------------------
+    def _check_static_args(self, src: SourceFile, call: ast.Call,
+                           fn) -> Iterator[Finding]:
+        params = lambda_or_def_params(fn) if fn is not None else None
+        has_var = fn is not None and fn.args.vararg is not None
+        static_names: List[str] = []
+        names_kw = keyword_arg(call, "static_argnames")
+        if names_kw is not None:
+            items = _str_items(names_kw)
+            if items is None:
+                if isinstance(names_kw, ast.Call):
+                    yield self.finding(
+                        src, names_kw, "static_argnames must be a literal "
+                        "str/tuple of str, not a computed value")
+            else:
+                static_names += items
+                if params is not None:
+                    for nm in items:
+                        if nm not in params:
+                            yield self.finding(
+                                src, names_kw,
+                                f"static_argnames names {nm!r} which is not "
+                                f"a parameter of the wrapped function "
+                                f"({', '.join(params) or 'no params'}) — "
+                                f"the argument will be traced, not "
+                                f"specialized")
+        nums_kw = keyword_arg(call, "static_argnums")
+        if nums_kw is not None:
+            items = _int_items(nums_kw)
+            if items is None:
+                yield self.finding(
+                    src, nums_kw, "static_argnums must be a literal "
+                    "int/tuple of int (hashable, array-free)")
+            else:
+                for i in items:
+                    if i < 0:
+                        yield self.finding(
+                            src, nums_kw,
+                            f"negative static_argnums entry {i}")
+                    elif params is not None and not has_var and \
+                            i >= len(params):
+                        yield self.finding(
+                            src, nums_kw,
+                            f"static_argnums entry {i} is out of range for "
+                            f"a {len(params)}-parameter function")
+                    elif params is not None and i < len(params):
+                        static_names.append(params[i])
+        # unhashable / array-valued defaults on static parameters
+        if fn is not None and static_names:
+            args = fn.args
+            pos = args.posonlyargs + args.args
+            defaults = dict(zip([p.arg for p in pos[len(pos)
+                                                    - len(args.defaults):]],
+                                args.defaults))
+            defaults.update({p.arg: d for p, d in
+                             zip(args.kwonlyargs, args.kw_defaults)
+                             if d is not None})
+            for nm in static_names:
+                d = defaults.get(nm)
+                if d is None:
+                    continue
+                bad = isinstance(d, UNHASHABLE_DEFAULTS) or (
+                    isinstance(d, ast.Call) and
+                    (call_name(d) or "").startswith(ARRAY_CTOR_HEADS))
+                if bad:
+                    yield self.finding(
+                        src, d, f"static parameter {nm!r} has an "
+                        f"unhashable/array-valued default — jit hashes "
+                        f"static arguments; this raises (or retraces) at "
+                        f"call time")
+        # remember static names for the body checks
+        if fn is not None:
+            existing = getattr(fn, "_repro_static", set())
+            fn._repro_static = existing | set(static_names)
+
+    # -- trace-time mutation + shape branches ------------------------------
+    def _check_body(self, src: SourceFile,
+                    fn: ast.FunctionDef) -> Iterator[Finding]:
+        local = _local_names(fn)
+        static = getattr(fn, "_repro_static", set())
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield self.finding(
+                    src, node, f"{type(node).__name__.lower()} declaration "
+                    f"inside a jitted body — writes run once at trace "
+                    f"time, then never again")
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    yield from self._check_mutation_target(src, t, local)
+            elif isinstance(node, ast.AugAssign):
+                if not isinstance(node.target, ast.Name):
+                    yield from self._check_mutation_target(
+                        src, node.target, local)
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in MUTATORS:
+                root = _root_name(node.func.value)
+                if root is not None and root not in local:
+                    yield self.finding(
+                        src, node, f"'.{node.func.attr}()' mutates captured "
+                        f"'{root}' inside a jitted body — runs once at "
+                        f"trace time, then never again")
+            elif isinstance(node, (ast.If, ast.While)):
+                yield from self._check_shape_branch(src, node, fn, static)
+
+    def _check_mutation_target(self, src: SourceFile, t: ast.AST,
+                               local: Set[str]) -> Iterator[Finding]:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                yield from self._check_mutation_target(src, e, local)
+            return
+        if isinstance(t, ast.Attribute):
+            root = _root_name(t)
+            if root == "self" or (root is not None and root not in local):
+                yield self.finding(
+                    src, t, f"attribute write to captured "
+                    f"'{root}.{t.attr}' inside a jitted body — a "
+                    f"trace-time side effect, not a per-call update")
+        elif isinstance(t, ast.Subscript):
+            root = _root_name(t)
+            if root is not None and root not in local:
+                yield self.finding(
+                    src, t, f"subscript write to captured '{root}' inside "
+                    f"a jitted body — a trace-time side effect, not a "
+                    f"per-call update")
+
+    def _check_shape_branch(self, src: SourceFile, node, fn,
+                            static: Set[str]) -> Iterator[Finding]:
+        params = set(lambda_or_def_params(fn)) - static - {"self"}
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Attribute) and sub.attr == "shape" and \
+                    isinstance(sub.value, ast.Name) and \
+                    sub.value.id in params:
+                yield self.finding(
+                    src, node, f"Python branch on {sub.value.id}.shape "
+                    f"inside a jitted body — every new shape silently "
+                    f"retraces; make it a static argument if intended",
+                    severity="warning")
+                return

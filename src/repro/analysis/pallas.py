@@ -1,0 +1,282 @@
+"""pallas-invariants: static checks on every ``pl.pallas_call`` site.
+
+Pallas failures are notoriously late (compile on a real TPU, or a wrong
+DMA under interpret mode); these invariants are checkable from the AST:
+
+  * **index-map arity** — every BlockSpec index map must take exactly
+    ``len(grid) + num_scalar_prefetch`` parameters; a missing scalar-ref
+    parameter shifts the whole prefetch argument order one left and
+    Pallas reports an opaque arity error (or silently mis-tiles).
+  * **scalar-read discipline** — index maps may subscript *only* the
+    prefetched scalar refs (the trailing ``num_scalar_prefetch``
+    parameters).  Subscripting a grid index or a closed-over array is
+    not available in SMEM at index-map time.
+  * **operand ordering/count** — when the ``pl.pallas_call(...)``
+    result is invoked inline, the operand count must equal
+    ``num_scalar_prefetch + len(in_specs)`` (scalars first).
+  * **divisibility** (literal shapes only) — where the grid, the
+    BlockSpec block shape and the ``out_shape`` are all integer
+    literals and the index map is a plain permutation of grid indices,
+    each block dim must divide the array dim and the mapped grid axis
+    must cover it exactly.  Symbolic shapes (the production kernels) are
+    skipped — their divisibility asserts stay runtime checks.
+  * **version-skew shims** — Pallas symbols that
+    ``repro.kernels.compat`` shims (declared by its ``capabilities()``
+    registry) must be imported from compat, never referenced as
+    ``pltpu.<symbol>`` / ``pltpu.TPU<symbol>`` directly: version-skew
+    workarounds live in exactly one place the linter can see.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.core import (Checker, Finding, SourceFile, call_name,
+                                 int_literal, keyword_arg,
+                                 lambda_or_def_params, tuple_elts)
+
+# fallback when jax (and therefore kernels/compat) is not importable in
+# the lint environment; compat.capabilities()["shimmed"] is authoritative
+_FALLBACK_SHIMMED = ("CompilerParams",)
+
+
+def _shimmed_symbols() -> Tuple[str, ...]:
+    try:
+        from repro.kernels.compat import capabilities
+        return tuple(capabilities()["shimmed"])
+    except Exception:
+        return _FALLBACK_SHIMMED
+
+
+class _Spec:
+    """Statically-extracted view of one grid spec + its BlockSpecs."""
+
+    def __init__(self):
+        self.n_prefetch = 0
+        self.grid_len: Optional[int] = None
+        self.grid_elts: Optional[List[ast.AST]] = None
+        self.in_specs: List[ast.Call] = []
+        self.out_specs: List[ast.Call] = []
+
+
+def _blockspec_calls(node: Optional[ast.AST]) -> List[ast.Call]:
+    if node is None:
+        return []
+    out = []
+    elts = tuple_elts(node)
+    for e in (elts if elts is not None else [node]):
+        if isinstance(e, ast.Call) and \
+                (call_name(e) or "").endswith("BlockSpec"):
+            out.append(e)
+    return out
+
+
+def _extract_spec(call: ast.Call, env: Dict[str, ast.AST]) -> \
+        Optional[_Spec]:
+    """Pull grid/in_specs/out_specs/num_scalar_prefetch out of a
+    ``pl.pallas_call`` site, resolving a ``grid_spec=`` name through the
+    enclosing function's single-assignment environment."""
+    spec = _Spec()
+    holder: ast.Call = call
+    gs = keyword_arg(call, "grid_spec")
+    if gs is not None:
+        if isinstance(gs, ast.Name):
+            gs = env.get(gs.id)
+        if not isinstance(gs, ast.Call):
+            return None
+        holder = gs
+        n = keyword_arg(gs, "num_scalar_prefetch")
+        if n is not None:
+            lit = int_literal(n)
+            if lit is None:
+                return None
+            spec.n_prefetch = lit
+    grid = keyword_arg(holder, "grid")
+    if grid is not None:
+        elts = tuple_elts(grid)
+        if elts is not None:
+            spec.grid_len = len(elts)
+            spec.grid_elts = elts
+        else:
+            spec.grid_len = 1 if int_literal(grid) is not None else None
+    spec.in_specs = _blockspec_calls(keyword_arg(holder, "in_specs"))
+    spec.out_specs = _blockspec_calls(keyword_arg(holder, "out_specs"))
+    return spec
+
+
+def _index_map(bs: ast.Call) -> Optional[ast.Lambda]:
+    im = bs.args[1] if len(bs.args) > 1 else keyword_arg(bs, "index_map")
+    return im if isinstance(im, ast.Lambda) else None
+
+
+def _block_shape(bs: ast.Call) -> Optional[List[Optional[int]]]:
+    shape = bs.args[0] if bs.args else keyword_arg(bs, "block_shape")
+    elts = tuple_elts(shape) if shape is not None else None
+    if elts is None:
+        return None
+    return [int_literal(e) for e in elts]
+
+
+class PallasInvariantsChecker(Checker):
+    name = "pallas-invariants"
+    severity = "error"
+    paths = ("kernels/",)
+
+    def __init__(self):
+        self.shimmed = _shimmed_symbols()
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        yield from self._check_compat_discipline(src)
+        # flat single-assignment environment: grid_spec names are
+        # function-local in practice, and a later shadowing assignment
+        # simply wins (same as execution order for these straight-line
+        # kernel wrappers)
+        env: Dict[str, ast.AST] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                env[node.targets[0].id] = node.value
+        # visit each pallas_call exactly once: inline-invoked sites get
+        # the operand-count check (which recurses into the spec checks),
+        # bare sites get the spec checks directly
+        inline_inner = set()
+        calls: List[ast.Call] = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Call) and \
+                        (call_name(node.func) or "").endswith("pallas_call"):
+                    inline_inner.add(id(node.func))
+                    calls.append(node)
+                elif (call_name(node) or "").endswith("pallas_call"):
+                    calls.append(node)
+        for node in calls:
+            if isinstance(node.func, ast.Call):
+                yield from self._check_operands(src, node, env)
+            elif id(node) not in inline_inner:
+                yield from self._check_specs(src, node, env)
+
+    # -- compat shim discipline -------------------------------------------
+    def _check_compat_discipline(self, src: SourceFile) -> Iterator[Finding]:
+        if src.path.endswith("kernels/compat.py"):
+            return
+        banned = set()
+        for s in self.shimmed:
+            banned.add(s)
+            banned.add("TPU" + s)
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Attribute) and node.attr in banned and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id in ("pltpu", "tpu"):
+                yield self.finding(
+                    src, node, f"direct use of pltpu.{node.attr} — import "
+                    f"{node.attr.removeprefix('TPU') or node.attr} from "
+                    f"repro.kernels.compat so version-skew workarounds "
+                    f"stay declared in one place (compat.capabilities())")
+
+    # -- BlockSpec invariants ---------------------------------------------
+    def _check_specs(self, src: SourceFile, call: ast.Call,
+                     env: Dict[str, ast.AST]) -> Iterator[Finding]:
+        spec = _extract_spec(call, env)
+        if spec is None or spec.grid_len is None:
+            return
+        expected = spec.grid_len + spec.n_prefetch
+        out_shape = self._out_shape(call)
+        for which, bspecs in (("in_specs", spec.in_specs),
+                              ("out_specs", spec.out_specs)):
+            for bs in bspecs:
+                im = _index_map(bs)
+                if im is None:
+                    continue
+                params = lambda_or_def_params(im)
+                if len(params) != expected:
+                    yield self.finding(
+                        src, bs, f"{which} BlockSpec index map takes "
+                        f"{len(params)} args but the grid has "
+                        f"{spec.grid_len} axes + {spec.n_prefetch} "
+                        f"scalar-prefetch refs = {expected} — prefetch "
+                        f"ordering is silently shifted")
+                    continue
+                scalar_params = set(params[spec.grid_len:]) \
+                    if spec.n_prefetch else set()
+                grid_params = params[:spec.grid_len]
+                for sub in ast.walk(im.body):
+                    if not isinstance(sub, ast.Subscript):
+                        continue
+                    root = sub.value
+                    while isinstance(root, (ast.Subscript, ast.Attribute)):
+                        root = root.value
+                    if not isinstance(root, ast.Name):
+                        continue
+                    if root.id in scalar_params:
+                        continue
+                    where = ("grid index" if root.id in grid_params
+                             else "closed-over state")
+                    yield self.finding(
+                        src, bs, f"{which} BlockSpec index map subscripts "
+                        f"{where} '{root.id}' — index maps may only read "
+                        f"the scalar-prefetch refs (the trailing "
+                        f"{spec.n_prefetch} parameters)")
+                if which == "out_specs" and out_shape is not None:
+                    yield from self._check_divisibility(
+                        src, bs, im, spec, out_shape)
+
+    def _out_shape(self, call: ast.Call) -> Optional[List[int]]:
+        node = keyword_arg(call, "out_shape")
+        if not (isinstance(node, ast.Call) and
+                (call_name(node) or "").endswith("ShapeDtypeStruct") and
+                node.args):
+            return None
+        elts = tuple_elts(node.args[0])
+        if elts is None:
+            return None
+        lits = [int_literal(e) for e in elts]
+        return None if any(v is None for v in lits) else lits
+
+    def _check_divisibility(self, src: SourceFile, bs: ast.Call,
+                            im: ast.Lambda, spec: _Spec,
+                            shape: List[int]) -> Iterator[Finding]:
+        block = _block_shape(bs)
+        if block is None or any(b is None for b in block) or \
+                len(block) != len(shape):
+            return
+        grid = [int_literal(e) for e in (spec.grid_elts or [])]
+        if any(g is None for g in grid):
+            return
+        body = im.body
+        if not isinstance(body, ast.Tuple) or len(body.elts) != len(shape):
+            return
+        params = lambda_or_def_params(im)[:spec.grid_len]
+        for d, (dim, blk, idx) in enumerate(zip(shape, block, body.elts)):
+            if dim % blk != 0:
+                yield self.finding(
+                    src, bs, f"out_shape dim {d} ({dim}) is not divisible "
+                    f"by its BlockSpec block size ({blk}) — the final "
+                    f"partial block reads/writes out of bounds")
+                continue
+            if isinstance(idx, ast.Name) and idx.id in params:
+                steps = grid[params.index(idx.id)]
+                if steps * blk != dim:
+                    yield self.finding(
+                        src, bs, f"grid axis '{idx.id}' runs {steps} steps "
+                        f"of block {blk} over out_shape dim {d} ({dim}) — "
+                        f"covers {steps * blk} rows, not {dim}")
+
+    # -- inline-call operand count ----------------------------------------
+    def _check_operands(self, src: SourceFile, outer: ast.Call,
+                        env: Dict[str, ast.AST]) -> Iterator[Finding]:
+        inner = outer.func
+        assert isinstance(inner, ast.Call)
+        spec = _extract_spec(inner, env)
+        if spec is not None and spec.in_specs and \
+                not any(isinstance(a, ast.Starred) for a in outer.args):
+            n_ops = len(outer.args)
+            want = spec.n_prefetch + len(spec.in_specs)
+            if n_ops != want:
+                yield self.finding(
+                    src, outer, f"pallas_call invoked with {n_ops} "
+                    f"operands but the spec declares {spec.n_prefetch} "
+                    f"scalar-prefetch refs + {len(spec.in_specs)} "
+                    f"in_specs = {want} — scalars must come first, one "
+                    f"operand per spec")
+        # the inner call's own BlockSpec invariants apply either way
+        yield from self._check_specs(src, inner, env)

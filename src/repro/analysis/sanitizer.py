@@ -1,0 +1,180 @@
+"""Dispatch-race sanitizer: version-stamped guards on host cache state.
+
+The PR-1/PR-4 bug class at runtime: ``jnp.asarray`` of an aligned numpy
+buffer can be **zero-copy** on CPU, so an async dispatch reads whatever
+the host buffer holds when the dispatch *executes* — and the serving
+loop mutates ``seq_lens`` / ``page_table`` right after submitting.  The
+failure is an alignment-/timing-dependent coin flip: wrong tokens in
+~half of runs, clean in the rest.
+
+With ``REPRO_SANITIZE=1`` the caches wrap their mutable host buffers in
+a version-stamped guard (:func:`guard`) and every dispatch-bound host
+array goes through :func:`device_view`.  The rule is the conservative
+worst case and therefore **deterministic**:
+
+  * ``device_view(x)`` of a *live guarded buffer* (not a ``.copy()``
+    snapshot) records a zero-copy alias against the buffer's guard —
+    whether or not jax actually aliased it on this run.
+  * any later in-place mutation of that buffer
+    (``x[i] = ...``, ``x.fill(...)``) raises :class:`DispatchRaceError`
+    naming the owning array: the dispatch submitted with the alias may
+    read the post-mutation bytes.
+
+Correct code always hands jax a private ``.copy()`` snapshot
+(``__array_finalize__`` strips the guard from copies, keeps it on
+views), so a healthy tree never registers an alias and the sanitizer is
+pure bookkeeping.  Removing a ``.copy()`` — the exact PR-4 regression —
+turns the first post-dispatch mutation into a hard failure on every
+run, instead of a stress-oracle coin flip.  The static half of this
+defense is the ``aliasing-hazard`` lint checker; the sanitizer catches
+what syntax can't see (helpers, indirection, new call sites).
+
+Zero overhead when disabled: :func:`guard` returns the array unchanged
+and :func:`device_view` is ``jnp.asarray``.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+import numpy as np
+
+# jnp import is deferred so pure-host tooling (and the lint CLI's
+# import of repro.analysis) never pays for jax
+_jnp = None
+
+
+class DispatchRaceError(RuntimeError):
+    """A guarded host buffer was mutated while a device view built from
+    its live (un-snapshotted) memory may still be read by a dispatch."""
+
+
+_FORCED: Optional[bool] = None     # enable()/disable() override for tests
+
+
+def enabled() -> bool:
+    """Sanitizer switch: ``REPRO_SANITIZE=1`` (or a test override)."""
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+def enable(on: bool = True):
+    """Force the sanitizer on/off for this process (tests)."""
+    global _FORCED
+    _FORCED = on
+
+
+def clear_override():
+    global _FORCED
+    _FORCED = None
+
+
+class BufferGuard:
+    """Version stamp + live-alias registry for one host buffer.
+
+    ``version`` counts in-place mutations; ``aliases`` records the
+    versions at which the buffer was handed zero-copy to a device view.
+    The records live on the guard (not a global), so they are reclaimed
+    with the buffer.
+    """
+
+    __slots__ = ("name", "version", "aliases")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.version = 0
+        self.aliases: List[int] = []
+
+    def on_alias(self):
+        self.aliases.append(self.version)
+
+    def on_mutate(self):
+        self.version += 1
+        if self.aliases:
+            raise DispatchRaceError(
+                f"host buffer '{self.name}' mutated (version "
+                f"{self.version}) while {len(self.aliases)} zero-copy "
+                f"device view(s) of its live memory exist (first taken at "
+                f"version {self.aliases[0]}) — a dispatch submitted with "
+                f"that view may read the post-mutation bytes.  Hand jax a "
+                f"private .copy() snapshot instead of the live buffer "
+                f"(see docs/analysis.md, aliasing-hazard).")
+
+
+class GuardedArray(np.ndarray):
+    """ndarray subclass whose in-place writes notify a
+    :class:`BufferGuard`.
+
+    Views (slices, reshapes — memory-sharing) inherit the parent's
+    guard; copies (``.copy()``, fancy indexing — fresh memory) drop it.
+    Only ``__setitem__`` and ``fill`` are intercepted: that is how the
+    serving stack mutates its bookkeeping arrays, and the documented
+    contract for guarded buffers.
+    """
+
+    _guard: Optional[BufferGuard]
+
+    def __array_finalize__(self, obj):
+        # fresh memory (base None) -> no guard; memory-sharing view ->
+        # inherit the parent's guard so mutation through any view trips
+        self._guard = (getattr(obj, "_guard", None)
+                       if self.base is not None else None)
+
+    def __setitem__(self, key, value):
+        g = self._guard
+        if g is not None:
+            g.on_mutate()
+        super().__setitem__(key, value)
+
+    def fill(self, value):
+        g = self._guard
+        if g is not None:
+            g.on_mutate()
+        super().fill(value)
+
+
+def guard(arr: np.ndarray, name: str) -> np.ndarray:
+    """Wrap ``arr`` in a version-stamped guard when sanitizing.
+
+    Returns ``arr`` unchanged when the sanitizer is off — callers keep
+    one code path and pay nothing in production.
+    """
+    if not enabled():
+        return arr
+    g = np.asarray(arr).view(GuardedArray)
+    g._guard = BufferGuard(name)
+    return g
+
+
+def guard_of(arr) -> Optional[BufferGuard]:
+    return getattr(arr, "_guard", None)
+
+
+def device_view(arr):
+    """``jnp.asarray`` that tracks zero-copy aliases of guarded buffers.
+
+    A ``.copy()`` snapshot (guard stripped by ``__array_finalize__``)
+    passes straight through; a live guarded buffer registers an alias so
+    any later mutation raises deterministically.  The conversion itself
+    is unchanged — the sanitizer observes, it does not fix: the failure
+    points at the call site that should have snapshotted.
+    """
+    global _jnp
+    if _jnp is None:
+        import jax.numpy as jnp
+        _jnp = jnp
+    g = guard_of(arr)
+    if g is not None:
+        g.on_alias()
+    return _jnp.asarray(arr)
+
+
+def release(arr):
+    """Drop alias records for ``arr``'s guard — for callers that have
+    *proven* every dispatch holding a view has completed (e.g. after a
+    blocking materialization of all step outputs).  The serving stack
+    never needs this (it snapshots instead); provided for harnesses."""
+    g = guard_of(arr)
+    if g is not None:
+        g.aliases.clear()

@@ -1,10 +1,25 @@
-"""Pallas API-drift shims.
+"""Pallas API-drift shims + the version-skew capability registry.
 
 jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``;
 this container pins an older jax.  Kernels import the symbol from here so
 they read like the current API while running on either version.
+
+``capabilities()`` is the single memoized probe of the installed jax's
+Pallas surface.  Every version-skew workaround is *declared* here — the
+``SHIMMED`` registry — so the ``pallas-invariants`` lint checker can
+enforce that no kernel reaches for ``pltpu.<shimmed symbol>`` (old or
+new spelling) directly: skew handling lives in exactly one place.
 """
+from __future__ import annotations
+
+import functools
+
 from jax.experimental.pallas import tpu as _pltpu
+
+# symbols this module shims across jax versions.  The lint checker bans
+# direct ``pltpu.<name>`` / ``pltpu.TPU<name>`` references outside this
+# file for every name listed here.
+SHIMMED = ("CompilerParams",)
 
 _cp = getattr(_pltpu, "CompilerParams",
               getattr(_pltpu, "TPUCompilerParams", None))
@@ -16,3 +31,37 @@ if _cp is None:  # pragma: no cover - depends on installed jax
             "pltpu.TPUCompilerParams; the Pallas kernels need jax>=0.4.30")
 else:
     CompilerParams = _cp
+
+
+@functools.lru_cache(maxsize=None)
+def capabilities() -> dict:
+    """One memoized probe of the installed jax's Pallas capabilities.
+
+    Keys:
+      * ``jax_version`` — ``jax.__version__`` string.
+      * ``shimmed`` — symbols this module shims (the lint registry).
+      * ``compiler_params_source`` — the real ``pltpu`` attribute name
+        backing :data:`CompilerParams` (``"CompilerParams"`` on jax>=0.5,
+        ``"TPUCompilerParams"`` before, ``None`` if neither exists).
+      * ``has_compiler_params`` — whether a usable class was found.
+      * ``has_prefetch_scalar_grid_spec`` — ``pltpu.PrefetchScalarGridSpec``
+        availability (the scalar-prefetch kernels need it).
+
+    The dict is computed once per process; checkers and kernels consult
+    it instead of sprinkling their own ``getattr(pltpu, ...)`` probes.
+    """
+    import jax
+
+    source = None
+    if getattr(_pltpu, "CompilerParams", None) is not None:
+        source = "CompilerParams"
+    elif getattr(_pltpu, "TPUCompilerParams", None) is not None:
+        source = "TPUCompilerParams"
+    return {
+        "jax_version": jax.__version__,
+        "shimmed": SHIMMED,
+        "compiler_params_source": source,
+        "has_compiler_params": _cp is not None,
+        "has_prefetch_scalar_grid_spec": hasattr(_pltpu,
+                                                 "PrefetchScalarGridSpec"),
+    }

@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizer
 from repro.models import (decode_step, decode_step_paged, decode_step_ragged,
                           init_cache, prefill_step, prefill_step_paged)
 from repro.sparse import install_sparse_ffn
@@ -428,12 +429,12 @@ class ServeEngine:
             tokens[st.slot, 0] = st.tokens[-1]
         if isinstance(cache, PagedKVCache):
             logits, cache.tree = self._decode(self.params, cache.tree,
-                                              jnp.asarray(tokens),
+                                              sanitizer.device_view(tokens),
                                               cache.seq_lens_device(),
                                               cache.page_table_device())
         else:
             logits, cache.tree = self._decode(self.params, cache.tree,
-                                              jnp.asarray(tokens),
+                                              sanitizer.device_view(tokens),
                                               cache.seq_lens_device())
         self.decode_dispatches += 1
         for st in active:
@@ -458,7 +459,11 @@ class ServeEngine:
         else:
             assert n_pad <= cache.max_len, (n_pad, cache.max_len)
             ref = jnp.int32(st.slot)
-        buf = np.zeros(n_pad, np.int32)
+        # buf outlives many steps in self._prefills and is aliased into
+        # every chunk dispatch — guarded so any future mutation while a
+        # chunk view exists fails deterministically under the sanitizer
+        buf = sanitizer.guard(np.zeros(n_pad, np.int32),
+                              f"ServeEngine.prefill_buf[rid={st.rid}]")
         buf[:S] = prompt
         cache.mark_prefilling(st.slot)
         self._prefills[st.rid] = (buf, S, n_pad, ref)
@@ -481,7 +486,7 @@ class ServeEngine:
         c0 = st.prefill_pos
         logits, cache.tree = self._prefill(
             self.params, cache.tree,
-            jnp.asarray(buf[None, c0: c0 + C]), ref, jnp.int32(c0))
+            sanitizer.device_view(buf[None, c0: c0 + C]), ref, jnp.int32(c0))
         self.prefill_dispatches += 1
         st.prefill_pos = c0 + C
         if st.prefill_pos < n_pad:
@@ -524,12 +529,16 @@ class ServeEngine:
         while sched.has_pending:
             st = sched.admit(slot=0)
             sched.activate(st.rid)     # sequential path has no chunk stage
-            prompt = np.asarray(st.req.prompt, np.int32)
+            # scheduler.submit normalized (and, sanitizing, guarded) the
+            # prompt — slice it directly so the guard survives into the
+            # device views below
+            prompt = st.req.prompt
             cache = init_cache(self.cfg, 1, self.max_len)
             logits = None
             for t in range(len(prompt)):
                 logits, cache = self._decode_uniform(
-                    self.params, cache, jnp.asarray(prompt[None, t: t + 1]),
+                    self.params, cache,
+                    sanitizer.device_view(prompt[None, t: t + 1]),
                     jnp.int32(t))
             pos = len(prompt)
             while True:

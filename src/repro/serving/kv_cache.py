@@ -44,9 +44,9 @@ from __future__ import annotations
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizer
 from repro.models import init_cache, init_paged_cache
 
 
@@ -78,8 +78,14 @@ class PagedKVCache:
         self.page_budget = page_budget
         self.n_pages = page_budget + 1                # + sentinel page 0
         self.tree = init_paged_cache(cfg, self.n_pages, page_size)
-        self.seq_lens = np.zeros(n_slots, np.int32)
-        self.page_table = np.zeros((n_slots, self.max_pages), np.int32)
+        # under REPRO_SANITIZE=1 these carry version-stamped guards: a
+        # device view built from the live buffer + a later mutation is a
+        # deterministic DispatchRaceError instead of a timing coin flip
+        self.seq_lens = sanitizer.guard(np.zeros(n_slots, np.int32),
+                                        "PagedKVCache.seq_lens")
+        self.page_table = sanitizer.guard(
+            np.zeros((n_slots, self.max_pages), np.int32),
+            "PagedKVCache.page_table")
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0
         self._free_pages = list(range(self.n_pages - 1, 0, -1))  # never 0
         self._pages_of: Dict[int, List[int]] = {}
@@ -199,17 +205,19 @@ class PagedKVCache:
         # the nondeterminism).  Do not "simplify" the .copy() away —
         # re-aliasing the live buffer resurrects a silent correctness
         # bug.  The snapshot itself is never mutated, so jax aliasing
-        # it is safe.
-        return jnp.asarray(self.seq_lens.copy())
+        # it is safe.  sanitizer.device_view is jnp.asarray plus (under
+        # REPRO_SANITIZE=1) zero-copy-alias tracking: dropping the
+        # .copy() here becomes a deterministic DispatchRaceError.
+        return sanitizer.device_view(self.seq_lens.copy())
 
     def page_table_device(self, slot: Optional[int] = None):
         if slot is not None:
-            return jnp.asarray(self.page_table[slot].copy())
+            return sanitizer.device_view(self.page_table[slot].copy())
         # the table only mutates at admission/free, so the decode loop's
         # per-step copy is cached (the .copy() snapshot is private to
         # jax — see seq_lens_device for the aliasing rationale)
         if self._table_dev is None:
-            self._table_dev = jnp.asarray(self.page_table.copy())
+            self._table_dev = sanitizer.device_view(self.page_table.copy())
         return self._table_dev
 
     # ---- gauges ---------------------------------------------------------
@@ -248,7 +256,9 @@ class SlotKVCache:
         self.n_slots = n_slots
         self.max_len = max_len
         self.tree = init_cache(cfg, n_slots, max_len)
-        self.seq_lens = np.zeros(n_slots, np.int32)
+        # version-stamped under REPRO_SANITIZE=1 — see PagedKVCache
+        self.seq_lens = sanitizer.guard(np.zeros(n_slots, np.int32),
+                                        "SlotKVCache.seq_lens")
         self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
         self._prefilling: set = set()    # lanes mid-prefill (gauges)
 
@@ -296,7 +306,7 @@ class SlotKVCache:
     # ---- device views ---------------------------------------------------
     def seq_lens_device(self):
         # see PagedKVCache.seq_lens_device for the snapshot rationale
-        return jnp.asarray(self.seq_lens.copy())
+        return sanitizer.device_view(self.seq_lens.copy())
 
     # ---- gauges ---------------------------------------------------------
     def gauges(self) -> Dict[str, float]:

@@ -30,6 +30,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis import sanitizer
+
 
 class SchedulerError(RuntimeError):
     """A scheduling invariant was violated (e.g. a token delivered to a
@@ -103,6 +105,12 @@ class Scheduler:
                 f"capacity of {self.max_request_tokens} tokens")
         rid = self._next_rid
         self._next_rid += 1
+        # the prompt buffer belongs to the engine from here on: normalize
+        # to int32 and (under REPRO_SANITIZE=1) version-stamp it, so a
+        # zero-copy device view of the live prompt + a later caller-side
+        # mutation is a deterministic DispatchRaceError
+        req.prompt = sanitizer.guard(np.asarray(req.prompt, np.int32),
+                                     f"Request[{rid}].prompt")
         self.pending.append(RequestState(rid=rid, req=req, t_submit=now))
         return rid
 

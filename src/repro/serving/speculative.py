@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizer
 from repro.models import decode_step_paged, verify_step_paged
 
 
@@ -135,7 +136,7 @@ class SpeculativeDecoder:
         last = np.zeros((B, 1), np.int32)
         for st in active:
             last[st.slot, 0] = st.tokens[-1]
-        last_dev = jnp.asarray(last)
+        last_dev = sanitizer.device_view(last)
         seq = cache.seq_lens_device()
         tbl = cache.page_table_device()
         draft, cache.tree = self._draft(engine.draft_params, cache.tree,

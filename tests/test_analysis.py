@@ -1,0 +1,485 @@
+"""Dispatch-safety analysis: checker discrimination + sanitizer oracle.
+
+Each lint checker gets a **bad fixture** (trips exactly that checker)
+and a **clean twin** (the minimal correct rewrite — zero findings), so
+the suite proves the checkers discriminate rather than merely fire.
+The runtime sanitizer is pinned two ways: re-introducing the PR-4
+``seq_lens`` aliasing bug into a live engine fails **deterministically**
+under ``REPRO_SANITIZE=1`` (the bug it was built for was a
+timing-dependent coin flip), and a healthy engine under the sanitizer
+stays token-identical to an unsanitized run.  Finally the lint over the
+real ``src/`` tree is pinned clean — a regression that introduces a
+finding (or an unexplained suppression) fails here before CI.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import analyze_source, checkers_for, sanitizer
+
+ROOT = Path(__file__).resolve().parent.parent
+
+SERVING = "src/repro/serving/fixture.py"
+KERNELS = "src/repro/kernels/fixture.py"
+
+
+def _checks(text, path):
+    return [(f.check, f.severity) for f in analyze_source(text, path)]
+
+
+# ---------------------------------------------------------------------------
+# aliasing-hazard
+# ---------------------------------------------------------------------------
+
+ALIAS_BAD = '''
+import numpy as np
+import jax.numpy as jnp
+
+class Cache:
+    def __init__(self, n):
+        self.seq_lens = np.zeros(n, np.int32)
+        self._decode = jit(step)
+
+    def seq_lens_device(self):
+        return jnp.asarray(self.seq_lens)
+
+    def dispatch(self, params):
+        return self._decode(params, self.seq_lens)
+'''
+
+ALIAS_CLEAN = '''
+import numpy as np
+import jax.numpy as jnp
+
+class Cache:
+    def __init__(self, n):
+        self.seq_lens = np.zeros(n, np.int32)
+        self._decode = jit(step)
+
+    def seq_lens_device(self):
+        return jnp.asarray(self.seq_lens.copy())
+
+    def dispatch(self, params):
+        return self._decode(params, self.seq_lens.copy())
+'''
+
+
+def test_aliasing_hazard_trips_on_live_buffer():
+    checks = _checks(ALIAS_BAD, SERVING)
+    assert ("aliasing-hazard", "error") in checks
+    assert all(c == "aliasing-hazard" for c, _ in checks)
+    # both the device-view return and the dispatcher argument are flagged
+    assert len(checks) == 2
+
+
+def test_aliasing_hazard_clean_twin():
+    assert _checks(ALIAS_CLEAN, SERVING) == []
+
+
+def test_aliasing_hazard_sees_through_sanitizer_guard():
+    # guard() wrapping must not hide the attribute from the checker
+    guarded = ALIAS_BAD.replace(
+        "np.zeros(n, np.int32)",
+        'sanitizer.guard(np.zeros(n, np.int32), "seq_lens")')
+    checks = _checks(guarded, SERVING)
+    assert ("aliasing-hazard", "error") in checks
+
+
+def test_aliasing_hazard_flags_bare_device_return():
+    src = '''
+import numpy as np
+
+class Cache:
+    def __init__(self):
+        self.table = np.zeros((4, 4), np.int32)
+
+    def table_device(self):
+        return self.table
+'''
+    checks = _checks(src, SERVING)
+    assert checks == [("aliasing-hazard", "error")]
+
+
+# ---------------------------------------------------------------------------
+# jit-discipline
+# ---------------------------------------------------------------------------
+
+JIT_BAD = '''
+import jax
+
+@jax.jit
+def step(params, tokens):
+    return params @ tokens
+
+fast = jax.jit(step, static_argnames=("missing",))
+'''
+
+JIT_CLEAN = '''
+import jax
+
+@jax.jit
+def step(params, tokens):
+    return params @ tokens
+
+fast = jax.jit(step, static_argnames=("tokens",))
+'''
+
+
+def test_jit_discipline_unknown_static_argname():
+    checks = _checks(JIT_BAD, SERVING)
+    assert checks == [("jit-discipline", "error")]
+
+
+def test_jit_discipline_clean_twin():
+    assert _checks(JIT_CLEAN, SERVING) == []
+
+
+def test_jit_discipline_out_of_range_argnum():
+    src = '''
+import jax
+
+@jax.jit
+def f(x):
+    return x
+
+g = jax.jit(f, static_argnums=(3,))
+'''
+    checks = _checks(src, SERVING)
+    assert checks == [("jit-discipline", "error")]
+
+
+def test_jit_discipline_captured_mutation():
+    src = '''
+import jax
+
+state = []
+
+@jax.jit
+def f(x):
+    state.append(x)
+    return x
+'''
+    checks = _checks(src, SERVING)
+    assert checks == [("jit-discipline", "error")]
+
+
+def test_jit_discipline_shape_branch_warns():
+    src = '''
+import jax
+
+@jax.jit
+def f(x):
+    if x.shape[0] > 4:
+        return x * 2
+    return x
+'''
+    checks = _checks(src, SERVING)
+    assert checks == [("jit-discipline", "warning")]
+
+
+# ---------------------------------------------------------------------------
+# pallas-invariants
+# ---------------------------------------------------------------------------
+
+PALLAS_BAD_DIVIS = '''
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def run(x):
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((100,), jnp.float32),
+        grid=(7,),
+        out_specs=pl.BlockSpec((16,), lambda i: (i,)),
+    )(x)
+'''
+
+# 112 = 7 * 16: divisible and exactly covered by the grid
+PALLAS_CLEAN = PALLAS_BAD_DIVIS.replace("(100,)", "(112,)")
+
+PALLAS_BAD_ARITY = '''
+from jax.experimental import pallas as pl
+from repro.kernels.compat import PrefetchScalarGridSpec
+
+def run(x, s):
+    gs = PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i, sref: (sref[i],)))
+    return pl.pallas_call(kern, grid_spec=gs, out_shape=o)(s, x)
+'''
+
+PALLAS_CLEAN_ARITY = PALLAS_BAD_ARITY.replace(
+    "lambda i: (i,)", "lambda i, sref: (i,)")
+
+
+def test_pallas_indivisible_block():
+    checks = _checks(PALLAS_BAD_DIVIS, KERNELS)
+    assert checks == [("pallas-invariants", "error")]
+
+
+def test_pallas_clean_twin():
+    assert _checks(PALLAS_CLEAN, KERNELS) == []
+
+
+def test_pallas_prefetch_arity():
+    # in_specs map misses the scalar-ref param: prefetch order shifts
+    checks = _checks(PALLAS_BAD_ARITY, KERNELS)
+    assert checks == [("pallas-invariants", "error")]
+
+
+def test_pallas_clean_prefetch_twin():
+    assert _checks(PALLAS_CLEAN_ARITY, KERNELS) == []
+
+
+def test_pallas_index_map_reads_grid_index():
+    src = PALLAS_CLEAN_ARITY.replace("(sref[i],)", "(i[0],)")
+    checks = _checks(src, KERNELS)
+    assert checks == [("pallas-invariants", "error")]
+
+
+def test_pallas_operand_count():
+    src = PALLAS_CLEAN_ARITY.replace(")(s, x)", ")(x)")
+    checks = _checks(src, KERNELS)
+    assert checks == [("pallas-invariants", "error")]
+
+
+def test_pallas_shimmed_symbol_outside_compat():
+    src = '''
+from jax.experimental.pallas import tpu as pltpu
+
+params = pltpu.CompilerParams(dimension_semantics=("parallel",))
+'''
+    checks = _checks(src, KERNELS)
+    assert checks == [("pallas-invariants", "error")]
+
+
+def test_pallas_not_run_outside_kernels():
+    assert checkers_for(SERVING) and all(
+        c.name != "pallas-invariants" for c in checkers_for(SERVING))
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline
+# ---------------------------------------------------------------------------
+
+DTYPE_BAD = '''
+import jax.numpy as jnp
+
+def matmul_f8(a, b):
+    a8 = a.astype(jnp.float8_e4m3fn)
+    return jnp.einsum("ij,jk->ik", a8, b)
+'''
+
+DTYPE_CLEAN = DTYPE_BAD.replace(
+    'jnp.einsum("ij,jk->ik", a8, b)',
+    'jnp.einsum("ij,jk->ik", a8, b, preferred_element_type=jnp.float32)')
+
+
+def test_dtype_discipline_f8_accumulation():
+    checks = _checks(DTYPE_BAD, "src/repro/sparse/fixture.py")
+    assert checks == [("dtype-discipline", "warning")]
+
+
+def test_dtype_discipline_clean_twin():
+    assert _checks(DTYPE_CLEAN, "src/repro/sparse/fixture.py") == []
+
+
+def test_dtype_discipline_scoped_to_sub_fp32_functions():
+    # plain fp32 einsum: no sub-fp32 dtype in scope, nothing to flag
+    src = '''
+import jax.numpy as jnp
+
+def matmul(a, b):
+    return jnp.einsum("ij,jk->ik", a, b)
+'''
+    assert _checks(src, "src/repro/sparse/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_justified_suppression_silences_finding():
+    src = ALIAS_BAD.replace(
+        "return jnp.asarray(self.seq_lens)",
+        "return jnp.asarray(self.seq_lens)  "
+        "# repro-lint: disable=aliasing-hazard -- harness snapshot, "
+        "no dispatch in flight")
+    checks = _checks(src, SERVING)
+    # the suppressed line is silent; the dispatcher-arg finding remains
+    assert checks == [("aliasing-hazard", "error")]
+
+
+def test_unjustified_suppression_is_an_error():
+    src = ALIAS_BAD.replace(
+        "return jnp.asarray(self.seq_lens)",
+        "return jnp.asarray(self.seq_lens)  "
+        "# repro-lint: disable=aliasing-hazard")
+    checks = _checks(src, SERVING)
+    assert ("unexplained-suppression", "error") in checks
+    # and the suppression still applies — the finding itself is gone
+    assert ("aliasing-hazard", "error") in checks  # dispatcher arg only
+    assert len([c for c, _ in checks if c == "aliasing-hazard"]) == 1
+
+
+def test_parse_error_is_a_finding():
+    checks = _checks("def broken(:\n", SERVING)
+    assert checks == [("parse-error", "error")]
+
+
+# ---------------------------------------------------------------------------
+# the real tree lints clean
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_lints_clean():
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "lint_repro.py"),
+         str(ROOT / "src"), "--strict"],
+        capture_output=True, text=True)
+    assert out.returncode == 0, f"lint found issues:\n{out.stdout}"
+
+
+# ---------------------------------------------------------------------------
+# sanitizer semantics (unit)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def sanitize():
+    sanitizer.enable(True)
+    yield
+    sanitizer.clear_override()
+
+
+def test_guard_is_identity_when_disabled():
+    sanitizer.enable(False)
+    try:
+        a = np.zeros(4, np.int32)
+        assert sanitizer.guard(a, "x") is a
+    finally:
+        sanitizer.clear_override()
+
+
+def test_live_view_then_mutation_raises(sanitize):
+    a = sanitizer.guard(np.zeros(4, np.int32), "cache.seq_lens")
+    a[0] = 1                      # mutation before any view: fine
+    sanitizer.device_view(a)      # zero-copy alias of live memory
+    with pytest.raises(sanitizer.DispatchRaceError, match="cache.seq_lens"):
+        a[1] = 2
+
+
+def test_copy_snapshot_never_aliases(sanitize):
+    a = sanitizer.guard(np.zeros(4, np.int32), "cache.seq_lens")
+    for i in range(4):
+        sanitizer.device_view(a.copy())   # snapshot: guard stripped
+        a[i] = i                          # mutation stays legal
+
+
+def test_slice_view_inherits_guard(sanitize):
+    a = sanitizer.guard(np.zeros((4, 4), np.int32), "cache.page_table")
+    sanitizer.device_view(a[1])           # row view shares memory
+    with pytest.raises(sanitizer.DispatchRaceError, match="page_table"):
+        a[3, 0] = 7                       # any write to the buffer trips
+
+
+def test_fill_trips_guard(sanitize):
+    a = sanitizer.guard(np.zeros(4, np.int32), "buf")
+    sanitizer.device_view(a)
+    with pytest.raises(sanitizer.DispatchRaceError):
+        a.fill(0)
+
+
+def test_release_clears_aliases(sanitize):
+    a = sanitizer.guard(np.zeros(4, np.int32), "buf")
+    sanitizer.device_view(a)
+    sanitizer.release(a)
+    a[0] = 1                              # proven-complete: legal again
+
+
+# ---------------------------------------------------------------------------
+# sanitizer vs the live engine: the PR-4 race, deterministically
+# ---------------------------------------------------------------------------
+
+
+def _tiny_moe():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.models import abstract_params
+    from repro.models import param as pm
+
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(0))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+def _requests(cfg, n=3, seed=7):
+    from repro.serving import Request
+    rs = np.random.RandomState(seed)
+    return [Request(rs.randint(0, cfg.vocab, int(rs.randint(3, 9)))
+                    .astype(np.int32), max_new_tokens=4)
+            for _ in range(n)]
+
+
+def test_sanitized_engine_is_token_identical(moe, sanitize):
+    """A healthy engine under REPRO_SANITIZE=1: no false positives, and
+    the sampled tokens are bit-identical to an unsanitized run."""
+    from repro.serving import ServeEngine
+    cfg, params = moe
+    reqs = _requests(cfg)
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                      prefill_chunk=8, page_size=8)
+    outs = eng.generate(reqs)
+    sanitizer.clear_override()
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                        prefill_chunk=8, page_size=8)
+    ref = plain.generate(_requests(cfg))
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pr4_race_fails_deterministically(moe, sanitize, monkeypatch):
+    """Re-introduce the exact PR-4 bug — ``seq_lens_device`` returning a
+    view of the *live* buffer instead of a ``.copy()`` snapshot — and the
+    sanitizer turns the timing-dependent wrong-token coin flip into a
+    DispatchRaceError on the first post-dispatch mutation, every run."""
+    from repro.serving import PagedKVCache, ServeEngine
+    cfg, params = moe
+    monkeypatch.setattr(
+        PagedKVCache, "seq_lens_device",
+        lambda self: sanitizer.device_view(self.seq_lens))
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                      prefill_chunk=8, page_size=8)
+    with pytest.raises(sanitizer.DispatchRaceError,
+                       match=r"seq_lens"):
+        eng.generate(_requests(cfg))
+
+
+def test_slot_cache_race_also_caught(moe, sanitize, monkeypatch):
+    from repro.serving import ServeEngine
+    from repro.serving.kv_cache import SlotKVCache
+    cfg, params = moe
+    monkeypatch.setattr(
+        SlotKVCache, "seq_lens_device",
+        lambda self: sanitizer.device_view(self.seq_lens))
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                      prefill_chunk=8, kv_layout="slot")
+    with pytest.raises(sanitizer.DispatchRaceError, match=r"seq_lens"):
+        eng.generate(_requests(cfg))

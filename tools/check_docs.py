@@ -21,8 +21,8 @@ ROOT = Path(__file__).resolve().parent.parent
 # the doctests import repro.*; make `python tools/check_docs.py` work
 # without requiring the caller to export PYTHONPATH=src
 sys.path.insert(0, str(ROOT / "src"))
-DOCS = ["README.md", "docs/serving.md", "docs/sparse.md", "ROADMAP.md",
-        "PAPER.md"]
+DOCS = ["README.md", "docs/serving.md", "docs/sparse.md",
+        "docs/analysis.md", "ROADMAP.md", "PAPER.md"]
 
 # [text](target) — excluding images and fenced code spans is overkill for
 # these docs; inline code never contains the ](... sequence we match
@@ -45,6 +45,14 @@ def check_links(md: Path) -> list:
 
 def main() -> int:
     errors = []
+    # a docs/*.md not registered in DOCS is silently unchecked forever —
+    # fail loudly instead so new design notes opt into the link/doctest
+    # checks the moment they land
+    for md in sorted((ROOT / "docs").glob("*.md")):
+        rel = str(md.relative_to(ROOT))
+        if rel not in DOCS:
+            errors.append(f"dangling document: {rel} exists but is not "
+                          f"registered in tools/check_docs.py DOCS")
     for name in DOCS:
         md = ROOT / name
         if not md.exists():

@@ -1,0 +1,80 @@
+"""Repo lint driver (CI `lint` job, `make lint`).
+
+Runs the dispatch-safety checkers from :mod:`repro.analysis` over every
+``.py`` file under the given paths and prints findings as
+``path:line: [severity] check: message`` — one line per finding, sorted,
+greppable, and clickable in most terminals.
+
+Exit status: non-zero when any **error**-severity finding (including
+``unexplained-suppression``) survives; ``--strict`` also fails on
+warnings.  Suppress a finding in source with a justified marker::
+
+    x = jnp.asarray(self.buf)  # repro-lint: disable=aliasing-hazard -- why
+
+A marker without the ``-- why`` tail is itself an error finding that
+cannot be suppressed, so the lint never ships an unexplained exemption.
+
+Run from the repo root: ``python tools/lint_repro.py src/ --strict``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# the checkers live in-repo; make `python tools/lint_repro.py` work
+# without requiring the caller to export PYTHONPATH=src
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import analyze_file, checkers_for  # noqa: E402
+
+
+def iter_python_files(paths):
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+        else:
+            print(f"warning: skipping non-python path {raw}",
+                  file=sys.stderr)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="dispatch-safety lint for the repro serving stack")
+    ap.add_argument("paths", nargs="*", default=["src/"],
+                    help="files or directories to lint (default: src/)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings too, not just errors")
+    ap.add_argument("--check", action="append", default=None,
+                    help="run only the named checker(s); repeatable")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src/"]
+
+    findings = []
+    n_files = 0
+    for py in iter_python_files(paths):
+        checkers = checkers_for(str(py))
+        if args.check is not None:
+            checkers = [c for c in checkers if c.name in args.check]
+        if not checkers:
+            continue
+        n_files += 1
+        findings.extend(analyze_file(str(py), checkers))
+
+    errors = [f for f in findings if f.severity == "error"]
+    warnings = [f for f in findings if f.severity == "warning"]
+    for f in findings:
+        print(f"{f.path}:{f.line}: [{f.severity}] {f.check}: {f.message}")
+    print(f"lint: {n_files} files, {len(errors)} error(s), "
+          f"{len(warnings)} warning(s)")
+    if errors or (args.strict and warnings):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
