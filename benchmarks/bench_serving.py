@@ -24,6 +24,12 @@ Measures, on the mixtral proxy (reduced to CPU scale):
     resident expert-FFN weight bytes, and planned block sparsity per
     layer.  Targets: packed weight bytes <= 0.75x dense, tok/s >= the
     dense-masked engine, outputs bit-identical.
+  * prefix caching (``prefix_cache`` section): a shared 96-token system
+    prompt served cold then repeated — repeat prefill dispatches
+    (asserted 0), first-vs-repeat TTFT against the cache-off engine
+    (target repeat <= 0.3x), hit rate and COW forks — plus paired
+    cache-on/off tok/s on a no-sharing workload (overhead target:
+    median ratio >= 0.97).
 
 Writes every metric to ``BENCH_serving.json`` (uploaded as a CI
 artifact; schema documented in docs/serving.md) so trend reporting has
@@ -357,6 +363,127 @@ def bench_sparse_runtime():
 
 
 # ---------------------------------------------------------------------------
+# prefix caching: shared-system-prompt reuse vs cold re-prefill
+# ---------------------------------------------------------------------------
+
+PFX_PROMPT = 96            # shared system prompt: 6 full 16-token pages
+PFX_NEW = 8
+PFX_REPEATS = 6
+PFX_MAX_LEN = 112
+PFX_BUDGET = 28            # 2 lanes x 7 pages + trie residency, no eviction
+PFX_PAIR_REPS = 3
+
+
+def bench_prefix_cache(params, cfg):
+    """Radix-tree prefix caching (``prefix_cache=True``) measured two
+    ways.  (a) The shared-system-prompt workload it targets: a 96-token
+    prompt served cold, then repeated — every repeat must claim all six
+    pages from the trie and dispatch ZERO prefill chunks (asserted:
+    that's the tentpole property, not a wall clock), with repeat TTFT
+    collapsing from a 6-chunk prefill to one COW fork + one decode
+    dispatch (target <= 0.3x the cache-off repeat TTFT).  (b) Its
+    overhead on a workload with NO sharing — fresh random prompts every
+    wave so the trie never pays off, paired back-to-back cache-on/off
+    runs, median per-pair tok/s ratio (target >= 0.97x: the trie walk,
+    refcounting and eviction churn must cost ~nothing when idle)."""
+    rs = np.random.RandomState(3)
+    sys_prompt = rs.randint(0, cfg.vocab, PFX_PROMPT).astype(np.int32)
+    warm_prompt = rs.randint(0, cfg.vocab, PFX_PROMPT).astype(np.int32)
+
+    def mk(on):
+        return ServeEngine(params, cfg, max_len=PFX_MAX_LEN, max_batch=2,
+                           prefill_chunk=SERVE_CHUNK, page_size=PAGE_SIZE,
+                           page_budget=PFX_BUDGET, prefix_cache=on)
+
+    def ttft_wave(eng, n):
+        eng.reset_stats()
+        p0 = eng.prefill_dispatches
+        outs = [eng.generate([Request(sys_prompt, PFX_NEW)])[0]
+                for _ in range(n)]
+        return outs, eng.latency_stats(), eng.prefill_dispatches - p0
+
+    on, off = mk(True), mk(False)
+    for eng in (on, off):      # compile prefill/decode on a disjoint prompt
+        eng.generate([Request(warm_prompt, PFX_NEW)])
+
+    outs_cold, st_cold, p_cold = ttft_wave(on, 1)
+    on.generate([Request(sys_prompt, PFX_NEW)])   # compiles the COW fork
+    outs_rep, st_rep, p_rep = ttft_wave(on, PFX_REPEATS)
+    outs_off, st_off, p_off = ttft_wave(off, PFX_REPEATS)
+
+    assert p_cold == PFX_PROMPT // SERVE_CHUNK, p_cold
+    assert p_rep == 0, "a fully cached repeat dispatched prefill chunks"
+    assert p_off == PFX_REPEATS * (PFX_PROMPT // SERVE_CHUNK), p_off
+    identical = all(a.shape == b.shape and bool(np.all(a == b))
+                    for a, b in zip(outs_cold * PFX_REPEATS, outs_rep)) \
+        and bool(np.all(outs_cold[0] == outs_off[0]))
+    ttft_ratio = (st_rep["p50_first_token_s"] / st_off["p50_first_token_s"])
+    metrics = {
+        "workload": {"system_prompt_tokens": PFX_PROMPT,
+                     "new_tokens": PFX_NEW, "repeats": PFX_REPEATS,
+                     "page_size": PAGE_SIZE, "prefill_chunk": SERVE_CHUNK},
+        "hit_rate_repeat_wave": st_rep["prefix_hit_rate"],
+        "prefill_dispatches_first": p_cold,
+        "prefill_dispatches_repeat": p_rep,
+        "ttft_first_s": st_cold["p50_first_token_s"],
+        "ttft_repeat_s": st_rep["p50_first_token_s"],
+        "ttft_cache_off_s": st_off["p50_first_token_s"],
+        "ttft_repeat_over_cache_off": ttft_ratio,
+        "claimed_tokens_repeat_wave": st_rep["prefix_claimed_tokens"],
+        "cow_forks": st_rep["cow_forks"],
+        "output_identical_to_cache_off": identical,
+    }
+    emit("serve_prefix_cache_repeat", st_rep["p50_first_token_s"] * 1e6,
+         f"ttft={st_rep['p50_first_token_s'] * 1e3:.1f}ms "
+         f"vs_off={ttft_ratio:.2f}x (target <=0.3) "
+         f"prefill_disp={p_rep} (target 0) "
+         f"hit_rate={st_rep['prefix_hit_rate']:.2f} "
+         f"identical={identical} (target True)")
+
+    # (b) no-sharing overhead: paired waves of fresh random prompts
+    def pair_workload(seed):
+        prs = np.random.RandomState(seed)
+        lens = prs.randint(8, 48, size=N_REQUESTS)
+        news = prs.randint(4, 16, size=N_REQUESTS)
+        return [Request(prs.randint(0, cfg.vocab, l).astype(np.int32),
+                        int(n)) for l, n in zip(lens, news)]
+
+    pair_budget = SERVE_MAX_BATCH * (-(-(47 + 15) // PAGE_SIZE))
+    engines = {
+        name: ServeEngine(params, cfg, max_len=SERVE_MAX_LEN,
+                          max_batch=SERVE_MAX_BATCH,
+                          prefill_chunk=SERVE_CHUNK, page_size=PAGE_SIZE,
+                          page_budget=pair_budget, prefix_cache=on_flag)
+        for name, on_flag in (("on", True), ("off", False))}
+    for eng in engines.values():
+        eng.generate([Request(r.prompt, r.max_new_tokens)
+                      for r in pair_workload(999)])           # compile
+    walls = {name: [] for name in engines}
+    n_tok = {}
+    for rep in range(PFX_PAIR_REPS):
+        reqs = pair_workload(100 + rep)
+        for name, eng in engines.items():
+            t0 = time.monotonic()
+            outs = eng.generate([Request(r.prompt, r.max_new_tokens)
+                                 for r in reqs])
+            walls[name].append(time.monotonic() - t0)
+            n_tok[name] = sum(len(o) for o in outs)
+    pair = sorted(f / n for f, n in zip(walls["off"], walls["on"]))
+    tps_ratio = pair[len(pair) // 2]              # on/off, median pair
+    metrics["paired_no_sharing"] = {
+        "reps": PFX_PAIR_REPS,
+        "tok_per_s_on": n_tok["on"] / min(walls["on"]),
+        "tok_per_s_off": n_tok["off"] / min(walls["off"]),
+        "tok_per_s_on_over_off": tps_ratio,
+        "hit_rate": engines["on"].prefix_cache.hit_rate,
+    }
+    emit("serve_prefix_cache_no_sharing", min(walls["on"]) * 1e6,
+         f"tok/s_ratio={tps_ratio:.2f} (target >=0.97) "
+         f"hit_rate={metrics['paired_no_sharing']['hit_rate']:.2f}")
+    return metrics
+
+
+# ---------------------------------------------------------------------------
 # mixed short/long open-loop workload: blocking vs interleaved schedule
 # ---------------------------------------------------------------------------
 
@@ -486,6 +613,7 @@ def main():
     results["engines"]["paged_stun_pruned_25pct"] = bench_engine(
         params, cfg, expert_mask=mask, tag="paged_stun_pruned_25pct")
     results["sparse_runtime"] = bench_sparse_runtime()
+    results["prefix_cache"] = bench_prefix_cache(params, cfg)
     results["mixed_schedule"] = bench_mixed_schedules(params, cfg)
     results["speculative"] = bench_spec_decode()
 

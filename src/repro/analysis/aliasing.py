@@ -16,7 +16,13 @@ This checker flags, per class:
   * the same attribute returned bare (or via ``np.asarray``) from a
     ``*_device`` view method — the caller will alias it;
   * the same attribute passed raw into a jitted dispatch callable
-    (an attribute assigned ``self._f = jax.jit(...)``).
+    (an attribute assigned ``self._f = jax.jit(...)``);
+  * an element of a mutable **container** attribute (``self.X = {}`` /
+    ``[]`` / ``dict(...)`` / ``list(...)``) — e.g. a per-lane page list
+    or a trie-held page-id list — handed to a device converter or a
+    jitted dispatch without a ``.copy()``: the container's elements
+    outlive the call and later bookkeeping (``release``, eviction,
+    COW forks) mutates them while a dispatch may still read the alias.
 
 The heuristic is syntactic: an expression that *derives* a fresh array
 from the attribute (e.g. ``np.maximum(self.x, 0)``) may be flagged —
@@ -32,6 +38,10 @@ from repro.analysis.core import Checker, Finding, SourceFile, call_name
 # numpy constructors that produce a fresh mutable buffer
 NP_CTORS = {"zeros", "ones", "empty", "full", "arange", "array", "asarray",
             "zeros_like", "ones_like", "empty_like", "full_like"}
+# constructors of mutable containers whose elements may hold host
+# buffers / page-id lists that later bookkeeping mutates in place
+CONTAINER_CTORS = {"dict", "list", "collections.OrderedDict",
+                   "collections.defaultdict", "defaultdict", "OrderedDict"}
 # converters that hand a host buffer to jax (potentially zero-copy)
 DEVICE_CONVERTERS = {"jnp.asarray", "jnp.array", "jax.numpy.asarray",
                      "jax.numpy.array"}
@@ -78,6 +88,28 @@ def _aliased_attr(expr: ast.AST, mutable: Set[str]) -> Optional[str]:
     return None
 
 
+def _is_container_ctor(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Dict, ast.List, ast.ListComp, ast.DictComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return call_name(node) in CONTAINER_CTORS
+    return False
+
+
+def _aliased_container(expr: ast.AST, containers: Set[str]) -> Optional[str]:
+    """Container attr whose *element* ``expr`` aliases sans snapshot —
+    a ``self.X[...]`` subscript or the bare ``self.X``."""
+    if _has_copy(expr):
+        return None
+    for node in ast.walk(expr):
+        attr = node.value if isinstance(node, ast.Subscript) else node
+        if isinstance(attr, ast.Attribute) and \
+                isinstance(attr.value, ast.Name) and \
+                attr.value.id == "self" and attr.attr in containers:
+            return attr.attr
+    return None
+
+
 def _is_device_converter(call: ast.Call) -> bool:
     name = call_name(call)
     if name is None:
@@ -97,51 +129,74 @@ class AliasingHazardChecker(Checker):
 
     # -- per-class analysis ----------------------------------------------
     def _collect(self, cls: ast.ClassDef):
-        """Mutable numpy attrs + jitted dispatch attrs of one class."""
+        """Mutable numpy attrs, container attrs + jitted dispatch attrs
+        of one class (``self.X = ...`` and annotated
+        ``self.X: T = ...`` assignments both count)."""
         mutable: Set[str] = set()
+        containers: Set[str] = set()
         dispatchers: Set[str] = set()
         for node in ast.walk(cls):
-            if not isinstance(node, ast.Assign):
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            else:
                 continue
-            for tgt in node.targets:
+            for tgt in targets:
                 if not (isinstance(tgt, ast.Attribute) and
                         isinstance(tgt.value, ast.Name) and
                         tgt.value.id == "self"):
                     continue
-                value = _unwrap_guard(node.value)
+                value = _unwrap_guard(value)
                 if _is_np_ctor(value):
                     mutable.add(tgt.attr)
+                if _is_container_ctor(value):
+                    containers.add(tgt.attr)
                 if isinstance(value, ast.Call) and \
                         call_name(value) in ("jax.jit", "jit"):
                     dispatchers.add(tgt.attr)
-        return mutable, dispatchers
+        return mutable, containers, dispatchers
 
     def _check_class(self, src: SourceFile,
                      cls: ast.ClassDef) -> Iterator[Finding]:
-        mutable, dispatchers = self._collect(cls)
-        if not mutable:
+        mutable, containers, dispatchers = self._collect(cls)
+        if not mutable and not containers:
             return
         seen = set()
 
-        def emit(node, attr, why):
+        def emit(node, attr, why, kind="numpy"):
             key = (node.lineno, attr)
             if key not in seen:
                 seen.add(key)
-                yield self.finding(
-                    src, node,
-                    f"mutable numpy attribute self.{attr} {why} without a "
-                    f".copy() snapshot — an async dispatch may read the "
-                    f"live buffer after a later mutation (PR-1/PR-4 bug "
-                    f"class)")
+                if kind == "numpy":
+                    msg = (f"mutable numpy attribute self.{attr} {why} "
+                           f"without a .copy() snapshot — an async "
+                           f"dispatch may read the live buffer after a "
+                           f"later mutation (PR-1/PR-4 bug class)")
+                else:
+                    msg = (f"element of mutable container attribute "
+                           f"self.{attr} {why} without a .copy() "
+                           f"snapshot — container-held buffers (per-lane "
+                           f"page lists, trie-held page ids) are mutated "
+                           f"by later bookkeeping while a dispatch may "
+                           f"still read the alias")
+                yield self.finding(src, node, msg)
+
+        def emit_any(node, arg, why):
+            attr = _aliased_attr(arg, mutable)
+            if attr:
+                yield from emit(node, attr, why)
+                return
+            attr = _aliased_container(arg, containers)
+            if attr:
+                yield from emit(node, attr, why, kind="container")
 
         for fn in [n for n in ast.walk(cls)
                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
             for node in ast.walk(fn):
                 if isinstance(node, ast.Call) and _is_device_converter(node):
                     for arg in node.args:
-                        attr = _aliased_attr(arg, mutable)
-                        if attr:
-                            yield from emit(node, attr,
+                        yield from emit_any(node, arg,
                                             "aliased into a device array")
                 elif isinstance(node, ast.Call) and \
                         isinstance(node.func, ast.Attribute) and \
@@ -150,12 +205,10 @@ class AliasingHazardChecker(Checker):
                         node.func.attr in dispatchers:
                     for arg in list(node.args) + \
                             [kw.value for kw in node.keywords]:
-                        attr = _aliased_attr(arg, mutable)
-                        if attr:
-                            yield from emit(
-                                node, attr,
-                                f"passed into jitted dispatch "
-                                f"self.{node.func.attr}")
+                        yield from emit_any(
+                            node, arg,
+                            f"passed into jitted dispatch "
+                            f"self.{node.func.attr}")
                 elif isinstance(node, ast.Return) and \
                         fn.name.endswith("_device") and \
                         node.value is not None and \

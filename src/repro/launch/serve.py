@@ -52,6 +52,17 @@ def main():
                     help="total KV pages; default fits max-batch requests "
                          "of max-len — set lower to pack short requests "
                          "into less HBM")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix caching over the paged KV "
+                         "cache: admissions claim the longest cached "
+                         "page-aligned prompt prefix (a fully cached "
+                         "prompt skips prefill entirely); finished "
+                         "prompts' pages stay resident until LRU "
+                         "eviction reclaims them under page pressure")
+    ap.add_argument("--prefix-cache-max-pages", type=int, default=None,
+                    help="cap trie residency below what page pressure "
+                         "alone would allow (default: unlimited — the "
+                         "page budget is the only bound)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 = softmax sampling")
     ap.add_argument("--eos-id", type=int, default=None)
@@ -130,6 +141,8 @@ def main():
                       page_budget=args.page_budget,
                       schedule=args.schedule,
                       prefill_budget=args.prefill_budget,
+                      prefix_cache=args.prefix_cache,
+                      prefix_cache_max_pages=args.prefix_cache_max_pages,
                       **sparse_kwargs, **spec_kwargs)
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):

@@ -4,6 +4,7 @@ from repro.serving.engine import (  # noqa: F401
     greedy_generate,
 )
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
+from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     Request,
     RequestState,

@@ -30,6 +30,18 @@ block-sparse kernel exploits stage-2 masks.  The engine:
     (`kernels.paged_decode_attention`) on TPU, its jnp gather reference
     elsewhere.  ``kv_layout="slot"`` keeps the PR-1 slot-granular cache —
     the reference the paged path is tested token-identical against.
+  * **prefix caching** (``prefix_cache=True``, paged layout only —
+    `prefix_cache.PrefixCache`) — a radix tree over page-aligned prompt
+    chunks maps cached prefixes to physical page lists; admission claims
+    the longest cached prefix by pointing the new lane's leading page-
+    table entries at shared refcounted pages and starting the resumable
+    prefill cursor at the claimed length.  A fully cached prompt costs
+    **zero** prefill dispatches: the last shared page is forked
+    copy-on-write and the final prompt token is replayed through the
+    ordinary batched decode dispatch.  Finished lanes ``release`` (pages
+    stay resident while cached); LRU eviction reclaims unreferenced
+    cached pages under pool pressure.  Token streams are identical to
+    cache-off serving (oracle-pinned in tests/test_prefix_cache.py).
   * **scheduler** (`scheduler.Scheduler`) — FIFO admission, per-request
     EOS / ``max_new_tokens`` termination (no post-EOS tokens, no decode
     steps burned on finished requests), per-request greedy or temperature
@@ -63,6 +75,7 @@ back to a correct sequential per-request path.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional
 
@@ -75,6 +88,7 @@ from repro.models import (decode_step, decode_step_paged, decode_step_ragged,
                           init_cache, prefill_step, prefill_step_paged)
 from repro.sparse import install_sparse_ffn
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.speculative import SpeculativeDecoder
 
@@ -134,6 +148,13 @@ class ServeEngine:
     optionally forces the execute path ("exact" | "gather" | "pallas" |
     "interpret"; default: kernel on TPU, bit-exact unpack elsewhere).
 
+    ``prefix_cache=True`` (paged layout only) turns on radix-tree KV
+    reuse: admissions claim the longest cached page-aligned prompt
+    prefix (refcounted shared pages, copy-on-write at a shared last
+    page) and prefill only the remainder — zero dispatches for a fully
+    cached prompt.  ``prefix_cache_max_pages`` optionally caps trie
+    residency below what pool pressure alone would enforce.
+
     ``schedule="interleaved"`` (default) meters prefill at
     ``prefill_budget`` prompt tokens per step (rounded down to whole
     ``prefill_chunk`` chunks, min one; default one chunk) so decode lanes
@@ -153,9 +174,21 @@ class ServeEngine:
                  draft_params=None, schedule: str = "interleaved",
                  prefill_budget: Optional[int] = None,
                  sparse_weights: Optional[Dict] = None,
-                 sparse_exec: Optional[str] = None):
+                 sparse_exec: Optional[str] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_max_pages: Optional[int] = None):
         if kv_layout not in ("paged", "slot"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if prefix_cache and kv_layout != "paged":
+            raise ValueError(
+                "prefix_cache requires kv_layout='paged': cached prefixes "
+                "are shared physical pages claimed through page tables")
+        if prefix_cache and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"prefix_cache requires a paged KV cache; "
+                f"family={cfg.family!r} keeps recurrent state instead")
+        if prefix_cache_max_pages is not None and not prefix_cache:
+            raise ValueError("prefix_cache_max_pages without prefix_cache")
         if schedule not in ("interleaved", "blocking"):
             raise ValueError(f"unknown schedule {schedule!r}")
         if prefill_budget is not None and prefill_budget < 1:
@@ -268,6 +301,15 @@ class ServeEngine:
             self._decode_uniform = jax.jit(
                 lambda p, c, t, n: decode_step(p, cfg, c, t, n, mesh=mesh,
                                                expert_mask=em))
+        self.prefix_cache = None
+        if prefix_cache:
+            self.prefix_cache = PrefixCache(
+                self.cache, page_size, max_pages=prefix_cache_max_pages)
+            self.cache.attach_prefix_cache(self.prefix_cache)
+            # partial-hit claims must leave the resumable prefill cursor
+            # both chunk-aligned (so pad rows land on the sentinel, never
+            # past the page table) and page-aligned (whole shared pages)
+            self._claim_grain = math.lcm(self.prefill_chunk, page_size)
         self._spec = (SpeculativeDecoder(cfg, spec_k, mesh=mesh,
                                          draft_expert_mask=draft_em,
                                          donate=donate)
@@ -352,12 +394,18 @@ class ServeEngine:
         (emitted tokens per verify dispatch, summed over the batch — up to
         ``n_active * (spec_k + 1)``), and ``spec_rounds`` /
         ``spec_drafted`` / ``spec_accepted`` / ``spec_emitted``
-        counters."""
+        counters.  The paged gauges also carry the prefix-cache trio
+        ``cache_hit_rate`` / ``shared_pages`` / ``cow_forks``; with
+        ``prefix_cache=True`` the ``prefix_*`` counters (lookups, hits,
+        hit rate, resident cached pages, claimed tokens, token-savings
+        ratio, evicted pages) are merged in as well."""
         stats = self.scheduler.latencies()
         if self.cache is not None:
             stats.update(self.cache.gauges())
         if self._spec is not None:
             stats.update(self._spec.stats.as_dict())
+        if self.prefix_cache is not None:
+            stats.update(self.prefix_cache.stats())
         return stats
 
     def reset_stats(self):
@@ -370,6 +418,8 @@ class ServeEngine:
         self.pages_allocated = 0
         if self._spec is not None:
             self._spec.stats.reset()
+        if self.prefix_cache is not None:
+            self.prefix_cache.reset_stats()   # counters only; trie stays
 
     # ------------------------------------------------------------------
     # continuous-batching loop (attention families)
@@ -400,14 +450,51 @@ class ServeEngine:
         sched, cache = self.scheduler, self.cache
         while sched.has_pending:
             nxt = sched.pending[0]
-            total = len(nxt.req.prompt) + nxt.req.max_new_tokens
-            slot = cache.alloc(total)
+            S = len(nxt.req.prompt)
+            total = S + nxt.req.max_new_tokens
+            cached_len, full_hit = 0, False
+            if self.prefix_cache is not None:
+                cached_len, shared = self.prefix_cache.match(nxt.req.prompt)
+                full_hit = cached_len == S
+                if not full_hit:
+                    # partial hits resume on the chunked-prefill grid:
+                    # claim whole claim-grain units so chunk dispatches
+                    # stay aligned with the cold-path grid
+                    grain = self._claim_grain
+                    cached_len = (cached_len // grain) * grain
+                    shared = shared[: cached_len // cache.page_size]
+                slot = cache.alloc(total, shared_pages=shared,
+                                   fork_last=full_hit)
+            else:
+                slot = cache.alloc(total)
             if slot is None:           # FIFO: wait for pages/lane to free
                 break
             st = sched.admit(slot)
             self.requests_admitted += 1
             if isinstance(cache, PagedKVCache):
                 self.pages_allocated += cache.lifetime_pages(total)
+            if self.prefix_cache is not None:
+                self.prefix_cache.note_claim(cached_len, S)
+            if full_hit:
+                # fully cached prompt — ZERO prefill dispatches: rows
+                # [0, S-1) are shared cached K/V; row S-1 lives in the
+                # COW-forked private last page and is rewritten by
+                # replaying the final prompt token through the next
+                # batched decode dispatch, whose logits yield the first
+                # generated token (numerically the same last-position
+                # logits prefill would have produced)
+                st.prefill_pos = S
+                st.replay_token = int(nxt.req.prompt[S - 1])
+                cache.seq_lens[st.slot] = S - 1
+                sched.activate(st.rid)
+                continue
+            if cached_len:
+                # resume the PR-4 prefill cursor past the claimed prefix;
+                # rows [0, cached_len) already hold valid shared K/V, so
+                # interleaved placeholder writes (at row cached_len, in
+                # the first PRIVATE page) stay off the shared pages
+                st.prefill_pos = cached_len
+                cache.seq_lens[st.slot] = cached_len
             self._begin_prefill(st)
             if self.schedule == "blocking":
                 while st.rid in sched.prefilling:   # run prompt to the end
@@ -426,7 +513,10 @@ class ServeEngine:
         tokens = np.zeros((B, 1), np.int32)
         active = list(sched.active.values())
         for st in active:
-            tokens[st.slot, 0] = st.tokens[-1]
+            # a fully-cached admission has no tokens yet: replay its last
+            # prompt token (first-token logits, zero prefill dispatches)
+            tokens[st.slot, 0] = (st.tokens[-1] if st.tokens
+                                  else st.replay_token)
         if isinstance(cache, PagedKVCache):
             logits, cache.tree = self._decode(self.params, cache.tree,
                                               sanitizer.device_view(tokens),
@@ -443,7 +533,7 @@ class ServeEngine:
         now = time.monotonic()
         for st in active:
             if sched.on_token(st.rid, int(toks[st.slot]), now):
-                cache.free(st.slot)
+                cache.release(st.slot)
 
     def _begin_prefill(self, st):
         """Stage lane ``st.slot`` for chunked prefill of
@@ -497,10 +587,16 @@ class ServeEngine:
         cache.seq_lens[st.slot] = S
         cache.unmark_prefilling(st.slot)
         self.scheduler.activate(st.rid)
+        if self.prefix_cache is not None:
+            # cache the fully prefilled prompt's full pages: their rows
+            # hold final prompt K/V no later write touches (decode,
+            # draft and verify all write at rows >= S)
+            self.prefix_cache.insert(st.req.prompt,
+                                     cache.lane_pages(st.slot))
         last = logits[0, (S - 1) - (n_pad - C)][None]         # [1, Vp]
         tok = np.asarray(self._sample_batch(last, [st]))[0]
         if self.scheduler.on_token(st.rid, int(tok), time.monotonic()):
-            cache.free(st.slot)
+            cache.release(st.slot)
 
     # ------------------------------------------------------------------
     # sampling

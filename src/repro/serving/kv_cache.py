@@ -9,7 +9,8 @@ pack densely into the same pool a few long ones would use, and the pool
 budget (``n_pages``) can be provisioned for the live-token working set
 rather than ``n_slots * max_len`` worst case.
 
-Paged invariants (asserted by tests/test_paged_serving.py):
+Paged invariants (asserted by tests/test_paged_serving.py and
+tests/test_prefix_cache.py):
   * **Page 0 is a sentinel** — never allocated to a request.  Free lanes'
     table rows and table entries past a lane's reservation all point at
     it, so the batched decode step's placeholder writes for idle lanes
@@ -17,16 +18,29 @@ Paged invariants (asserted by tests/test_paged_serving.py):
     attended (length masking).  Allocated pages are therefore never
     dirtied by another lane — the slot layout's "free slots are dirty,
     prefill must rewrite row 0 first" invariant is gone by construction.
-  * **No page is owned by two lanes**: ``alloc`` hands out each non-
-    sentinel page to at most one lane until ``free`` returns it.
+  * **No *writable* page is owned by two lanes**: every page carries a
+    refcount (``refcount(p) == referencing lane tables + prefix-trie
+    entries``), and a page with refcount > 1 is shared *read-only* — it
+    holds a cached prompt prefix whose rows no sharer ever rewrites
+    (decode/draft/verify all write at rows ``>= prompt_len``, and a
+    fully-cached prompt's first decode write goes to a copy-on-write
+    fork of the last shared page).  Without a prefix cache every
+    refcount is 1 and this reduces to the original exclusive-ownership
+    invariant.  ``release`` (né ``free``) decrements; a page returns to
+    the free pool only at refcount 0, so cached pages stay resident
+    after their lane finishes until LRU eviction reclaims them under
+    pool pressure.
   * **Reservation covers the request lifetime**: admission reserves
-    ``ceil((prompt + max_new_tokens + overdraft)/ps)`` pages up front, so
-    a decode step can never run out of pages mid-flight (the engine has
+    ``ceil((prompt + max_new_tokens + overdraft)/ps)`` pages up front
+    (cache-hit admissions point the leading table entries at shared
+    cached pages instead of drawing them from the free pool), so a
+    decode step can never run out of pages mid-flight (the engine has
     no preemption).  ``overdraft`` (speculative decoding: ``spec_k - 1``)
     covers verify-block rows written past the request's own lifetime and
     then rolled back via ``rollback()`` — reserved so block writes land
     in lane-owned pages, never on the shared sentinel.  The admission
-    *gate* is page availability, not lane count alone.
+    *gate* is page availability — free pages plus what prefix-cache
+    eviction could reclaim — not lane count alone.
 
 The device arrays live in ``tree`` and are updated functionally by the
 jitted prefill/decode calls; this class owns the host-side bookkeeping
@@ -41,9 +55,10 @@ slot prefill always rewrites from row 0 before any row is attended.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import sanitizer
@@ -89,8 +104,18 @@ class PagedKVCache:
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() -> 0
         self._free_pages = list(range(self.n_pages - 1, 0, -1))  # never 0
         self._pages_of: Dict[int, List[int]] = {}
+        # refcount per non-free page: referencing lane tables + prefix-
+        # trie entries.  Pages with no entry are in the free pool.
+        self._refs: Dict[int, int] = {}
+        # per lane: leading table entries that point at SHARED cached
+        # pages (read-only for this lane) — gauges + test invariants
+        self._n_shared: Dict[int, int] = {}
         self._prefilling: set = set()    # lanes mid-prefill (gauges)
         self._table_dev = None           # device copy, rebuilt on mutation
+        self._slot_dev: Dict[int, object] = {}   # per-slot device rows
+        self._prefix = None              # attached PrefixCache (optional)
+        self._fork_fn = None             # jitted COW page copy, built lazily
+        self.cow_forks = 0               # copy-on-write forks (gauge)
 
     # ---- lifecycle ------------------------------------------------------
     @property
@@ -119,52 +144,158 @@ class PagedKVCache:
         ``overdraft`` rows."""
         return self.pages_needed(n_tokens + self.overdraft)
 
-    def can_admit(self, n_tokens: int) -> bool:
-        return (bool(self._free_slots)
-                and self.lifetime_pages(n_tokens) <= len(self._free_pages)
+    def can_admit(self, n_tokens: int, n_shared: int = 0) -> bool:
+        """Quick admission gate.  ``n_shared`` leading pages come from the
+        prefix cache instead of the free pool; headroom counts free pages
+        plus what prefix-cache eviction could reclaim.  Slightly
+        optimistic under sharing (a matched page can itself be the
+        eviction headroom) — ``alloc`` re-checks authoritatively and
+        returns None on a genuine shortfall."""
+        fresh = self.lifetime_pages(n_tokens) - n_shared
+        avail = len(self._free_pages) + self.evictable_pages
+        return (bool(self._free_slots) and fresh <= avail
                 and n_tokens + self.overdraft <= self.max_len)
 
-    def alloc(self, n_tokens: int) -> Optional[int]:
+    def alloc(self, n_tokens: int, shared_pages: Sequence[int] = (),
+              fork_last: bool = False) -> Optional[int]:
         """Claim a free lane plus pages for ``n_tokens`` lifetime rows.
 
-        Reserves ``lifetime_pages(n_tokens)`` pages (the overdraft rows
-        for speculative block writes are part of the reservation) and
-        points the lane's page-table row at them, sentinel tail beyond.
-        Returns the lane index, or None when lanes or pages are short —
-        never raises; admission simply waits.  The caller prefills the
-        lane next; until then ``seq_lens[slot]`` stays 0."""
+        The lane's leading table entries point at ``shared_pages`` (a
+        cached prefix from the prefix trie — refcounts bumped, rows
+        read-only for this lane); the remaining
+        ``lifetime_pages(n_tokens) - len(shared_pages)`` come from the
+        free pool, evicting LRU cached pages if the pool runs short.
+        ``fork_last`` copies the last shared page into a private one
+        before installing it (copy-on-write: a fully cached prompt's
+        first decode write lands at row ``prompt_len - 1``, inside that
+        page).  Returns the lane index, or None when lanes or pages are
+        short — never raises; admission simply waits.  The caller sets
+        ``seq_lens[slot]`` to the claimed prefix length next (0 for a
+        cold admission) — until then idle-lane placeholder writes would
+        land at row 0, which on a cache hit is shared."""
         need = self.lifetime_pages(n_tokens)
-        if not self.can_admit(n_tokens):
+        shared = [int(p) for p in shared_pages]
+        assert len(shared) <= need and (not fork_last or shared)
+        n_borrowed = len(shared) - (1 if fork_last else 0)
+        if not self.can_admit(n_tokens, n_shared=n_borrowed):
             return None
         slot = self._free_slots.pop()
-        pages = [self._free_pages.pop() for _ in range(need)]
+        # retain the claim FIRST: refcount >= 2 pages are never eviction
+        # candidates, so the eviction pass below can't reclaim them
+        for p in shared:
+            self.retain_page(p)
+        fresh_need = need - n_borrowed
+        if fresh_need > len(self._free_pages) and self._prefix is not None:
+            self._prefix.evict(fresh_need - len(self._free_pages))
+        if fresh_need > len(self._free_pages):   # eviction came up short
+            for p in shared:
+                self.release_page(p)    # never frees: trie still holds 1
+            self._free_slots.append(slot)
+            return None
+        pages = shared
+        if fork_last:
+            src = pages[-1]
+            dst = self._free_pages.pop()
+            self._refs[dst] = 1
+            self._fork_page(src, dst)
+            pages[-1] = dst
+            self.release_page(src)      # drop our claim; trie keeps it
+            self.cow_forks += 1
+        while len(pages) < need:
+            p = self._free_pages.pop()
+            self._refs[p] = 1
+            pages.append(p)
         self._pages_of[slot] = pages
+        self._n_shared[slot] = n_borrowed
         self.page_table[slot] = 0                     # sentinel tail
         self.page_table[slot, :need] = pages
-        self._table_dev = None
+        self._invalidate_table(slot)
         return slot
 
-    def free(self, slot: int):
-        """Return a finished request's lane and pages to the pools.
+    def release(self, slot: int):
+        """Release a finished request's lane and page references.
 
         Resets the lane's table row to the sentinel and its ``seq_lens``
-        to 0.  Asserts the lane is currently allocated (double-free is a
+        to 0, and decrements each page's refcount — pages also held by
+        the prefix trie stay resident; the rest return to the free pool.
+        Asserts the lane is currently allocated (double-release is a
         bookkeeping bug, not a recoverable condition).  Freed pages are
         NOT zeroed — the sentinel-tail table row keeps them unattendable
         until re-allocated, and prefill/decode rewrite rows before any
         query can see them."""
         assert 0 <= slot < self.n_slots and slot in self._pages_of, slot
-        self._free_pages.extend(reversed(self._pages_of.pop(slot)))
+        for p in reversed(self._pages_of.pop(slot)):
+            self.release_page(p)
+        self._n_shared.pop(slot, None)
         self.page_table[slot] = 0
         self.seq_lens[slot] = 0
         self._prefilling.discard(slot)
         self._free_slots.append(slot)
+        self._invalidate_table(slot)
+
+    # ---- page refcounts (lane tables + prefix-trie entries) -------------
+    def retain_page(self, page: int):
+        """Add one reference to a non-free page (lane claim or trie
+        insert)."""
+        assert page != 0, "sentinel page is never referenced"
+        self._refs[page] = self._refs.get(page, 0) + 1
+
+    def release_page(self, page: int):
+        """Drop one reference; at refcount 0 the page rejoins the free
+        pool."""
+        n = self._refs.get(page, 0)
+        assert page != 0 and n > 0, (page, n)
+        if n == 1:
+            del self._refs[page]
+            self._free_pages.append(page)
+        else:
+            self._refs[page] = n - 1
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def attach_prefix_cache(self, prefix_cache):
+        """Wire a ``PrefixCache`` in as the eviction source: when
+        ``alloc`` runs out of free pages it asks the trie to reclaim
+        LRU refcount-1 pages, and admission headroom counts them."""
+        self._prefix = prefix_cache
+
+    @property
+    def evictable_pages(self) -> int:
+        return 0 if self._prefix is None else self._prefix.evictable_pages()
+
+    def lane_pages(self, slot: int) -> List[int]:
+        """Snapshot of a lane's page list (e.g. for trie insertion)."""
+        return list(self._pages_of[slot])
+
+    def lane_shared(self, slot: int) -> int:
+        """Leading pages of ``slot`` that are shared cached-prefix pages
+        (read-only for this lane)."""
+        return self._n_shared.get(slot, 0)
+
+    def _fork_page(self, src: int, dst: int):
+        """Device-side copy-on-write: duplicate page ``src``'s K/V rows
+        into ``dst`` across every layer pool."""
+        if self._fork_fn is None:
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._fork_fn = jax.jit(
+                lambda tr, s, d: jax.tree.map(
+                    lambda x: x.at[:, d].set(x[:, s]), tr),
+                donate_argnums=donate)
+        self.tree = self._fork_fn(self.tree, jnp.int32(src), jnp.int32(dst))
+
+    def _invalidate_table(self, slot: Optional[int] = None):
+        """A page-table mutation stales the cached device snapshots."""
         self._table_dev = None
+        if slot is None:
+            self._slot_dev.clear()
+        else:
+            self._slot_dev.pop(slot, None)
 
     def mark_prefilling(self, slot: int):
         """Flag an allocated lane as mid-prefill — its reservation shows
         up in the ``prefill_pages_in_use`` / ``lanes_prefilling`` gauges
-        until ``unmark_prefilling`` (or ``free``)."""
+        until ``unmark_prefilling`` (or ``release``)."""
         assert slot in self._pages_of, slot
         self._prefilling.add(slot)
 
@@ -211,11 +342,17 @@ class PagedKVCache:
         return sanitizer.device_view(self.seq_lens.copy())
 
     def page_table_device(self, slot: Optional[int] = None):
+        # the table only mutates at admission/release (which invalidate
+        # via _invalidate_table), so both the whole-table decode view and
+        # the per-slot prefill rows are cached instead of re-snapshotted
+        # every call (the .copy() snapshots are private to jax — see
+        # seq_lens_device for the aliasing rationale)
         if slot is not None:
-            return sanitizer.device_view(self.page_table[slot].copy())
-        # the table only mutates at admission/free, so the decode loop's
-        # per-step copy is cached (the .copy() snapshot is private to
-        # jax — see seq_lens_device for the aliasing rationale)
+            dev = self._slot_dev.get(slot)
+            if dev is None:
+                dev = sanitizer.device_view(self.page_table[slot].copy())
+                self._slot_dev[slot] = dev
+            return dev
         if self._table_dev is None:
             self._table_dev = sanitizer.device_view(self.page_table.copy())
         return self._table_dev
@@ -223,22 +360,34 @@ class PagedKVCache:
     # ---- gauges ---------------------------------------------------------
     def gauges(self) -> Dict[str, float]:
         """Cache-utilization gauges: page occupancy, internal
-        fragmentation (reserved-but-unwritten rows / reserved rows), and
+        fragmentation (reserved-but-unwritten rows / reserved rows),
         in-flight prefill — pages reserved by lanes whose prompt is still
         being chunk-prefilled under the interleaved schedule (these pages
-        are committed but not yet earning decode tokens)."""
+        are committed but not yet earning decode tokens) — and prefix-
+        cache sharing: ``cache_hit_rate`` (admissions that claimed cached
+        pages; 0.0 with no prefix cache attached), ``shared_pages``
+        (pages referenced more than once), ``cow_forks`` (cumulative
+        copy-on-write page copies).  A degenerate ``page_budget=0`` cache
+        reports 0.0 utilization rather than dividing by zero."""
         used_rows = int(self.seq_lens.sum())
         reserved_rows = self.pages_in_use * self.page_size
         frag = 0.0 if reserved_rows == 0 else 1.0 - used_rows / reserved_rows
         prefill_pages = sum(len(self._pages_of[s]) for s in self._prefilling
                             if s in self._pages_of)
+        util = (0.0 if self.page_budget == 0
+                else self.pages_in_use / self.page_budget)
+        hit_rate = 0.0 if self._prefix is None else self._prefix.hit_rate
         return {
             "pages_in_use": float(self.pages_in_use),
             "pages_total": float(self.page_budget),
-            "page_utilization": self.pages_in_use / self.page_budget,
+            "page_utilization": util,
             "kv_fragmentation": frag,
             "lanes_prefilling": float(len(self._prefilling)),
             "prefill_pages_in_use": float(prefill_pages),
+            "cache_hit_rate": hit_rate,
+            "shared_pages": float(sum(1 for n in self._refs.values()
+                                      if n > 1)),
+            "cow_forks": float(self.cow_forks),
         }
 
     def bytes_resident(self) -> int:
@@ -280,7 +429,7 @@ class SlotKVCache:
             return None
         return self._free.pop()
 
-    def free(self, slot: int):
+    def release(self, slot: int):
         """Return a finished request's slot to the pool."""
         assert 0 <= slot < self.n_slots and slot not in self._free, slot
         self.seq_lens[slot] = 0
@@ -289,7 +438,7 @@ class SlotKVCache:
 
     def mark_prefilling(self, slot: int):
         """Flag an allocated lane as mid-prefill (``lanes_prefilling``
-        gauge) until ``unmark_prefilling`` (or ``free``)."""
+        gauge) until ``unmark_prefilling`` (or ``release``)."""
         assert slot not in self._free, slot
         self._prefilling.add(slot)
 

@@ -1,0 +1,246 @@
+"""Radix-tree prefix cache: KV reuse across requests on the paged cache.
+
+Production traffic shares prompt prefixes — system prompts, few-shot
+preambles — across nearly every request, yet a cold-cache engine
+re-prefills them from token 0 every time.  The paged KV layout makes
+reuse almost free: a cached prefix is just a list of physical pages that
+a new lane's page table can point at.  This module owns the host-side
+index that makes that safe:
+
+  * **Trie keyed on page-aligned token chunks.**  Each node holds exactly
+    one ``page_size``-token chunk (a tuple of ints) and the physical page
+    whose rows hold that chunk's K/V.  A root-to-node path spells out a
+    page-aligned prompt prefix; children are keyed by the next chunk.
+    Only *full* pages are ever cached — a prompt's trailing partial page
+    stays private to its lane (its rows get overwritten by decode).
+  * **Refcounts instead of free-on-finish.**  Every cached node retains
+    its page in the pool (``pool.retain_page``), so a finished lane's
+    ``release`` only decrements — pages stay resident while cached, and
+    ``refcount(p) == referencing lane tables + trie entries`` is the
+    invariant the stress tests assert.
+  * **LRU eviction under pool pressure.**  ``evict(n)`` reclaims
+    least-recently-touched leaves whose page refcount is 1 (trie-only —
+    no lane references them).  Leaf-first order keeps the trie
+    prefix-closed; because a lane that claims a path holds *every* page
+    on it, a refcount-1 node's whole subtree is refcount-1, so
+    ``evictable_pages()`` (the admission headroom the pool adds to its
+    free count) is exact, not an estimate.
+
+Insertion happens when a lane finishes prefilling (its full-page chunks
+then hold final prompt K/V that no later write touches: decode, draft and
+verify all write at rows ``>= prompt_len``).  Matching happens at
+admission; the engine rounds a partial match down to its prefill-chunk
+grid and starts the resumable prefill cursor at the claimed length.  A
+*fully* cached prompt skips prefill entirely — the engine forks the last
+page copy-on-write (the first decode write lands at row ``S-1`` inside
+it) and replays the final prompt token through the ordinary batched
+decode dispatch, so repeat requests cost **zero** prefill dispatches.
+
+The pool is duck-typed (``retain_page`` / ``release_page`` /
+``refcount``), so the trie's bookkeeping is unit-testable without an
+engine or device arrays; ``PagedKVCache`` is the production pool.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    """One cached page: ``chunk`` (page_size-token tuple) -> ``page``."""
+    __slots__ = ("chunk", "page", "parent", "children", "tick")
+
+    def __init__(self, chunk, page, parent):
+        self.chunk = chunk
+        self.page = page
+        self.parent = parent                    # None for root children
+        self.children: Dict[tuple, "_Node"] = {}
+        self.tick = 0                           # LRU: last match/insert touch
+
+
+class PrefixCache:
+    """Trie over page-aligned prompt chunks -> physical page lists.
+
+    ``pool`` must provide ``retain_page(p)`` / ``release_page(p)`` /
+    ``refcount(p)``; ``max_pages`` optionally caps trie residency (LRU
+    trimmed after inserts) below what pool pressure alone would allow.
+    """
+
+    def __init__(self, pool, page_size: int, max_pages: Optional[int] = None):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if max_pages is not None and max_pages < 0:
+            raise ValueError("max_pages must be >= 0")
+        self.pool = pool
+        self.page_size = page_size
+        self.max_pages = max_pages
+        self._children: Dict[tuple, _Node] = {}   # root level
+        self._tick = 0
+        self.n_nodes = 0
+        # counters (engine latency_stats / kv gauges pull from these)
+        self.lookups = 0            # admissions that consulted the trie
+        self.hits = 0               # admissions that claimed >= 1 page
+        self.claimed_tokens = 0     # prompt tokens served from cache
+        self.prompt_tokens = 0      # prompt tokens over all admissions
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    # ---- chunking --------------------------------------------------------
+    def _chunks(self, tokens) -> List[tuple]:
+        """Full ``page_size``-token chunks of a prompt, as int tuples."""
+        ps = self.page_size
+        return [tuple(int(t) for t in tokens[i: i + ps])
+                for i in range(0, (len(tokens) // ps) * ps, ps)]
+
+    # ---- lookup / claim --------------------------------------------------
+    def match(self, tokens) -> Tuple[int, List[int]]:
+        """Longest cached page-aligned prefix of ``tokens``.
+
+        Returns ``(cached_len, pages)`` — ``cached_len`` is a multiple of
+        ``page_size`` (0 on a miss) and ``pages`` the physical pages
+        holding those rows, in order.  Touches matched nodes for LRU but
+        takes no references; the caller claims the pages (bumping
+        refcounts) via the pool's ``alloc(..., shared_pages=pages)``, and
+        may round the claim down (e.g. to its prefill-chunk grid) by
+        truncating the list."""
+        self._tick += 1
+        pages: List[int] = []
+        level = self._children
+        for chunk in self._chunks(tokens):
+            node = level.get(chunk)
+            if node is None:
+                break
+            node.tick = self._tick
+            pages.append(node.page)
+            level = node.children
+        return len(pages) * self.page_size, pages
+
+    def note_claim(self, cached_len: int, prompt_len: int):
+        """Hit/miss accounting for one successful admission (kept apart
+        from ``match`` so failed admissions that retry don't double
+        count)."""
+        self.lookups += 1
+        self.hits += cached_len > 0
+        self.claimed_tokens += cached_len
+        self.prompt_tokens += prompt_len
+
+    # ---- insertion -------------------------------------------------------
+    def insert(self, tokens, pages: Sequence[int]) -> int:
+        """Cache a fully prefilled prompt's full-page chunks.
+
+        ``pages`` is the owning lane's page list (only the first
+        ``len(tokens) // page_size`` entries are used).  Existing nodes
+        are touched, not replaced — concurrent identical prompts keep the
+        first-cached pages and the latecomer's stay private.  Each new
+        node retains its page, so the pages outlive the lane.  Returns
+        the number of pages newly cached; afterwards an LRU trim enforces
+        ``max_pages`` (never evicting lane-referenced pages)."""
+        self._tick += 1
+        added = 0
+        level, parent = self._children, None
+        for i, chunk in enumerate(self._chunks(tokens)):
+            node = level.get(chunk)
+            if node is None:
+                node = _Node(chunk, int(pages[i]), parent)
+                self.pool.retain_page(node.page)
+                level[chunk] = node
+                self.n_nodes += 1
+                added += 1
+            node.tick = self._tick
+            level, parent = node.children, node
+        self.inserted_pages += added
+        if self.max_pages is not None and self.n_nodes > self.max_pages:
+            self.evict(self.n_nodes - self.max_pages)
+        return added
+
+    # ---- eviction --------------------------------------------------------
+    def _evictable_leaves(self) -> List[_Node]:
+        out = []
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            elif self.pool.refcount(node.page) == 1:
+                out.append(node)
+        return out
+
+    def evict(self, n_pages: int) -> int:
+        """Reclaim up to ``n_pages`` cached pages, LRU leaf-first.
+
+        Only nodes whose page refcount is 1 (trie-only — no lane table
+        references it) are candidates, so eviction can never free a page
+        out from under a live dispatch.  Evicting a leaf may expose its
+        parent as the next candidate.  Returns the number reclaimed."""
+        done = 0
+        leaves = self._evictable_leaves()
+        leaves.sort(key=lambda nd: nd.tick)     # oldest first
+        while done < n_pages and leaves:
+            node = leaves.pop(0)
+            siblings = (node.parent.children if node.parent is not None
+                        else self._children)
+            del siblings[node.chunk]
+            self.pool.release_page(node.page)   # refcount 1 -> 0: freed
+            self.n_nodes -= 1
+            self.evicted_pages += 1
+            done += 1
+            parent = node.parent
+            if parent is not None and not parent.children and \
+                    self.pool.refcount(parent.page) == 1:
+                # newly exposed leaf: insert at its LRU position (its
+                # tick is >= its children's — every touch walks the
+                # path — but other leaves may still be newer)
+                i = 0
+                while i < len(leaves) and leaves[i].tick <= parent.tick:
+                    i += 1
+                leaves.insert(i, parent)
+        return done
+
+    def evictable_pages(self) -> int:
+        """Pages eviction could reclaim right now.  Exact: a lane that
+        references a node references its whole root path, so every
+        descendant of a refcount-1 node is itself refcount-1 and the
+        subtree drains leaf-first."""
+        count = 0
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            count += self.pool.refcount(node.page) == 1
+        return count
+
+    # ---- observability ---------------------------------------------------
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        """Merged into ``ServeEngine.latency_stats()`` (all float)."""
+        saved = (self.claimed_tokens / self.prompt_tokens
+                 if self.prompt_tokens else 0.0)
+        return {
+            "prefix_lookups": float(self.lookups),
+            "prefix_hits": float(self.hits),
+            "prefix_hit_rate": self.hit_rate,
+            "prefix_cached_pages": float(self.n_nodes),
+            "prefix_claimed_tokens": float(self.claimed_tokens),
+            "prefix_token_savings": saved,
+            "prefix_evicted_pages": float(self.evicted_pages),
+        }
+
+    def reset_stats(self):
+        """Clear counters (trie contents stay — e.g. between bench
+        waves)."""
+        self.lookups = self.hits = 0
+        self.claimed_tokens = self.prompt_tokens = 0
+        self.inserted_pages = self.evicted_pages = 0
+
+    # ---- introspection (tests) ------------------------------------------
+    def pages(self) -> List[int]:
+        """All pages the trie currently retains (one per node)."""
+        out = []
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            out.append(node.page)
+        return out

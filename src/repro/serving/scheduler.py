@@ -10,7 +10,11 @@ Requests move through three stages:
     can spread one prompt's chunks across many steps — the interleaved
     schedule packs at most ``prefill_budget`` prompt tokens per step next
     to the decode dispatch instead of running a whole prompt to
-    completion while decode lanes stall.
+    completion while decode lanes stall.  A prefix-cache hit starts the
+    cursor at the claimed cached length instead of 0; a *fully* cached
+    prompt skips this stage entirely (``admit`` then ``activate`` in the
+    same engine step, with ``RequestState.replay_token`` carrying the
+    last prompt token into the first decode dispatch).
   * **active** — prefill complete (first token sampled); streams tokens
     until *its own* termination condition — EOS or ``max_new_tokens`` —
     and releases the lane immediately, so a long request never makes
@@ -61,9 +65,13 @@ class RequestState:
     tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     # resumable prefill cursor: prompt (+ chunk padding) tokens already
-    # dispatched; always a multiple of the engine's prefill_chunk while
-    # the request is mid-prefill
+    # dispatched OR claimed from the prefix cache; always a multiple of
+    # the engine's prefill_chunk while the request is mid-prefill
     prefill_pos: int = 0
+    # fully-cached prompt (zero prefill dispatches): the last prompt
+    # token, replayed through the first batched decode dispatch to
+    # produce first-token logits; None for every other request
+    replay_token: Optional[int] = None
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_last_token: Optional[float] = None

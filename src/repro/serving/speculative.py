@@ -135,7 +135,10 @@ class SpeculativeDecoder:
         B = cache.n_slots
         last = np.zeros((B, 1), np.int32)
         for st in active:
-            last[st.slot, 0] = st.tokens[-1]
+            # a fully-cached (prefix-cache) admission has no tokens yet:
+            # replay its last prompt token as the block anchor
+            last[st.slot, 0] = (st.tokens[-1] if st.tokens
+                                else st.replay_token)
         last_dev = sanitizer.device_view(last)
         seq = cache.seq_lens_device()
         tbl = cache.page_table_device()
@@ -166,6 +169,6 @@ class SpeculativeDecoder:
             consumed, finished = sched.on_tokens(st.rid, emit, now)
             self.stats.emitted += consumed
             if finished:
-                cache.free(b)
+                cache.release(b)
             else:
                 cache.rollback(b, n0 + consumed)

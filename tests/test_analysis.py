@@ -103,6 +103,40 @@ class Cache:
     assert checks == [("aliasing-hazard", "error")]
 
 
+CONTAINER_BAD = '''
+import numpy as np
+import jax.numpy as jnp
+
+class Cache:
+    def __init__(self):
+        self._pages_of = {}
+        self._trie_pages: list = []
+        self._decode = jax.jit(step)
+
+    def table_row(self, slot):
+        return jnp.asarray(self._pages_of[slot])
+
+    def dispatch(self, params):
+        return self._decode(params, self._trie_pages[0])
+'''
+
+CONTAINER_CLEAN = CONTAINER_BAD.replace(
+    "self._pages_of[slot])", "self._pages_of[slot].copy())").replace(
+    "self._trie_pages[0])", "self._trie_pages[0].copy())")
+
+
+def test_aliasing_hazard_flags_container_elements():
+    """Trie-held / dict-held page lists handed to device conversions or
+    jitted dispatches need the same .copy() discipline as seq_lens —
+    both the dict-literal and annotated list-attr forms are caught."""
+    checks = _checks(CONTAINER_BAD, SERVING)
+    assert checks == [("aliasing-hazard", "error")] * 2
+
+
+def test_aliasing_hazard_container_clean_twin():
+    assert _checks(CONTAINER_CLEAN, SERVING) == []
+
+
 # ---------------------------------------------------------------------------
 # jit-discipline
 # ---------------------------------------------------------------------------

@@ -84,7 +84,7 @@ def test_page_table_invariants_random_lifecycle(moe):
     for step in range(400):
         if live and (rs.rand() < 0.45 or len(live) == 4):
             slot = rs.choice(sorted(live))
-            cache.free(slot)
+            cache.release(slot)
             del live[slot]
         else:
             n_tok = int(rs.randint(1, 65))
@@ -97,7 +97,7 @@ def test_page_table_invariants_random_lifecycle(moe):
             cache.seq_lens[slot] = rs.randint(1, n_tok + 1)
         _check_invariants(cache)
     for slot in list(live):
-        cache.free(slot)
+        cache.release(slot)
     _check_invariants(cache)
     assert cache.free_pages == cache.page_budget
     assert cache.n_free == cache.n_slots
@@ -112,7 +112,7 @@ def test_alloc_rejects_when_pages_short(moe):
     assert cache.alloc(9) is None         # needs 2, only 1 free
     b = cache.alloc(8)                    # exactly 1 page
     assert b is not None and cache.free_pages == 0
-    cache.free(a)
+    cache.release(a)
     assert cache.free_pages == 5 and cache.alloc(33) is not None
 
 

@@ -1,0 +1,615 @@
+"""Prefix caching: radix-tree KV reuse on the paged cache.
+
+Three layers of coverage for ``serving/prefix_cache.py`` + the
+``PagedKVCache`` refcount/COW machinery behind it:
+
+  * **Trie units** on a fake pool — longest page-aligned prefix match,
+    refcount lifecycle, LRU eviction order (leaf-first, lane-referenced
+    pages skipped), the ``max_pages`` cap — no engine, no device arrays.
+  * **Pool units** on a real ``PagedKVCache`` — copy-on-write fork
+    bookkeeping (the fork is private: never in the trie, invisible to
+    sibling lanes), eviction under pool pressure, the shortfall rollback
+    path, per-slot device-snapshot caching, and the degenerate
+    ``page_budget=0`` gauges.
+  * **Engine oracle + stress** — prefix-cache-on output streams must be
+    token-identical to cache-off across {blocking, interleaved} × spec
+    on/off × expert/weight masks on randomized shared-prefix workloads
+    (including a warm second wave, where full hits take the zero-prefill
+    replay path); a discrimination test proves a repeat prompt costs
+    ZERO prefill dispatches while the cache-off twin re-prefills; and a
+    randomized stress driver asserts the refcount invariant
+    (``refcount(p) == referencing lane tables + trie entries``) after
+    every step, under the dispatch-race sanitizer.
+
+The stock ``test_paged_serving._check_invariants`` is deliberately NOT
+used here: its "no page owned by two lanes" assertion is exactly what
+prefix sharing relaxes.  ``_check_prefix_invariants`` below is the
+sharing-aware replacement (and is strictly stronger on refcounts).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import PagedKVCache, PrefixCache, Request, ServeEngine
+
+
+def _tiny_moe(n_experts=8, top_k=2, seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2,
+                  n_experts=n_experts, top_k=top_k)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+@pytest.fixture
+def sanitized():
+    """Run a test under the dispatch-race sanitizer (REPRO_SANITIZE=1
+    equivalent): zero-copy aliasing of a guarded buffer into a device
+    view + a later mutation becomes a deterministic error."""
+    sanitizer.enable(True)
+    try:
+        yield
+    finally:
+        sanitizer.clear_override()
+
+
+# ---------------------------------------------------------------------------
+# trie units (fake pool — no engine, no device arrays)
+# ---------------------------------------------------------------------------
+
+
+class FakePool:
+    """Duck-typed pool: refcounts + a log of pages freed (refcount 0)."""
+
+    def __init__(self):
+        self.refs = {}
+        self.freed = []
+
+    def retain_page(self, p):
+        self.refs[p] = self.refs.get(p, 0) + 1
+
+    def release_page(self, p):
+        n = self.refs[p]
+        if n == 1:
+            del self.refs[p]
+            self.freed.append(p)
+        else:
+            self.refs[p] = n - 1
+
+
+    def refcount(self, p):
+        return self.refs.get(p, 0)
+
+
+def _toks(*ints):
+    return np.asarray(ints, np.int32)
+
+
+def test_match_longest_page_aligned_prefix():
+    pool = FakePool()
+    pc = PrefixCache(pool, page_size=4)
+    prompt = _toks(1, 2, 3, 4, 5, 6, 7, 8, 9, 10)   # 2 full pages + 2 tail
+    assert pc.insert(prompt, pages=[11, 12]) == 2   # tail page never cached
+    assert pc.n_nodes == 2
+
+    # full prompt: both pages; the partial tail is not matchable
+    assert pc.match(prompt) == (8, [11, 12])
+    # 6 tokens: only the first full page
+    assert pc.match(prompt[:6]) == (4, [11])
+    # divergence inside the second chunk: first page only
+    assert pc.match(_toks(1, 2, 3, 4, 5, 6, 99, 8)) == (4, [11])
+    # divergence inside the first chunk: miss
+    assert pc.match(_toks(9, 2, 3, 4)) == (0, [])
+    # longer prompt sharing the cached prefix: same two pages
+    longer = np.concatenate([prompt[:8], _toks(20, 21, 22, 23)])
+    assert pc.match(longer) == (8, [11, 12])
+    # sub-page prompts can never match
+    assert pc.match(_toks(1, 2, 3)) == (0, [])
+
+
+def test_insert_refcount_lifecycle_and_idempotence():
+    pool = FakePool()
+    pc = PrefixCache(pool, page_size=2)
+    a = _toks(1, 2, 3, 4)
+    assert pc.insert(a, pages=[5, 6]) == 2
+    assert pool.refcount(5) == 1 and pool.refcount(6) == 1
+
+    # re-inserting the same prompt (a concurrent identical admission)
+    # touches, never replaces: the latecomer's pages stay private
+    assert pc.insert(a, pages=[7, 8]) == 0
+    assert pc.match(a) == (4, [5, 6])
+    assert pool.refcount(7) == 0 and pool.refcount(8) == 0
+
+    # extending the prompt adds only the new suffix nodes
+    ab = _toks(1, 2, 3, 4, 9, 10)
+    assert pc.insert(ab, pages=[5, 6, 11]) == 1
+    assert pc.match(ab) == (6, [5, 6, 11])
+    assert pc.n_nodes == 3 and pool.refcount(11) == 1
+
+    # eviction releases trie references; refcount 0 pages are freed
+    assert pc.evict(3) == 3
+    assert pc.n_nodes == 0 and pool.refs == {}
+    assert sorted(pool.freed) == [5, 6, 11]
+    assert pc.match(a) == (0, [])
+
+
+def test_lru_eviction_order_follows_touches():
+    pool = FakePool()
+    pc = PrefixCache(pool, page_size=2)
+    pc.insert(_toks(1, 1), pages=[3])       # A (oldest)
+    pc.insert(_toks(2, 2), pages=[4])       # B
+    pc.insert(_toks(5, 5), pages=[6])       # C (newest)
+    pc.match(_toks(1, 1))                   # touch A: now B is LRU
+    assert pc.evict(2) == 2
+    assert pool.freed == [4, 6]             # B then C, never A
+    assert pc.match(_toks(1, 1)) == (2, [3])
+    assert pc.evictable_pages() == 1
+
+
+def test_eviction_is_leaf_first_and_skips_lane_referenced_pages():
+    pool = FakePool()
+    pc = PrefixCache(pool, page_size=2)
+    pc.insert(_toks(1, 2, 3, 4, 5, 6), pages=[7, 8, 9])   # chain 7 -> 8 -> 9
+
+    # a lane claiming a cached path retains EVERY page on it (exactly
+    # what PagedKVCache.alloc does with shared_pages) — that upward
+    # closure is what makes evictable_pages() exact
+    for p in (7, 8, 9):
+        pool.retain_page(p)
+    # every node is pinned at refcount 2: nothing is evictable — pool
+    # pressure can never touch pages a live lane maps
+    assert pc.evictable_pages() == 0
+    assert pc.evict(3) == 0 and pc.n_nodes == 3
+
+    for p in (7, 8, 9):                     # lane finished
+        pool.release_page(p)
+    assert pc.evictable_pages() == 3
+    # leaf-first drain: evicting 9 exposes 8, then 8 exposes 7
+    assert pc.evict(2) == 2
+    assert pool.freed == [9, 8]
+    assert pc.n_nodes == 1 and pc.match(_toks(1, 2)) == (2, [7])
+
+
+def test_max_pages_cap_trims_lru_after_insert():
+    pool = FakePool()
+    pc = PrefixCache(pool, page_size=2, max_pages=2)
+    pc.insert(_toks(1, 1), pages=[3])
+    pc.insert(_toks(2, 2), pages=[4])
+    pc.insert(_toks(5, 5), pages=[6])       # over cap: LRU (A) trimmed
+    assert pc.n_nodes == 2
+    assert pool.freed == [3]
+    assert pc.match(_toks(1, 1)) == (0, [])
+    assert pc.match(_toks(5, 5)) == (2, [6])
+
+
+def test_claim_stats_and_reset_keep_trie():
+    pool = FakePool()
+    pc = PrefixCache(pool, page_size=2)
+    pc.insert(_toks(1, 2, 3, 4), pages=[5, 6])
+    pc.note_claim(cached_len=4, prompt_len=6)
+    pc.note_claim(cached_len=0, prompt_len=4)
+    st = pc.stats()
+    assert st["prefix_lookups"] == 2.0 and st["prefix_hits"] == 1.0
+    assert st["prefix_hit_rate"] == 0.5
+    assert st["prefix_claimed_tokens"] == 4.0
+    assert st["prefix_token_savings"] == pytest.approx(0.4)
+    assert st["prefix_cached_pages"] == 2.0
+    pc.reset_stats()
+    assert pc.stats()["prefix_lookups"] == 0.0
+    assert pc.match(_toks(1, 2)) == (2, [5])    # trie survives the reset
+
+
+# ---------------------------------------------------------------------------
+# pool units (real PagedKVCache: COW forks, eviction, rollback, snapshots)
+# ---------------------------------------------------------------------------
+
+
+def test_cow_fork_bookkeeping_and_sibling_invisibility(moe):
+    cfg, _ = moe
+    cache = PagedKVCache(cfg, n_slots=3, max_len=16, page_size=4)
+    pc = PrefixCache(cache, 4)
+    cache.attach_prefix_cache(pc)
+    prompt = _toks(1, 2, 3, 4, 5, 6, 7, 8)
+
+    slot = cache.alloc(8)
+    p1, p2 = cache.lane_pages(slot)
+    pc.insert(prompt, [p1, p2])
+    assert cache.refcount(p1) == 2 and cache.refcount(p2) == 2
+    cache.release(slot)
+    # cached pages survive the lane: resident at refcount 1 (trie only)
+    assert cache.refcount(p1) == 1 and cache.refcount(p2) == 1
+    assert p1 not in cache._free_pages and p2 not in cache._free_pages
+
+    # full hit: last shared page is COW-forked into a private copy
+    cached_len, shared = pc.match(prompt)
+    assert (cached_len, shared) == (8, [p1, p2])
+    s2 = cache.alloc(8, shared_pages=shared, fork_last=True)
+    fork2 = cache.lane_pages(s2)[-1]
+    assert cache.cow_forks == 1
+    assert cache.lane_pages(s2) == [p1, fork2] and fork2 != p2
+    assert cache.lane_shared(s2) == 1           # only p1 is borrowed
+    assert cache.refcount(p1) == 2              # trie + this lane
+    assert cache.refcount(p2) == 1              # trie only — claim dropped
+    assert cache.refcount(fork2) == 1           # private, trie-free
+    assert fork2 not in pc.pages()
+    np.testing.assert_array_equal(cache.page_table[s2, :2], [p1, fork2])
+
+    # a sibling full hit gets its OWN fork — never sees fork2, and the
+    # trie still serves the original p2
+    s3 = cache.alloc(8, shared_pages=list(pc.match(prompt)[1]),
+                     fork_last=True)
+    fork3 = cache.lane_pages(s3)[-1]
+    assert fork3 not in (p2, fork2)
+    assert fork2 not in cache.lane_pages(s3)
+    assert cache.refcount(p1) == 3 and cache.refcount(p2) == 1
+    assert cache.gauges()["shared_pages"] == 1.0    # p1 (refcount 3)
+    assert cache.gauges()["cow_forks"] == 2.0
+
+    cache.release(s2)
+    cache.release(s3)
+    assert dict(cache._refs) == {p1: 1, p2: 1}      # trie-only again
+
+
+def test_alloc_evicts_under_pressure_and_rolls_back_on_shortfall(moe):
+    cfg, _ = moe
+    cache = PagedKVCache(cfg, n_slots=3, max_len=16, page_size=4,
+                         page_budget=4)
+    pc = PrefixCache(cache, 4)
+    cache.attach_prefix_cache(pc)
+
+    pinned = cache.alloc(4)                     # 1 page a lane keeps
+    donor = cache.alloc(12)
+    trie_pages = cache.lane_pages(donor)
+    pc.insert(np.arange(12, dtype=np.int32), trie_pages)
+    cache.release(donor)
+    assert cache.free_pages == 0 and pc.n_nodes == 3
+
+    # authoritative shortfall: 3 shared + 1 fresh needed, but the only
+    # evictable pages ARE the ones this claim just pinned (can_admit is
+    # documented optimistic here) — alloc must roll back cleanly
+    assert cache.can_admit(16, n_shared=3)
+    assert cache.alloc(16, shared_pages=trie_pages) is None
+    assert all(cache.refcount(p) == 1 for p in trie_pages)
+    assert cache.n_free == 2 and pc.n_nodes == 3
+
+    # with a free page, a cold 4-page alloc succeeds by evicting the
+    # whole (unreferenced) trie
+    cache.release(pinned)
+    slot = cache.alloc(16)
+    assert slot is not None
+    assert pc.n_nodes == 0 and pc.evicted_pages == 3
+    assert cache.free_pages == 0 and len(cache.lane_pages(slot)) == 4
+
+
+def test_page_table_device_caches_per_slot_snapshots(moe):
+    cfg, _ = moe
+    cache = PagedKVCache(cfg, n_slots=2, max_len=16, page_size=4)
+    s0, s1 = cache.alloc(8), cache.alloc(8)
+    d0, d1 = cache.page_table_device(s0), cache.page_table_device(s1)
+    full = cache.page_table_device()
+    # repeat calls return the SAME cached snapshot object
+    assert cache.page_table_device(s0) is d0
+    assert cache.page_table_device(s1) is d1
+    assert cache.page_table_device() is full
+    # a mutation of s1 invalidates s1's row and the full table, NOT s0's
+    cache.release(s1)
+    assert cache.page_table_device(s0) is d0
+    assert cache.page_table_device(s1) is not d1
+    assert cache.page_table_device() is not full
+    np.testing.assert_array_equal(np.asarray(cache.page_table_device(s1)), 0)
+
+
+def test_gauges_zero_budget_and_prefix_keys(moe):
+    cfg, _ = moe
+    g = PagedKVCache(cfg, n_slots=1, max_len=8, page_size=8,
+                     page_budget=0).gauges()
+    assert g["page_utilization"] == 0.0          # no ZeroDivisionError
+    assert g["cache_hit_rate"] == 0.0            # no prefix cache attached
+    assert g["shared_pages"] == 0.0 and g["cow_forks"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine harness: shared-prefix workloads
+# ---------------------------------------------------------------------------
+
+
+def _shared_prefix_workload(cfg, rs, n=8, max_new=6):
+    """Requests drawn from two shared system prompts (8 and 16 tokens —
+    page-aligned and not-chunk-aligned both appear) plus a random
+    private suffix; suffix length 0 makes exact repeats (full hits)."""
+    prefixes = [rs.randint(0, cfg.vocab, L).astype(np.int32)
+                for L in (8, 16)]
+    reqs = []
+    for _ in range(n):
+        pre = prefixes[int(rs.randint(len(prefixes)))]
+        sfx = rs.randint(0, cfg.vocab,
+                         int(rs.randint(0, 6))).astype(np.int32)
+        reqs.append(Request(np.concatenate([pre, sfx]),
+                            int(rs.randint(1, max_new + 1))))
+    return reqs
+
+
+def _clone(reqs):
+    return [Request(r.prompt, r.max_new_tokens, eos_id=r.eos_id,
+                    temperature=r.temperature) for r in reqs]
+
+
+def _drive_bursty(eng, reqs, rs):
+    pending = list(reqs)
+    rids = []
+    while pending or eng.busy:
+        while pending and rs.rand() < 0.6:
+            rids.append(eng.submit(pending.pop(0)))
+        eng.step()
+    return [eng.scheduler.result(rid) for rid in rids]
+
+
+def _engine(params, cfg, spec=False, **kw):
+    kwargs = dict(max_len=32, max_batch=3, prefill_chunk=8,
+                  kv_layout="paged", page_size=8, page_budget=12)
+    if spec:
+        mask = np.ones(cfg.n_experts, np.float32)
+        mask[-cfg.n_experts // 4:] = 0.0
+        kwargs.update(spec_decode="pruned", spec_k=3, expert_mask=mask)
+    kwargs.update(kw)
+    return ServeEngine(params, cfg, **kwargs)
+
+
+def _check_prefix_invariants(cache, pc):
+    """The sharing-aware page invariants (kv_cache.py docstring):
+    ``refcount(p) == referencing lane tables + trie entries`` exactly,
+    sharing only through the trie, at most one lane holding any page
+    outside its read-only shared-prefix region, sentinel untouched,
+    and free pool + referenced pages partitioning the budget."""
+    lane_refs = {}
+    for slot, pages in cache._pages_of.items():
+        assert 0 not in pages, f"sentinel mapped by lane {slot}"
+        assert len(set(pages)) == len(pages), "page twice in one lane"
+        width = len(pages)
+        np.testing.assert_array_equal(cache.page_table[slot, :width], pages)
+        assert (cache.page_table[slot, width:] == 0).all()
+        assert int(cache.seq_lens[slot]) <= width * cache.page_size
+        assert 0 <= cache.lane_shared(slot) <= width
+        for p in pages:
+            lane_refs[p] = lane_refs.get(p, 0) + 1
+    trie_pages = pc.pages()
+    assert len(set(trie_pages)) == len(trie_pages) == pc.n_nodes
+    assert 0 not in trie_pages
+    expected = dict(lane_refs)
+    for p in trie_pages:
+        expected[p] = expected.get(p, 0) + 1
+    assert dict(cache._refs) == expected, "refcount != lanes + trie"
+    trie_set = set(trie_pages)
+    for p, n in lane_refs.items():
+        if n > 1:                      # lanes share ONLY via the trie
+            assert p in trie_set, f"page {p} lane-shared but not cached"
+        writers = sum(1 for s, pages in cache._pages_of.items()
+                      if p in pages[cache.lane_shared(s):])
+        assert writers <= 1, f"page {p} writable from {writers} lanes"
+    free = set(cache._free_pages)
+    assert 0 not in free and not (free & set(expected))
+    assert len(free) + len(expected) == cache.page_budget
+    for slot in cache._free_slots:
+        assert (cache.page_table[slot] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# discrimination: repeats cost zero prefill; cache-off re-prefills
+# ---------------------------------------------------------------------------
+
+
+def test_repeat_prompt_costs_zero_prefill_dispatches(moe):
+    cfg, params = moe
+    rs = np.random.RandomState(11)
+    req = Request(rs.randint(0, cfg.vocab, 16).astype(np.int32), 4)
+
+    on = _engine(params, cfg, prefix_cache=True)
+    first = on.generate(_clone([req]))[0]
+    p_cold = on.prefill_dispatches
+    assert p_cold == 2                            # ceil(16/8) chunks
+    d0 = on.decode_dispatches
+    repeat = on.generate(_clone([req]))[0]
+    np.testing.assert_array_equal(first, repeat)  # replay path is exact
+    assert on.prefill_dispatches == p_cold, \
+        "fully cached prompt must dispatch ZERO prefill chunks"
+    assert on.decode_dispatches > d0              # tokens came from decode
+    assert on.cache.cow_forks == 1
+    st = on.latency_stats()
+    assert st["prefix_hits"] == 1.0 and st["prefix_hit_rate"] == 0.5
+    assert st["prefix_claimed_tokens"] == 16.0
+    assert st["cache_hit_rate"] == 0.5
+    assert "prefix_lookups" not in _engine(params, cfg).latency_stats()
+
+    # the discrimination half: a cache-off engine re-prefills every time
+    off = _engine(params, cfg)
+    off.generate(_clone([req]))
+    p1 = off.prefill_dispatches
+    off.generate(_clone([req]))
+    assert off.prefill_dispatches == 2 * p1, \
+        "cache-off engine should pay the full prefill again"
+
+
+def test_partial_hit_resumes_prefill_past_claimed_pages(moe):
+    cfg, params = moe
+    rs = np.random.RandomState(12)
+    base = rs.randint(0, cfg.vocab, 13).astype(np.int32)
+    on = _engine(params, cfg, prefix_cache=True)
+    off = _engine(params, cfg)
+
+    a_on = on.generate([Request(base, 3)])[0]
+    assert on.prefill_dispatches == 2             # ceil(13/8) cold
+    # only the 8-token page is cached (13 rounds down to one page, which
+    # is also the claim grain): the repeat prefills ONE chunk, not two
+    b_on = on.generate([Request(base, 3)])[0]
+    assert on.prefill_dispatches == 3
+    ref = off.generate([Request(base, 3)])[0]
+    np.testing.assert_array_equal(a_on, ref)
+    np.testing.assert_array_equal(b_on, ref)
+    st = on.latency_stats()
+    assert st["prefix_hits"] == 1.0 and st["prefix_claimed_tokens"] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# equivalence oracle: cache-on == cache-off, cold AND warm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("schedule,spec", [("blocking", False),
+                                           ("interleaved", False),
+                                           ("interleaved", True)])
+def test_cache_on_token_identical_to_cache_off(moe, schedule, spec):
+    """Randomized shared-prefix workload with mid-stream EOS: the
+    prefix-cache-on engine must reproduce the cache-off engine's outputs
+    token for token — on a cold trie AND on a warm second wave where
+    repeats take the zero-prefill COW/replay path — through both
+    schedules, with speculative decode on the interleaved one."""
+    cfg, params = moe
+    seed = {("blocking", False): 700, ("interleaved", False): 800,
+            ("interleaved", True): 900}[(schedule, spec)]
+    rs = np.random.RandomState(seed)
+    reqs = _shared_prefix_workload(cfg, rs, n=7)
+
+    harvest = _engine(params, cfg, spec,
+                      schedule="blocking").generate(_clone(reqs))
+    for i in range(0, len(reqs), 3):              # EOS fires mid-stream
+        out = harvest[i]
+        if len(out) >= 3:
+            reqs[i].eos_id = int(out[len(out) // 2])
+
+    off = _engine(params, cfg, spec, schedule="blocking")
+    outs_off = off.generate(_clone(reqs))
+    on = _engine(params, cfg, spec, schedule=schedule, prefix_cache=True)
+    if schedule == "blocking":
+        outs_cold = on.generate(_clone(reqs))
+        outs_warm = on.generate(_clone(reqs))
+    else:
+        outs_cold = _drive_bursty(on, _clone(reqs), rs)
+        outs_warm = _drive_bursty(on, _clone(reqs), rs)
+
+    for r, a, b, c in zip(reqs, outs_off, outs_cold, outs_warm):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+        assert len(a) <= r.max_new_tokens
+    st = on.latency_stats()
+    assert st["prefix_lookups"] == 2.0 * len(reqs)
+    assert st["prefix_hits"] >= len(reqs), \
+        "warm wave saw no cache hits — the trie isn't being consulted"
+    assert not on.busy and on.cache.n_free == on.cache.n_slots
+    _check_prefix_invariants(on.cache, on.prefix_cache)
+
+
+@pytest.mark.stress
+def test_cache_equivalence_with_pruned_serving(moe):
+    """The masks axes of the oracle: runtime ``expert_mask`` and stage-2
+    ``weight_masks`` engines must stay cache-on == cache-off (warm wave
+    included)."""
+    from repro.core.stun import unstructured_only
+    from repro.data.synthetic import calibration_batches
+
+    cfg, params = moe
+    rs = np.random.RandomState(13)
+    reqs = _shared_prefix_workload(cfg, rs, n=5)
+    emask = np.ones(cfg.n_experts, np.float32)
+    emask[-cfg.n_experts // 4:] = 0.0
+    batches = calibration_batches(cfg, n_batches=2)
+    _, wmasks, _ = unstructured_only(params, cfg, batches,
+                                     target_sparsity=0.4, method="wanda")
+    for kwargs in ({"expert_mask": emask}, {"weight_masks": wmasks}):
+        off = _engine(params, cfg, schedule="blocking",
+                      **kwargs).generate(_clone(reqs))
+        on = _engine(params, cfg, schedule="interleaved",
+                     prefix_cache=True, **kwargs)
+        for wave in range(2):
+            outs = _drive_bursty(on, _clone(reqs), rs)
+            for a, b in zip(off, outs):
+                np.testing.assert_array_equal(a, b)
+        assert on.latency_stats()["prefix_hits"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# randomized stress: page invariants under churn (sanitizer on)
+# ---------------------------------------------------------------------------
+
+
+def _prefix_stress_drive(params, cfg, seed, spec=False, max_pages=None,
+                         n=10):
+    rs = np.random.RandomState(seed)
+    reqs = _shared_prefix_workload(cfg, rs, n=n)
+    eng = _engine(params, cfg, spec, schedule="interleaved",
+                  prefix_cache=True, prefix_cache_max_pages=max_pages)
+    pending = list(reqs)
+    rids = []
+    n_steps = 0
+    while pending or eng.busy:
+        while pending and rs.rand() < 0.5:
+            rids.append(eng.submit(pending.pop(0)))
+        eng.step()
+        n_steps += 1
+        assert n_steps < 10_000, "engine failed to drain"
+        _check_prefix_invariants(eng.cache, eng.prefix_cache)
+        if max_pages is not None:
+            assert eng.prefix_cache.n_nodes <= max_pages
+    assert len(rids) == len(reqs) and len(set(rids)) == len(rids)
+    for req, rid in zip(reqs, rids):
+        out = eng.scheduler.result(rid)        # KeyError here == lost
+        assert 1 <= len(out) <= req.max_new_tokens
+    # drained: every surviving page reference is a trie entry at
+    # refcount 1, and free pool + trie partition the budget exactly
+    assert eng.cache.n_free == eng.cache.n_slots
+    assert sorted(eng.cache._refs) == sorted(eng.prefix_cache.pages())
+    assert all(n == 1 for n in eng.cache._refs.values())
+    assert eng.cache.free_pages + eng.prefix_cache.n_nodes == \
+        eng.cache.page_budget
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("seed", [0, 1])
+def test_prefix_stress_invariants_sanitized(moe, sanitized, seed):
+    cfg, params = moe
+    _prefix_stress_drive(params, cfg, seed)
+
+
+@pytest.mark.stress
+def test_prefix_stress_invariants_spec_sanitized(moe, sanitized):
+    cfg, params = moe
+    _prefix_stress_drive(params, cfg, 2, spec=True, n=8)
+
+
+@pytest.mark.stress
+def test_prefix_stress_invariants_with_trie_cap(moe, sanitized):
+    """A tight ``max_pages`` cap forces trie trims mid-churn; the
+    refcount invariants must survive the extra eviction pressure."""
+    cfg, params = moe
+    _prefix_stress_drive(params, cfg, 3, max_pages=3)
+
+
+# ---------------------------------------------------------------------------
+# constructor validation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_bad_prefix_cache_args(moe):
+    cfg, params = moe
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, max_len=16, kv_layout="slot",
+                    prefix_cache=True)
+    with pytest.raises(ValueError, match="prefix_cache_max_pages"):
+        ServeEngine(params, cfg, max_len=16, prefix_cache_max_pages=4)
+    with pytest.raises(ValueError, match="page_size"):
+        PrefixCache(FakePool(), page_size=0)
+    with pytest.raises(ValueError, match="max_pages"):
+        PrefixCache(FakePool(), page_size=4, max_pages=-1)

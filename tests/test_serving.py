@@ -207,7 +207,8 @@ def test_temperature_sampling_and_stats(moe):
                           "p50_inter_token_s", "p95_inter_token_s",
                           "pages_in_use", "pages_total",
                           "page_utilization", "kv_fragmentation",
-                          "lanes_prefilling", "prefill_pages_in_use"}
+                          "lanes_prefilling", "prefill_pages_in_use",
+                          "cache_hit_rate", "shared_pages", "cow_forks"}
     assert all(v >= 0 for v in stats.values())
     # all requests finished -> every page back in the pool
     assert stats["pages_in_use"] == 0 and stats["page_utilization"] == 0
@@ -265,7 +266,7 @@ def test_slot_kv_cache_alloc_free():
     a, b = c.alloc(), c.alloc()
     assert {a, b} == {0, 1} and c.alloc() is None and c.n_free == 0
     c.seq_lens[a] = 5
-    c.free(a)
+    c.release(a)
     assert c.n_free == 1 and c.seq_lens[a] == 0
     assert c.alloc() == a
 
