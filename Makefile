@@ -3,19 +3,27 @@ export PYTHONPATH := src:$(PYTHONPATH)
 # extra pytest flags (CI passes --timeout=N; needs pytest-timeout)
 PYTEST_FLAGS ?=
 
-.PHONY: test test-fast test-stress bench bench-serving example-serve \
-	docs-check lint
+.PHONY: test test-fast test-stress test-stats bench bench-serving \
+	example-serve docs-check lint
 
 # tier-1 verification (ROADMAP.md) — runs everything
 test:
 	$(PY) -m pytest -x -q $(PYTEST_FLAGS)
 
-# CI split: deterministic tests vs randomized/property stress suites
+# CI split: deterministic tests vs randomized/property stress suites.
+# Statistical tests (@pytest.mark.stats, tests/stats.py) run in both: a
+# fixed-seed subset lands in test-fast; stats+stress tests widen their
+# seed matrix in the stress job under REPRO_STATS_WIDE=1.
 test-fast:
 	$(PY) -m pytest -q -m "not stress" $(PYTEST_FLAGS)
 
 test-stress:
 	$(PY) -m pytest -q -m stress $(PYTEST_FLAGS)
+
+# every statistical claim in one run (helper self-tests, spec-sampling
+# equivalence oracle, f8-KV agreement) — explicit alpha/n throughout
+test-stats:
+	$(PY) -m pytest -q -m stats $(PYTEST_FLAGS)
 
 # docs job: markdown links resolve + doctested examples run
 docs-check:

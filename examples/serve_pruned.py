@@ -103,6 +103,9 @@ def main():
                          "(STUN expert keep-mask drafts, dense verifies)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens per speculative round")
+    ap.add_argument("--spec-tree", type=int, default=1,
+                    help="draft-tree branches per round (>1 scores a "
+                         "token tree in one verify dispatch; 1 = chain)")
     ap.add_argument("--schedule", choices=["interleaved", "blocking"],
                     default="interleaved",
                     help="prefill/decode schedule (interleaved meters "
@@ -245,6 +248,7 @@ def main():
         out2, tps2, eng = serve_and_time(params, cfg, requests, max_batch=2,
                                          spec_decode="pruned",
                                          spec_k=args.spec_k,
+                                         spec_tree=args.spec_tree,
                                          expert_mask=keep_mask,
                                          **sched_kwargs)
         # dense-identical (hard-asserted in tests; reported here)
@@ -254,7 +258,8 @@ def main():
               f"the same concurrency) "
               f"accept_rate={st['spec_accept_rate']:.2f} "
               f"tok/verify={st['spec_tokens_per_verify']:.1f} "
-              f"k={args.spec_k} token-identical-to-dense={identical}")
+              f"k={args.spec_k} tree={args.spec_tree} "
+              f"token-identical-to-dense={identical}")
 
 
 if __name__ == "__main__":

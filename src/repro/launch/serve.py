@@ -70,10 +70,15 @@ def main():
                     help="self-speculative decoding: a pruned drafter "
                          "proposes --spec-k tokens per round, the dense "
                          "model verifies the block in one dispatch "
-                         "(greedy only; output token-identical to plain "
-                         "decode)")
+                         "(greedy output token-identical to plain decode; "
+                         "temperature>0 served via rejection sampling, "
+                         "distribution-identical to plain sampling)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens per speculative round")
+    ap.add_argument("--spec-tree", type=int, default=1,
+                    help="draft-tree branches per round (>1 scores an "
+                         "N-branch token tree in one verify dispatch; "
+                         "1 = chain)")
     ap.add_argument("--spec-expert-drop", type=float, default=0.25,
                     help="fraction of experts masked off in the drafter "
                          "(MoE archs; non-MoE archs draft with the dense "
@@ -122,7 +127,8 @@ def main():
             for _ in range(args.n_requests)]
     spec_kwargs = {}
     if args.spec_decode:
-        spec_kwargs = {"spec_decode": "pruned", "spec_k": args.spec_k}
+        spec_kwargs = {"spec_decode": "pruned", "spec_k": args.spec_k,
+                       "spec_tree": args.spec_tree}
         if cfg.family == "moe" and args.spec_expert_drop > 0:
             n_drop = int(cfg.n_experts * args.spec_expert_drop)
             n_drop = min(n_drop, cfg.n_experts - cfg.top_k)

@@ -122,8 +122,14 @@ def _mask(q_pos, kv_pos, window: Optional[int], kv_len=None):
 
 
 def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
-                    kv_len=None):
-    """q [B,S,H,hd], k/v [B,T,K,hd], q_pos [S] or [B,S], kv_pos [T] or [B,T]."""
+                    kv_len=None, allow=None):
+    """q [B,S,H,hd], k/v [B,T,K,hd], q_pos [S] or [B,S], kv_pos [T] or [B,T].
+
+    ``allow`` ([S,T] or [B,S,T] bool, optional) is ANDed into the
+    positional mask — tree-draft verification needs it because sibling
+    draft branches share absolute positions, so causality alone cannot
+    keep a branch from attending another branch's rows.
+    """
     B, S, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
     G = H // K
@@ -134,6 +140,8 @@ def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
     m = _mask(q_pos, kv_pos, window, kv_len)  # [S,T] or [B,S,T]
+    if allow is not None:
+        m = m & allow
     if m.ndim == 3:
         m = m[:, None, None]
     s = jnp.where(m, s, NEG_INF)
@@ -143,7 +151,8 @@ def attention_naive(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
 
 
 def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
-                      chunk: int = 512, unroll: bool = False, kv_len=None):
+                      chunk: int = 512, unroll: bool = False, kv_len=None,
+                      allow=None):
     """Flash-style online-softmax attention, scanning KV in chunks.
 
     ``unroll`` replaces the lax.scan with a python loop (identical math) so
@@ -163,6 +172,12 @@ def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
         pc = kv_pos.reshape(n_chunks, chunk)
     else:
         pc = kv_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    if allow is not None:
+        if allow.ndim == 2:
+            allow = jnp.broadcast_to(allow[None], (B, S, T))
+        ac = allow.reshape(B, S, n_chunks, chunk).transpose(2, 0, 1, 3)
+    else:
+        ac = None
 
     m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, K, G, S), jnp.float32)
@@ -170,11 +185,17 @@ def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
 
     def body(carry, inp):
         m, l, acc = carry
-        kch, vch, pch = inp
+        if ac is None:
+            kch, vch, pch = inp
+            ach = None
+        else:
+            kch, vch, pch, ach = inp
         s = jnp.einsum("bskgh,bckh->bkgsc", qh, kch.astype(jnp.float32)) * scale
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
         msk = _mask(q_pos, pch, window, kv_len)  # [S,c] or [B,S,c]
+        if ach is not None:
+            msk = msk & ach
         if msk.ndim == 3:
             msk = msk[:, None, None]
         s = jnp.where(msk, s, NEG_INF)
@@ -186,13 +207,14 @@ def attention_chunked(q, k, v, q_pos, kv_pos, *, window=None, softcap=None,
         acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
         return (m_new, l_new, acc_new), None
 
+    xs = (kc, vc, pc) if ac is None else (kc, vc, pc, ac)
     if unroll:
         carry = (m0, l0, a0)
         for i in range(n_chunks):
-            carry, _ = body(carry, (kc[i], vc[i], pc[i]))
+            carry, _ = body(carry, tuple(x[i] for x in xs))
         m, l, acc = carry
     else:
-        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), xs)
     l = jnp.where(l == 0.0, 1.0, l)
     out = acc / l.transpose(0, 3, 1, 2)[..., None]
     return out.reshape(B, S, H, hd).astype(q.dtype)
@@ -224,16 +246,16 @@ def attention_decode(q, k_cache, v_cache, cache_len, *, window=None,
 
 
 def attention(q, k, v, q_pos, kv_pos, *, impl="chunked", window=None,
-              softcap=None, chunk=512, unroll=False, kv_len=None):
+              softcap=None, chunk=512, unroll=False, kv_len=None, allow=None):
     if impl == "naive" or q.shape[1] <= chunk:
         return attention_naive(q, k, v, q_pos, kv_pos, window=window,
-                               softcap=softcap, kv_len=kv_len)
+                               softcap=softcap, kv_len=kv_len, allow=allow)
     if impl in ("chunked", "pallas"):
         # pallas fast path is swapped in by kernels/ops.py when enabled;
         # portable lowering uses the chunked scan.
         return attention_chunked(q, k, v, q_pos, kv_pos, window=window,
                                  softcap=softcap, chunk=chunk, unroll=unroll,
-                                 kv_len=kv_len)
+                                 kv_len=kv_len, allow=allow)
     raise ValueError(impl)
 
 

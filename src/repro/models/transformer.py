@@ -790,7 +790,8 @@ def decode_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
 
 
 def verify_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
-                      page_tables, *, mesh=None, expert_mask=None):
+                      page_tables, *, mesh=None, expert_mask=None,
+                      depth=None, allow_block=None):
     """Score a ragged block of draft tokens with the (dense) model — the
     verifier half of self-speculative decoding.
 
@@ -798,15 +799,34 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
     token (not yet in cache) and positions 1..W-1 are the W-1 draft
     proposals; seq_lens [B] int32 — valid rows already in each lane;
     page_tables [B, max_pages] int32 (sentinel page 0 where unassigned).
-    Lane ``b``'s token ``j`` sits at absolute position ``seq_lens[b]+j``:
-    its K/V is scattered through the page table to that row (overwriting
-    whatever the draft pass wrote there — the cache prefix stays pure
-    verifier K/V for every row that can ever be attended again), RoPE'd at
-    that position, and it attends rows [0, seq_lens[b]+j] causally.
+    Lane ``b``'s token ``j`` sits at cache row ``seq_lens[b]+j``: its K/V
+    is scattered through the page table to that row (overwriting whatever
+    the draft pass wrote there — the cache prefix stays pure verifier K/V
+    for every row that can ever be attended again).
 
-    Greedy acceptance is computed in-dispatch: the drafted token ``j+1``
-    is accepted iff it equals the verifier's argmax at block position
-    ``j``, and acceptance stops at the first mismatch.
+    **Chain blocks** (``depth=None``): token ``j`` is RoPE'd at absolute
+    position ``seq_lens[b]+j`` and attends rows [0, seq_lens[b]+j]
+    causally.
+
+    **Tree blocks**: ``depth`` [W] int32 gives each block row's depth
+    below the anchor (``depth[0] == 0``), and ``allow_block`` [W, W] bool
+    gives intra-block attendability (``allow_block[r, s]`` — may query
+    row ``r`` attend block row ``s``; ancestors-or-self only).  Token
+    ``j`` still *writes* cache row ``seq_lens[b]+j`` but is RoPE'd at
+    position ``seq_lens[b]+depth[j]``, and attention uses tree positions
+    for the causal/window mask ANDed with ``allow_block`` — required
+    because sibling branches share absolute positions, so positional
+    causality alone would let branches attend each other.  Both must be
+    device arrays of static shape (or None together).
+
+    Greedy *chain* acceptance is computed in-dispatch: the drafted token
+    ``j+1`` is accepted iff it equals the verifier's argmax at block
+    position ``j``, and acceptance stops at the first mismatch.  For tree
+    blocks (and for rejection *sampling* at temperature > 0) the
+    accept/resample decision instead lives in
+    ``serving.speculative.accept_block``, which consumes the returned
+    dense logits in the same jitted dispatch — the chain-greedy outputs
+    returned here are then unused and DCE'd by XLA.
 
     Returns ``(accept_len [B], next_token [B], logits [B, W, padded_vocab],
     new_cache)`` — ``accept_len`` in [0, W-1] counts accepted draft
@@ -827,16 +847,34 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
             f"paged verify requires a KV cache; family={cfg.family!r}")
     h = params["embed"][tokens]                      # [B,W,D]
     B, W = tokens.shape
-    q_pos = seq_lens[:, None] + jnp.arange(W)[None]  # [B,W] per-lane ragged
+    row = seq_lens[:, None] + jnp.arange(W)[None]    # [B,W] cache rows
+    if depth is None:
+        q_pos = row                                  # chain: position == row
+    else:
+        q_pos = seq_lens[:, None] + depth[None]      # tree: position by depth
     sin, cos = rope_tables(q_pos, cfg.head_dim, cfg.rope_theta)
     em = _norm_expert_mask(cfg, expert_mask)
     n_pages, ps = cache["k"].shape[1], cache["k"].shape[2]
-    widx = (page_tables[jnp.arange(B)[:, None], q_pos // ps] * ps
-            + q_pos % ps).reshape(-1)                # [B*W] flat pool rows
+    widx = (page_tables[jnp.arange(B)[:, None], row // ps] * ps
+            + row % ps).reshape(-1)                  # [B*W] flat pool rows
     lane_idx = (page_tables[:, :, None] * ps
                 + jnp.arange(ps)[None, None, :]).reshape(B, -1)  # [B,T]
     T = lane_idx.shape[1]
     kv_len = seq_lens + W                            # rows valid after write
+    if depth is None:
+        kv_pos = jnp.arange(T)                       # [T]: position == row
+        allow = None
+    else:
+        # lane-view row t holds position t for history rows and
+        # seq_lens[b]+depth[s] for block row seq_lens[b]+s
+        oh = jnp.arange(T)[None, None, :] == row[:, :, None]     # [B,W,T]
+        shift = (depth - jnp.arange(W)).astype(jnp.int32)
+        kv_pos = (jnp.arange(T)[None]
+                  + (oh * shift[None, :, None]).sum(axis=1))     # [B,T]
+        in_block = oh.any(axis=1)[:, None, :]                    # [B,1,T]
+        ab = jnp.einsum("bst,rs->brt", oh.astype(jnp.float32),
+                        allow_block.astype(jnp.float32)) > 0.5   # [B,W,T]
+        allow = jnp.where(in_block, ab, True)
 
     def body(h, inp):
         if em is None:
@@ -855,10 +893,10 @@ def verify_step_paged(params, cfg: ModelConfig, cache, tokens, seq_lens,
         # written prefix under per-lane causal + length masking
         ks = kc[lane_idx]                            # [B,T,K,hd]
         vs = vc[lane_idx]
-        o = attention(q, ks, vs, q_pos, jnp.arange(T), impl=cfg.attn_impl,
+        o = attention(q, ks, vs, q_pos, kv_pos, impl=cfg.attn_impl,
                       window=cfg.local_window, softcap=cfg.attn_logit_softcap,
                       chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
-                      kv_len=kv_len)
+                      kv_len=kv_len, allow=allow)
         h = h + jnp.einsum("bshk,hkd->bsd", o, wo)
         x2 = _norm(h, lp["ln2"], cfg)
         if cfg.family == "moe":

@@ -14,5 +14,8 @@ from repro.serving.scheduler import (  # noqa: F401
 from repro.serving.speculative import (  # noqa: F401
     SpecStats,
     SpeculativeDecoder,
+    accept_block,
     draft_block_paged,
+    request_key,
+    tree_layout,
 )

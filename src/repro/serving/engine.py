@@ -63,11 +63,18 @@ block-sparse kernel exploits stage-2 masks.  The engine:
     (oracle-pinned in tests/test_disaggregation.py).
   * **self-speculative decoding** (``spec_decode="pruned"``, paged layout
     only — `speculative.SpeculativeDecoder`) — the pruned artifact drafts
-    ``spec_k`` tokens per round in one fused dispatch and the dense model
-    verifies the block in one batched ``models.verify_step_paged``
-    dispatch over the same page tables; greedy output stays
-    token-identical to dense-only decode while dispatches per token drop
-    to ``2 / (accepted + 1)``.
+    a ``spec_tree`` x ``spec_k`` token tree per round in one fused
+    dispatch and the dense model verifies the whole tree in one batched
+    ``models.verify_step_paged`` dispatch over the same page tables.
+    Greedy output stays token-identical to dense-only decode; sampled
+    (``temperature > 0``) requests go through rejection-sampling
+    verification, which keeps the emitted distribution exactly the dense
+    model's (statistically pinned).  Dispatches per token drop to
+    ``2 / (accepted + 1)``.
+  * **per-request PRNG key chains** — all sampling noise derives from
+    ``(seed, request_id, token_index)``, so a request's sampled token
+    stream never depends on batch composition, admission order, or the
+    prefill schedule.
 
 Recurrent families (ssm/hybrid) have no length-indexed cache; they fall
 back to a correct sequential per-request path.
@@ -90,7 +97,8 @@ from repro.sparse import install_sparse_ffn
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler
-from repro.serving.speculative import SpeculativeDecoder
+from repro.serving.speculative import (ROLE_TARGET, SpeculativeDecoder,
+                                       request_key)
 
 
 def apply_weight_masks(params, cfg, masks: Dict):
@@ -137,9 +145,12 @@ class ServeEngine:
     (prefill + verify) and a pruned drafter built from the same weights.
     In spec mode ``expert_mask`` / ``weight_masks`` / ``draft_params`` /
     ``sparse_weights`` describe the *drafter* (served output is
-    dense-model quality, token-identical to plain greedy decode); outside
-    spec mode they prune the served model itself, as before.  ``spec_k``
-    draft tokens are proposed per round (default 4).
+    dense-model quality: token-identical to plain greedy decode at
+    temperature 0, distribution-identical under rejection sampling at
+    temperature > 0); outside spec mode they prune the served model
+    itself, as before.  ``spec_k`` draft tokens are proposed per branch
+    per round (default 4) and ``spec_tree`` branches open at the first
+    draft position (default 1 — the classic chain).
 
     ``sparse_weights`` is a packed artifact from
     ``repro.sparse.pack_sparse_ffn``: expert FFN weights are replaced by
@@ -160,9 +171,9 @@ class ServeEngine:
     ``prefill_chunk`` chunks, min one; default one chunk) so decode lanes
     never stall behind a long prompt; ``schedule="blocking"`` runs each
     admitted prompt's prefill to completion first — the reference
-    schedule interleaved is tested token-identical against (greedy;
-    sampled requests draw from the engine's single PRNG stream, whose
-    per-token order differs between schedules).
+    schedule interleaved is tested token-identical against (greedy AND
+    sampled: per-request key chains make sampled streams
+    schedule-invariant too).
     """
 
     def __init__(self, params, cfg, max_len: int = 512, mesh=None,
@@ -171,6 +182,7 @@ class ServeEngine:
                  seed: int = 0, kv_layout: str = "paged",
                  page_size: int = 16, page_budget: Optional[int] = None,
                  spec_decode: Optional[str] = None, spec_k: int = 4,
+                 spec_tree: int = 1,
                  draft_params=None, schedule: str = "interleaved",
                  prefill_budget: Optional[int] = None,
                  sparse_weights: Optional[Dict] = None,
@@ -213,6 +225,8 @@ class ServeEngine:
                     f"spec_decode requires a KV cache; family={cfg.family!r}")
             if spec_k < 1:
                 raise ValueError("spec_k must be >= 1")
+            if spec_tree < 1:
+                raise ValueError("spec_tree must be >= 1")
             # two param sets: dense verifies, the pruned artifact drafts
             draft = params if draft_params is None else draft_params
             if weight_masks:
@@ -245,6 +259,7 @@ class ServeEngine:
         self.kv_layout = kv_layout
         self.spec_decode = spec_decode
         self.spec_k = spec_k if spec_decode else 0
+        self.spec_tree = spec_tree if spec_decode else 0
         self.scheduler = Scheduler(max_request_tokens=max_len)
         # rid -> (padded prompt buffer, S, n_pad, prefill ref) for
         # requests mid-prefill; the resumable cursor itself lives in
@@ -254,7 +269,12 @@ class ServeEngine:
         self.decode_dispatches = 0
         self.requests_admitted = 0
         self.pages_allocated = 0         # lifetime pages over all admissions
-        self._key = jax.random.PRNGKey(seed)
+        # per-request PRNG key chains: every random draw derives from
+        # (seed, rid, token-index) via speculative.request_key, so a
+        # request's sampled stream is invariant to batch composition,
+        # admission order, and schedule (there is no shared mutable
+        # key stream anymore)
+        self._base_key = jax.random.PRNGKey(seed)
         self._attn_cache = cfg.family not in ("ssm", "hybrid")
 
         em = None if expert_mask is None else jnp.asarray(expert_mask,
@@ -275,9 +295,12 @@ class ServeEngine:
             # only donate on accelerators.
             donate = (1,) if jax.default_backend() != "cpu" else ()
             if kv_layout == "paged":
-                self.cache = PagedKVCache(cfg, max_batch, lane_len,
-                                          page_size, page_budget,
-                                          overdraft=max(0, self.spec_k - 1))
+                # widest spec block writes rows [n, n + spec_tree*spec_k]
+                # with n <= total-2, so the reservation needs
+                # spec_tree*spec_k - 1 overdraft rows past each lifetime
+                self.cache = PagedKVCache(
+                    cfg, max_batch, lane_len, page_size, page_budget,
+                    overdraft=max(0, self.spec_tree * self.spec_k - 1))
                 self._prefill = jax.jit(
                     lambda p, c, t, row, start: prefill_step_paged(
                         p, cfg, c, t, row, start, mesh=mesh, expert_mask=em),
@@ -312,7 +335,8 @@ class ServeEngine:
             self._claim_grain = math.lcm(self.prefill_chunk, page_size)
         self._spec = (SpeculativeDecoder(cfg, spec_k, mesh=mesh,
                                          draft_expert_mask=draft_em,
-                                         donate=donate)
+                                         donate=donate,
+                                         n_branches=spec_tree, seed=seed)
                       if spec_decode else None)
         self._sample = jax.jit(self._sample_fn)
 
@@ -329,19 +353,15 @@ class ServeEngine:
 
         Raises ValueError for requests that could never be admitted
         (nothing is queued, no state leaks): empty prompts,
-        ``prompt + max_new_tokens`` past ``max_len``, requests whose
+        ``prompt + max_new_tokens`` past ``max_len``, or requests whose
         lifetime page reservation (including the speculative overdraft)
-        exceeds the whole page budget on the paged layout, or sampled
-        (``temperature > 0``) requests in spec-decode mode — greedy
-        verification is what makes speculative output token-identical to
-        dense decode.
+        exceeds the whole page budget on the paged layout.  Sampled
+        (``temperature > 0``) requests are served in spec-decode mode
+        too: rejection-sampling verification keeps the emitted
+        distribution exactly the dense model's at any temperature.
         """
         if len(request.prompt) < 1:
             raise ValueError("empty prompt")
-        if self._spec is not None and request.temperature > 0:
-            raise ValueError(
-                "spec_decode serves greedy requests only (temperature=0): "
-                "acceptance compares drafts against the dense argmax")
         total = len(request.prompt) + request.max_new_tokens
         if total > self.max_len:
             raise ValueError(
@@ -390,11 +410,13 @@ class ServeEngine:
         ``page_utilization`` / ``kv_fragmentation`` plus the in-flight
         prefill gauges ``lanes_prefilling`` / ``prefill_pages_in_use``
         (paged) or their ``slot*`` analogues.  In spec-decode mode also
-        ``spec_accept_rate`` (accepted / drafted), ``spec_tokens_per_verify``
-        (emitted tokens per verify dispatch, summed over the batch — up to
-        ``n_active * (spec_k + 1)``), and ``spec_rounds`` /
-        ``spec_drafted`` / ``spec_accepted`` / ``spec_emitted``
-        counters.  The paged gauges also carry the prefix-cache trio
+        ``spec_accept_rate`` (delivered-accepted / drafted),
+        ``spec_tokens_per_verify`` (emitted tokens per verify dispatch,
+        summed over the batch — up to ``n_active * (spec_k + 1)``), and
+        the ``spec_rounds`` / ``spec_drafted`` / ``spec_drafted_nodes`` /
+        ``spec_accepted`` / ``spec_corrections`` / ``spec_emitted``
+        counters (``spec_emitted == spec_accepted + spec_corrections``
+        by construction).  The paged gauges also carry the prefix-cache trio
         ``cache_hit_rate`` / ``shared_pages`` / ``cow_forks``; with
         ``prefix_cache=True`` the ``prefix_*`` counters (lookups, hits,
         hit rate, resident cached pages, claimed tokens, token-savings
@@ -601,21 +623,38 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # sampling
     # ------------------------------------------------------------------
-    def _sample_fn(self, logits, temps, key):
-        """logits [B, Vp], temps [B] -> tokens [B] (greedy where temp==0)."""
+    def _sample_fn(self, logits, temps, rids, ms):
+        """logits [B, Vp], temps/rids/ms [B] -> tokens [B].
+
+        Greedy where temp==0; otherwise gumbel-max sampling whose noise
+        comes from the ROLE_TARGET stream of ``request_key(seed, rid, m)``
+        with ``m`` the 0-based index of the token being sampled — the
+        same stream speculative decoding consumes for draft proposals
+        (branch 0) and bonus tokens, which is what makes spec sampling
+        stream-compatible with plain sampling.
+        """
         lg = logits[:, : self.cfg.vocab].astype(jnp.float32)
         greedy = jnp.argmax(lg, axis=-1)
-        g = jax.random.gumbel(key, lg.shape)
+        base = self._base_key
+        g = jax.vmap(
+            lambda r, m: jax.random.gumbel(
+                jax.random.fold_in(request_key(base, r, m), ROLE_TARGET),
+                (lg.shape[1],), jnp.float32))(rids, ms)
         samp = jnp.argmax(lg / jnp.maximum(temps[:, None], 1e-6) + g, axis=-1)
         return jnp.where(temps > 0, samp, greedy).astype(jnp.int32)
 
     def _sample_batch(self, logits, states):
-        temps = np.zeros(logits.shape[0], np.float32)
+        B = logits.shape[0]
+        temps = np.zeros(B, np.float32)
+        rids = np.zeros(B, np.int32)
+        ms = np.zeros(B, np.int32)
         for st in states:
-            idx = st.slot if logits.shape[0] > 1 else 0
+            idx = st.slot if B > 1 else 0
             temps[idx] = st.req.temperature
-        self._key, sub = jax.random.split(self._key)
-        return self._sample(logits, jnp.asarray(temps), sub)
+            rids[idx] = st.rid
+            ms[idx] = len(st.tokens)
+        return self._sample(logits, jnp.asarray(temps), jnp.asarray(rids),
+                            jnp.asarray(ms))
 
     # ------------------------------------------------------------------
     # recurrent-family fallback (no KV cache => per-request sequential)

@@ -35,7 +35,8 @@ tests/test_prefix_cache.py):
     (cache-hit admissions point the leading table entries at shared
     cached pages instead of drawing them from the free pool), so a
     decode step can never run out of pages mid-flight (the engine has
-    no preemption).  ``overdraft`` (speculative decoding: ``spec_k - 1``)
+    no preemption).  ``overdraft`` (speculative decoding:
+    ``spec_tree * spec_k - 1`` — the widest draft-tree verify block)
     covers verify-block rows written past the request's own lifetime and
     then rolled back via ``rollback()`` — reserved so block writes land
     in lane-owned pages, never on the shared sentinel.  The admission
@@ -78,9 +79,10 @@ class PagedKVCache:
         self.n_slots = n_slots
         self.page_size = page_size
         # ``overdraft`` rows per lane beyond the request's own lifetime:
-        # speculative decoding writes a verify block of W = spec_k + 1
-        # tokens starting at the last emitted position, so up to
-        # spec_k - 1 rows past ``prompt + max_new_tokens`` are written
+        # speculative decoding writes a verify block of
+        # W = spec_tree * spec_k + 1 tokens starting at the last emitted
+        # position, so up to W - 2 rows past ``prompt + max_new_tokens``
+        # are written
         # (then rolled back, never attended).  Reserving them keeps every
         # block write inside pages the lane owns — without the overdraft
         # those writes would fall onto the shared sentinel page, where a

@@ -7,29 +7,49 @@ faithful to their dense parent.  That makes the pruning artifact an ideal
 of only shrinking the serving footprint, the pruned model buys decode
 parallelism.  Per engine round:
 
-  1. **draft** — ``draft_block_paged`` runs ``spec_k`` greedy decode
-     steps with the pruned params (runtime ``expert_mask`` and/or stage-2
-     weight masks) fused into ONE jitted dispatch, writing draft K/V
-     through the lanes' page tables at rows ``[n, n+k)``.
-  2. **verify** — ``models.verify_step_paged`` teacher-forces the block
-     ``[last, d_1..d_k]`` through the dense params in one batched
-     dispatch.  It overwrites rows ``[n, n+k]`` with dense K/V (the draft
-     writes are scratch — every row that can ever be attended again holds
-     verifier K/V), and returns per-lane accept lengths plus the
-     verifier's correction/bonus token.
-  3. **accept** — each lane emits ``draft[:accept] + [correction]``
-     (≥ 1 token per round, so progress matches plain decode), the
-     scheduler's ``on_tokens`` fires EOS / ``max_new_tokens`` mid-block,
-     and ``PagedKVCache.rollback`` drops the rejected suffix by shrinking
+  1. **draft** — ``draft_block_paged`` proposes a token *tree*: from the
+     anchor it opens ``n_branches`` alternatives at the first draft
+     position (``spec_tree``; chain decoding is the 1-branch tree) and
+     extends each branch ``spec_k`` tokens deep with chained
+     ``decode_step_paged`` calls, all fused into ONE jitted dispatch.
+     Branches write their scratch K/V through the lanes' page tables at
+     rows ``[n+1, n+k)``, each branch overwriting the last — draft writes
+     are scratch the verifier replaces.  Drafter *logits* at every tree
+     node ride along so the verifier knows each proposal distribution.
+  2. **verify** — ``models.verify_step_paged`` teacher-forces the whole
+     tree block ``[anchor, b0_1..b0_k, ..., bN_1..bN_k]`` through the
+     dense params in one batched dispatch, with depth-based RoPE
+     positions and a tree mask (sibling branches share absolute
+     positions, so positional causality alone cannot separate them).
+  3. **accept** — ``accept_block`` runs in the same dispatch.  Greedy
+     lanes (``temperature == 0``) accept the longest branch prefix that
+     matches the dense argmax — bit-for-bit today's behaviour.  Sampled
+     lanes run **rejection sampling** (Leviathan et al.): a proposal
+     ``x ~ q`` is accepted with probability ``min(1, p(x)/q(x))``
+     against the dense distribution ``p``; on rejection the correction
+     is drawn from the normalized residual ``norm(max(p - q, 0))``.
+     Branch roots use SpecInfer-style multi-round verification: after
+     rejecting one root the residual shrinks by ``q_root`` and the next
+     root gets its turn, so the emitted distribution is *exactly* the
+     dense model's at any temperature.  All randomness comes from
+     per-request key chains (``request_key``), so token streams are
+     invariant to batch composition and schedule.
+  4. **bookkeeping** — each lane emits the winner branch's accepted
+     prefix plus one correction/bonus token (≥ 1 token per round, so
+     progress matches plain decode), the winner's K/V rows are compacted
+     to the canonical contiguous rows in-dispatch, the scheduler's
+     ``on_tokens`` fires EOS / ``max_new_tokens`` mid-block, and
+     ``PagedKVCache.rollback`` drops the rejected suffix by shrinking
      ``seq_len`` — no page frees: the lane's reservation (which includes
-     ``spec_k - 1`` overdraft rows) keeps every block write in lane-owned
-     pages, and rolled-back rows are rewritten before they can be
-     attended.
+     ``n_branches * spec_k - 1`` overdraft rows) keeps every block write
+     in lane-owned pages, and rolled-back rows are rewritten before they
+     can be attended.
 
 Greedy verification makes the output **token-identical to dense-only
-decode** for any drafter whatsoever (tests pin this oracle): the draft
+decode** for any drafter whatsoever, and rejection sampling makes it
+**distribution-identical** at temperature > 0 (tests pin both: token
+oracles for greedy, a χ² equivalence oracle for sampling).  The draft
 only decides how many dense-verified tokens each 2-dispatch round emits.
-Dispatches per emitted token drop from 1 to ``2 / (accept_len + 1)``.
 """
 from __future__ import annotations
 
@@ -44,60 +64,386 @@ import numpy as np
 from repro.analysis import sanitizer
 from repro.models import decode_step_paged, verify_step_paged
 
+# Per-request PRNG roles: every random draw in the serving stack comes
+# from ``fold_in(request_key(base, rid, m), ROLE)`` where ``m`` is the
+# 0-based index of the token being decided.  ROLE_TARGET is shared by
+# plain sampling, spec bonus draws, and branch-0 draft proposals — that
+# is what makes an identity drafter's spec stream equal the plain stream.
+ROLE_TARGET = 0     # sample from the served model's distribution
+ROLE_ACCEPT = 1     # accept/reject uniforms (folded again with the round)
+ROLE_RESIDUAL = 2   # residual-distribution corrections
+ROLE_BRANCH = 3     # extra tree-branch proposals (folded again with i>=1)
+
+_EPS = 1e-20
+
+
+def request_key(base_key, rid, m):
+    """Key chain for request ``rid``'s ``m``-th generated token.
+
+    Derived purely from ``(seed, rid, m)``, so sampled token streams are
+    invariant to batch composition, admission order, and schedule — the
+    property the statistical equivalence oracles rely on.
+    """
+    return jax.random.fold_in(jax.random.fold_in(base_key, rid), m)
+
+
+def _lane_keys(base_key, rids, ms):
+    """[B] per-lane request keys for token indices ``ms``."""
+    return jax.vmap(lambda r, m: request_key(base_key, r, m))(rids, ms)
+
+
+def _role_gumbel(keys, role, V, fold=None):
+    """[B, V] gumbel noise from per-lane keys folded with ``role``."""
+    def one(kk):
+        kk = jax.random.fold_in(kk, role)
+        if fold is not None:
+            kk = jax.random.fold_in(kk, fold)
+        return jax.random.gumbel(kk, (V,), jnp.float32)
+    return jax.vmap(one)(keys)
+
+
+def _role_uniform(keys, role, fold):
+    """[B] uniforms from per-lane keys folded with ``(role, fold)``."""
+    def one(kk):
+        return jax.random.uniform(
+            jax.random.fold_in(jax.random.fold_in(kk, role), fold))
+    return jax.vmap(one)(keys)
+
+
+def tree_layout(n_branches: int, k: int):
+    """Static draft-tree layout for a ``[anchor, b0_1..b0_k, ...]`` block.
+
+    Returns ``(depth [W], allow [W, W])`` numpy arrays, ``W = 1 + N*k``:
+    ``depth[r]`` is row ``r``'s depth below the anchor (anchor 0, branch
+    tokens 1..k) and ``allow[r, s]`` is True iff block row ``s`` is an
+    ancestor-or-self of row ``r`` (the anchor is everyone's ancestor).
+    """
+    W = 1 + n_branches * k
+    depth = np.zeros(W, np.int32)
+    branch = np.zeros(W, np.int32)
+    for r in range(1, W):
+        branch[r] = (r - 1) // k
+        depth[r] = (r - 1) % k + 1
+    allow = np.zeros((W, W), bool)
+    for r in range(W):
+        for s in range(W):
+            allow[r, s] = s == 0 or (branch[s] == branch[r]
+                                     and depth[s] <= depth[r])
+    return depth, allow
+
 
 @dataclasses.dataclass
 class SpecStats:
-    """Speculative-decode counters, merged into ``latency_stats()``."""
+    """Speculative-decode counters, merged into ``latency_stats()``.
+
+    ``accepted`` counts draft tokens actually *delivered* to requests
+    (verifier-accepted AND not truncated by EOS / ``max_new_tokens``),
+    so ``emitted == accepted + corrections`` and ``accepted <= drafted``
+    hold as hard invariants.  ``drafted`` counts one root-to-leaf path
+    (``spec_k``) per lane-round — the tokens a round could deliver —
+    while ``drafted_nodes`` counts every proposed tree node
+    (``n_branches * spec_k`` per lane-round).
+    """
     rounds: int = 0             # draft+verify rounds
-    drafted: int = 0            # draft tokens proposed (rounds * k * lanes)
-    accepted: int = 0           # draft tokens the verifier accepted
+    drafted: int = 0            # per-lane path tokens proposed (rounds*k)
+    drafted_nodes: int = 0      # all tree nodes proposed (rounds*N*k)
+    accepted: int = 0           # draft tokens delivered to requests
+    corrections: int = 0        # correction/bonus tokens delivered
     emitted: int = 0            # tokens actually delivered to requests
-    draft_dispatches: int = 0   # fused k-step draft dispatches
+    draft_dispatches: int = 0   # fused draft-tree dispatches
     verify_dispatches: int = 0  # dense verify dispatches
 
     def as_dict(self) -> Dict[str, float]:
         d: Dict[str, float] = {
             "spec_rounds": float(self.rounds),
             "spec_drafted": float(self.drafted),
+            "spec_drafted_nodes": float(self.drafted_nodes),
             "spec_accepted": float(self.accepted),
+            "spec_corrections": float(self.corrections),
             "spec_emitted": float(self.emitted),
         }
         d["spec_accept_rate"] = (self.accepted / self.drafted
                                  if self.drafted else 0.0)
         d["spec_tokens_per_verify"] = (self.emitted / self.verify_dispatches
                                        if self.verify_dispatches else 0.0)
+        # accepted DRAFT tokens per verify dispatch (excludes the free
+        # bonus/correction token): the draft-shape figure of merit —
+        # trees beat chains here or they are not paying for their width
+        d["spec_accepted_per_verify"] = (self.accepted
+                                         / self.verify_dispatches
+                                         if self.verify_dispatches else 0.0)
         return d
 
     def reset(self):
-        self.rounds = self.drafted = self.accepted = self.emitted = 0
+        self.rounds = self.drafted = self.drafted_nodes = 0
+        self.accepted = self.corrections = self.emitted = 0
         self.draft_dispatches = self.verify_dispatches = 0
 
 
 def draft_block_paged(params, cfg, cache, tokens, seq_lens, page_tables,
-                      k: int, *, mesh=None, expert_mask=None):
-    """Draft ``k`` greedy tokens per lane in one dispatch.
+                      k: int, *, n_branches: int = 1, mesh=None,
+                      expert_mask=None, base_key=None, temps=None,
+                      rids=None, counts=None):
+    """Draft a ``n_branches`` x ``k`` token tree per lane in one dispatch.
 
     tokens [B, 1] int32 — each lane's last emitted token; seq_lens [B] —
-    valid rows per lane (token 0 is written at row ``seq_lens[b]``);
-    page_tables [B, max_pages].  Runs ``k`` chained ``decode_step_paged``
-    steps (``k`` is a static python int, so jit unrolls the chain into a
-    single dispatch), each writing the drafter's K/V at the next row —
-    scratch writes the verifier overwrites.
+    valid rows per lane (the anchor is written at row ``seq_lens[b]``);
+    page_tables [B, max_pages].  The anchor step runs once; each branch
+    then chains ``k-1`` ``decode_step_paged`` steps (static python loops,
+    so jit fuses the whole tree into a single dispatch), writing scratch
+    K/V at rows ``[n+1, n+k)`` — later branches overwrite earlier ones,
+    which is safe because the verifier rewrites every attended row.
 
-    Returns ``(draft [B, k] int32, new_cache)``.  Drafting is always
-    greedy: spec mode serves greedy requests only (the engine rejects
-    ``temperature > 0`` at submit), so draft sampling needs no RNG.
+    Branch roots: greedy lanes take the drafter's top-``n_branches``
+    tokens (distinct, so at most one root can match the dense argmax);
+    sampled lanes draw each root independently from the drafter's
+    root distribution at the lane temperature.  Branch 0's proposal
+    noise is the ROLE_TARGET stream at the proposed token's index
+    (``counts + depth - 1``) — identical to what plain sampling would
+    draw — and branches ``i >= 1`` use the ROLE_BRANCH stream, keeping
+    all proposals mutually independent.  With ``base_key=None`` (or
+    ``temps=None``) drafting is purely greedy, as in greedy-only spec.
+
+    Returns ``(draft [B, N, k] int32, draft_logits [B, N, k, vocab]
+    float32, new_cache)`` — ``draft_logits[:, i, j]`` is the drafter's
+    logits *predicting* branch ``i``'s depth ``j+1`` token (row ``j=0``
+    is the shared root prediction), the ``q`` of the accept ratio.
     """
-    draft = []
-    tok = tokens
-    for j in range(k):
-        logits, cache = decode_step_paged(
-            params, cfg, cache, tok, seq_lens + j, page_tables,
-            mesh=mesh, expert_mask=expert_mask)
-        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1
-                         ).astype(jnp.int32)[:, None]
-        draft.append(tok[:, 0])
-    return jnp.stack(draft, axis=1), cache
+    B = tokens.shape[0]
+    V = cfg.vocab
+    N = n_branches
+    sampled = base_key is not None and temps is not None
+    logits0, cache = decode_step_paged(
+        params, cfg, cache, tokens, seq_lens, page_tables,
+        mesh=mesh, expert_mask=expert_mask)
+    lg0 = logits0[:, :V].astype(jnp.float32)
+    if N == 1:
+        top_roots = jnp.argmax(lg0, axis=-1).astype(jnp.int32)[:, None]
+    else:
+        top_roots = jax.lax.top_k(lg0, N)[1].astype(jnp.int32)   # [B,N]
+    if sampled:
+        tclip = jnp.maximum(temps, 1e-6)[:, None]
+    draft_tokens, draft_logits = [], []
+    for i in range(N):
+        if sampled:
+            keys = _lane_keys(base_key, rids, counts)
+            g = (_role_gumbel(keys, ROLE_TARGET, V) if i == 0
+                 else _role_gumbel(keys, ROLE_BRANCH, V, fold=i))
+            samp = jnp.argmax(lg0 / tclip + g, axis=-1)
+            root = jnp.where(temps > 0, samp,
+                             top_roots[:, i]).astype(jnp.int32)
+        else:
+            root = top_roots[:, i]
+        toks, lgs = [root], [lg0]
+        tok = root[:, None]
+        for j in range(1, k):
+            lg_j, cache = decode_step_paged(
+                params, cfg, cache, tok, seq_lens + j, page_tables,
+                mesh=mesh, expert_mask=expert_mask)
+            lg_j = lg_j[:, :V].astype(jnp.float32)
+            greedy_j = jnp.argmax(lg_j, axis=-1).astype(jnp.int32)
+            if sampled:
+                keys = _lane_keys(base_key, rids, counts + j)
+                g = (_role_gumbel(keys, ROLE_TARGET, V) if i == 0
+                     else _role_gumbel(keys, ROLE_BRANCH, V, fold=i))
+                samp = jnp.argmax(lg_j / tclip + g, axis=-1)
+                nxt = jnp.where(temps > 0, samp, greedy_j).astype(jnp.int32)
+            else:
+                nxt = greedy_j
+            toks.append(nxt)
+            lgs.append(lg_j)
+            tok = nxt[:, None]
+        draft_tokens.append(jnp.stack(toks, axis=1))
+        draft_logits.append(jnp.stack(lgs, axis=1))
+    return (jnp.stack(draft_tokens, axis=1), jnp.stack(draft_logits, axis=1),
+            cache)
+
+
+def _row(x, rows):
+    """Gather x[b, rows[b]] for x [B, W, V], rows [B] -> [B, V]."""
+    B, _, V = x.shape
+    idx = jnp.broadcast_to(rows[:, None, None], (B, 1, V))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+def _col(x, cols):
+    """Gather x[b, cols[b]] for x [B, W], cols [B] -> [B]."""
+    return jnp.take_along_axis(x, cols[:, None], axis=1)[:, 0]
+
+
+def _probs(lg, temps):
+    """[B, V] logits -> temperature softmax (stable at temp -> 0)."""
+    return jax.nn.softmax(lg / jnp.maximum(temps, 1e-6)[:, None], axis=-1)
+
+
+def _residual(r, q):
+    """Normalized rejection residual ``norm(max(r - q, 0))``."""
+    res = jnp.maximum(r - q, 0.0)
+    return res / jnp.maximum(res.sum(axis=-1, keepdims=True), _EPS)
+
+
+def _categorical(r, keys, role, fold):
+    """Exact sample from distribution rows ``r`` [B, V] via gumbel-max."""
+    g = _role_gumbel(keys, role, r.shape[-1]) if fold is None else \
+        _role_gumbel(keys, role, r.shape[-1], fold=fold)
+    return jnp.argmax(jnp.log(jnp.maximum(r, _EPS)) + g,
+                      axis=-1).astype(jnp.int32)
+
+
+def accept_block(logits, block, draft_logits, temps, base_key, rids, counts,
+                 n_branches: int, k: int, vocab: int):
+    """In-dispatch accept/resample decision for one verified spec block.
+
+    logits [B, W, Vp] — dense verifier logits over the tree block;
+    block [B, W] — the block tokens (anchor + branch tokens);
+    draft_logits [B, N, k, V] — drafter logits at every tree node;
+    temps / rids / counts [B] — per-lane temperature, request id, and
+    generated-token count at round start (the anchor is token
+    ``counts-1``, so branch depth ``d`` proposes token ``counts+d-1``).
+
+    Greedy lanes (``temps == 0``): the winner is the branch with the
+    longest prefix matching the dense argmax (roots are distinct, so at
+    most one branch accepts its root) and the correction/bonus is the
+    dense argmax after the accepted prefix — for ``n_branches == 1``
+    this is bit-for-bit the classic greedy chain acceptance.
+
+    Sampled lanes run exact speculative sampling:
+
+    * **roots** (SpecInfer multi-round): residual starts at the dense
+      ``p``; root ``i`` (a sample from the drafter's ``q_root``) is
+      accepted with prob ``min(1, r_i(x)/q_root(x))``, else
+      ``r_{i+1} = norm(max(r_i - q_root, 0))``; if every root is
+      rejected the correction is drawn from the final residual.
+    * **winner chain** (Leviathan): depth-``d`` token ``x ~ q_d`` is
+      accepted with prob ``min(1, p_d(x)/q_d(x))``; the first rejection
+      draws the correction from ``norm(max(p_d - q_d, 0))``; a fully
+      accepted branch draws the bonus from the dense distribution with
+      the ROLE_TARGET noise plain sampling would have used for that
+      token index — which is why a perfect drafter's spec stream equals
+      the plain sampled stream per ``(seed, rid)``.
+
+    Returns ``(winner [B], accept [B] in 0..k, next_token [B])``.
+    """
+    V = vocab
+    N = n_branches
+    B = block.shape[0]
+    lg = logits[..., :V].astype(jnp.float32)
+
+    # --- greedy path (temps == 0): longest argmax-matching branch ------
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)          # [B, W]
+    acc_by_branch = []
+    for i in range(N):
+        pred_rows = [0] + [1 + i * k + j for j in range(k - 1)]
+        preds = jnp.stack([greedy[:, r] for r in pred_rows], axis=1)
+        toks = block[:, 1 + i * k: 1 + i * k + k]
+        match = (preds == toks).astype(jnp.int32)
+        acc_by_branch.append(jnp.cumprod(match, axis=1).sum(axis=1))
+    acc_g = jnp.stack(acc_by_branch, axis=1)                    # [B, N]
+    win_g = jnp.argmax(acc_g, axis=1).astype(jnp.int32)
+    a_g = jnp.max(acc_g, axis=1).astype(jnp.int32)
+    nrow_g = jnp.where(a_g == 0, 0, 1 + win_g * k + a_g - 1)
+    next_g = _col(greedy, nrow_g)
+
+    # --- sampled path: rejection sampling with residual resampling -----
+    keys0 = _lane_keys(base_key, rids, counts)
+    p_anchor = _probs(lg[:, 0], temps)
+    q_root = _probs(draft_logits[:, 0, 0], temps)
+    r_cur = p_anchor
+    root_ok = jnp.zeros((B,), bool)
+    win_s = jnp.zeros((B,), jnp.int32)
+    for i in range(N):
+        x = block[:, 1 + i * k]
+        u = _role_uniform(keys0, ROLE_ACCEPT, i)
+        ratio = _col(r_cur, x) / jnp.maximum(_col(q_root, x), _EPS)
+        ok = u < jnp.minimum(1.0, ratio)
+        newly = ok & ~root_ok
+        win_s = jnp.where(newly, i, win_s)
+        # rejected rounds shrink the residual by this root's proposal q
+        r_cur = jnp.where((root_ok | ok)[:, None], r_cur,
+                          _residual(r_cur, q_root))
+        root_ok = root_ok | ok
+    next_s = _categorical(r_cur, keys0, ROLE_RESIDUAL, None)
+    acc_s = root_ok.astype(jnp.int32)
+    # winner-branch drafter logits [B, k, V]
+    dlg_w = jnp.take_along_axis(
+        draft_logits,
+        jnp.broadcast_to(win_s[:, None, None, None], (B, 1, k, V)),
+        axis=1)[:, 0]
+    alive = root_ok
+    for d in range(2, k + 1):
+        keys_d = _lane_keys(base_key, rids, counts + d - 1)
+        p_d = _probs(_row(lg, 1 + win_s * k + (d - 2)), temps)
+        q_d = _probs(dlg_w[:, d - 1], temps)
+        x = _col(block, 1 + win_s * k + (d - 1))
+        u = _role_uniform(keys_d, ROLE_ACCEPT, 0)
+        ratio = _col(p_d, x) / jnp.maximum(_col(q_d, x), _EPS)
+        ok = u < jnp.minimum(1.0, ratio)
+        corr_d = _categorical(_residual(p_d, q_d), keys_d, ROLE_RESIDUAL,
+                              None)
+        next_s = jnp.where(alive & ~ok, corr_d, next_s)
+        acc_s = acc_s + (alive & ok).astype(jnp.int32)
+        alive = alive & ok
+    # fully accepted branch: bonus token from the dense distribution with
+    # the exact ROLE_TARGET noise plain sampling uses for token counts+k
+    keys_b = _lane_keys(base_key, rids, counts + k)
+    lg_b = _row(lg, 1 + win_s * k + k - 1)
+    g = _role_gumbel(keys_b, ROLE_TARGET, V)
+    bonus = jnp.argmax(lg_b / jnp.maximum(temps, 1e-6)[:, None] + g,
+                       axis=-1).astype(jnp.int32)
+    next_s = jnp.where(alive, bonus, next_s)
+
+    sampled = temps > 0
+    winner = jnp.where(sampled, win_s, win_g)
+    accept = jnp.where(sampled, acc_s, a_g)
+    next_tok = jnp.where(sampled, next_s, next_g)
+    return winner, accept, next_tok
+
+
+def _compact_winner(cache, page_tables, seq_lens, winner, k: int):
+    """Copy the winner branch's K/V rows onto the canonical chain rows.
+
+    After verify, branch ``w``'s depth-``j`` K/V sits at cache row
+    ``n + 1 + w*k + (j-1)``; the lane's history must instead be the
+    contiguous rows ``n+1 .. n+k``.  Gather/scatter the ``k`` winner
+    rows per lane inside the dispatch (a no-op when ``w == 0``).  Rows
+    past the accepted prefix are rolled back and rewritten before they
+    can be attended, so copying all ``k`` rows unconditionally is safe.
+    """
+    B = seq_lens.shape[0]
+    kc, vc = cache["k"], cache["v"]
+    L, n_pages, ps = kc.shape[0], kc.shape[1], kc.shape[2]
+    j = jnp.arange(k)
+    src = seq_lens[:, None] + 1 + winner[:, None] * k + j[None]   # [B,k]
+    dst = seq_lens[:, None] + 1 + j[None]
+    b_idx = jnp.arange(B)[:, None]
+    sflat = page_tables[b_idx, src // ps] * ps + src % ps
+    dflat = page_tables[b_idx, dst // ps] * ps + dst % ps
+    kf = kc.reshape(L, n_pages * ps, *kc.shape[3:])
+    vf = vc.reshape(L, n_pages * ps, *vc.shape[3:])
+    kf = kf.at[:, dflat].set(kf[:, sflat])
+    vf = vf.at[:, dflat].set(vf[:, sflat])
+    return {"k": kf.reshape(kc.shape), "v": vf.reshape(vc.shape)}
+
+
+def _verify_and_accept(params, cfg, cache, block, seq_lens, page_tables,
+                       draft_logits, temps, rids, counts, base_key,
+                       n_branches: int, k: int, *, mesh=None,
+                       depth=None, allow_block=None):
+    """One fused dispatch: dense verify + accept/resample + compaction.
+
+    ``accept_block`` is looked up as a module global at trace time so
+    tests can monkeypatch a deliberately-biased accept rule and prove
+    the statistical oracle catches it.
+    """
+    _, _, logits, cache = verify_step_paged(
+        params, cfg, cache, block, seq_lens, page_tables, mesh=mesh,
+        depth=depth, allow_block=allow_block)
+    winner, accept, next_tok = accept_block(
+        logits, block, draft_logits, temps, base_key, rids, counts,
+        n_branches, k, cfg.vocab)
+    if n_branches > 1:
+        cache = _compact_winner(cache, page_tables, seq_lens, winner, k)
+    return winner, accept, next_tok, cache
 
 
 class SpeculativeDecoder:
@@ -108,65 +454,101 @@ class SpeculativeDecoder:
     two param sets: ``engine.draft_params`` (pruned — ``weight_masks``
     applied, ``expert_mask`` threaded into draft dispatches only) and
     ``engine.params`` (dense, used by prefill and verify).
+
+    ``n_branches`` (the engine's ``spec_tree``) widens the chain draft
+    to a token tree branching at the first draft position; ``seed``
+    must match the engine's so spec and plain sampling share one
+    per-request key-chain universe.
     """
 
     def __init__(self, cfg, k: int, mesh=None, draft_expert_mask=None,
-                 donate=()):
+                 donate=(), n_branches: int = 1, seed: int = 0):
         self.cfg = cfg
         self.k = k
+        self.n_branches = n_branches
         self.stats = SpecStats()
+        self.base_key = jax.random.PRNGKey(seed)
         em = draft_expert_mask
+        base = self.base_key
+        if n_branches == 1:
+            depth_dev = allow_dev = None          # chain: positions == rows
+        else:
+            depth_np, allow_np = tree_layout(n_branches, k)
+            depth_dev = jnp.asarray(depth_np)
+            allow_dev = jnp.asarray(allow_np)
         self._draft = jax.jit(
-            lambda p, c, t, sl, tbl: draft_block_paged(
-                p, cfg, c, t, sl, tbl, k, mesh=mesh, expert_mask=em),
+            lambda p, c, t, sl, tbl, temps, rids, ms: draft_block_paged(
+                p, cfg, c, t, sl, tbl, k, n_branches=n_branches, mesh=mesh,
+                expert_mask=em, base_key=base, temps=temps, rids=rids,
+                counts=ms),
             donate_argnums=donate)
         self._verify = jax.jit(
-            lambda p, c, t, sl, tbl: verify_step_paged(
-                p, cfg, c, t, sl, tbl, mesh=mesh),
+            lambda p, c, blk, sl, tbl, dlg, temps, rids, ms:
+            _verify_and_accept(
+                p, cfg, c, blk, sl, tbl, dlg, temps, rids, ms, base,
+                n_branches, k, mesh=mesh, depth=depth_dev,
+                allow_block=allow_dev),
             donate_argnums=donate)
 
     def decode_round(self, engine):
-        """One speculative round for every active lane: fused k-token
-        draft dispatch, one dense verify dispatch, then per-lane
-        acceptance, termination, and rollback bookkeeping."""
+        """One speculative round for every active lane: fused draft-tree
+        dispatch, one dense verify+accept dispatch, then per-lane
+        delivery, termination, and rollback bookkeeping."""
         sched, cache = engine.scheduler, engine.cache
         active = list(sched.active.values())
-        k = self.k
+        k, N = self.k, self.n_branches
         B = cache.n_slots
         last = np.zeros((B, 1), np.int32)
+        temps = np.zeros(B, np.float32)
+        rids = np.zeros(B, np.int32)
+        ms = np.zeros(B, np.int32)
         for st in active:
             # a fully-cached (prefix-cache) admission has no tokens yet:
             # replay its last prompt token as the block anchor
             last[st.slot, 0] = (st.tokens[-1] if st.tokens
                                 else st.replay_token)
+            temps[st.slot] = st.req.temperature
+            rids[st.slot] = st.rid
+            ms[st.slot] = len(st.tokens)
         last_dev = sanitizer.device_view(last)
         seq = cache.seq_lens_device()
         tbl = cache.page_table_device()
-        draft, cache.tree = self._draft(engine.draft_params, cache.tree,
-                                        last_dev, seq, tbl)
-        block = jnp.concatenate([last_dev, draft], axis=1)    # [B, k+1]
-        accept_len, next_tok, _, cache.tree = self._verify(
-            engine.params, cache.tree, block, seq, tbl)
+        temps_d = jnp.asarray(temps)
+        rids_d = jnp.asarray(rids)
+        ms_d = jnp.asarray(ms)
+        draft, dlg, cache.tree = self._draft(
+            engine.draft_params, cache.tree, last_dev, seq, tbl,
+            temps_d, rids_d, ms_d)
+        block = jnp.concatenate([last_dev, draft.reshape(B, N * k)], axis=1)
+        winner, accept, next_tok, cache.tree = self._verify(
+            engine.params, cache.tree, block, seq, tbl, dlg,
+            temps_d, rids_d, ms_d)
         engine.decode_dispatches += 2          # 1 fused draft + 1 verify
         self.stats.rounds += 1
         self.stats.draft_dispatches += 1
         self.stats.verify_dispatches += 1
         draft_np = np.asarray(draft)
-        a_np = np.asarray(accept_len)
+        w_np = np.asarray(winner)
+        a_np = np.asarray(accept)
         n_np = np.asarray(next_tok)
         now = time.monotonic()
         for st in active:
             b = st.slot
             a = int(a_np[b])
-            emit = [int(t) for t in draft_np[b, :a]] + [int(n_np[b])]
+            w = int(w_np[b])
+            emit = [int(t) for t in draft_np[b, w, :a]] + [int(n_np[b])]
             self.stats.drafted += k
-            self.stats.accepted += a
+            self.stats.drafted_nodes += N * k
             n0 = int(cache.seq_lens[b])
-            # verify wrote rows [n0, n0+k]; advance over the whole block,
-            # then roll the rejected suffix back (`emit` beyond the
-            # request's own termination is dropped by on_tokens)
-            cache.advance(b, k + 1)
+            # verify wrote rows [n0, n0+N*k] and compaction put the
+            # winner branch at rows [n0+1, n0+k]; advance over the whole
+            # block, then roll the rejected suffix back (`emit` beyond
+            # the request's own termination is dropped by on_tokens)
+            cache.advance(b, 1 + N * k)
             consumed, finished = sched.on_tokens(st.rid, emit, now)
+            delivered = min(consumed, a)
+            self.stats.accepted += delivered
+            self.stats.corrections += consumed - delivered
             self.stats.emitted += consumed
             if finished:
                 cache.release(b)

@@ -6,6 +6,8 @@ assert "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
     "tests must not run under the dry-run XLA_FLAGS"
 
 import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
@@ -16,3 +18,53 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "stress: randomized/property stress tests (separate CI job)")
+    config.addinivalue_line(
+        "markers",
+        "stats: statistical tests with explicit alpha/n (tests/stats.py); "
+        "fixed-seed subset runs in test-fast, REPRO_STATS_WIDE=1 widens "
+        "the seed matrix in the stress job; `make test-stats` runs them "
+        "alone")
+
+
+def pytest_collection_modifyitems(config, items):
+    """Fail collection if an unmarked test uses tests/stats.py.
+
+    Every statistical claim must be auditable through the ``stats``
+    marker (so CI can run/report them as a family and the fast job can
+    keep a fixed-seed subset).  A test function that references names
+    imported from ``stats`` without carrying ``@pytest.mark.stats`` is a
+    collection error, not a silent pass.
+    """
+    offenders = []
+    for item in items:
+        mod = getattr(item, "module", None)
+        fn = getattr(item, "function", None)
+        if mod is None or fn is None:
+            continue
+        stats_names = {
+            name for name, val in vars(mod).items()
+            if getattr(val, "__module__", None) == "stats"
+            or getattr(val, "__name__", None) == "stats"
+        }
+        if not stats_names:
+            continue
+        used = stats_names & set(fn.__code__.co_names)
+        if used and item.get_closest_marker("stats") is None:
+            offenders.append(f"{item.nodeid} (uses {sorted(used)})")
+    if offenders:
+        raise pytest.UsageError(
+            "tests using tests/stats.py must be marked @pytest.mark.stats:\n"
+            + "\n".join(f"  {o}" for o in offenders))
+
+
+@pytest.fixture()
+def seeded_tokens():
+    """Deterministic token-id generator for statistical suites.
+
+    Returns ``make(seed, n, vocab)`` -> np.int32 [n]; same (seed, n,
+    vocab) always yields the same prompt, independent of call order.
+    """
+    def make(seed: int, n: int, vocab: int) -> np.ndarray:
+        rs = np.random.RandomState(seed)
+        return rs.randint(0, vocab, size=n).astype(np.int32)
+    return make

@@ -1,0 +1,261 @@
+"""Shared statistical test helpers: exact binomial + χ² with explicit α.
+
+The speculative-sampling equivalence oracle can only pin correctness
+*statistically* — rejection sampling is exactly distribution-preserving,
+so spec-sampled token frequencies must be indistinguishable from plain
+temperature sampling, and a deliberately-biased accept rule must be
+distinguishable.  Tests that hand-roll tolerances drift and hide their
+false-positive rate; these helpers make every statistical claim carry an
+explicit significance level ``alpha`` and sample size ``n``.
+
+Stdlib-only math (``math.lgamma`` + incomplete-gamma series/continued
+fraction) — CI does not ship scipy.
+
+Every test that uses this module must be marked ``@pytest.mark.stats``;
+conftest fails collection otherwise (see ``pytest_collection_modifyitems``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "chi2_sf",
+    "chi2_gof",
+    "chi2_homogeneity",
+    "binom_pvalue_two_sided",
+    "binom_sf",
+    "assert_same_distribution",
+    "assert_matches_probs",
+    "assert_binom_fraction",
+]
+
+
+# ---------------------------------------------------------------------------
+# special functions (Numerical-Recipes-style incomplete gamma)
+# ---------------------------------------------------------------------------
+
+
+def _gammainc_q(s: float, x: float) -> float:
+    """Regularized upper incomplete gamma Q(s, x) = Γ(s, x)/Γ(s)."""
+    if s <= 0.0 or x < 0.0:
+        raise ValueError(f"gammainc_q domain: s={s}, x={x}")
+    if x == 0.0:
+        return 1.0
+    if x < s + 1.0:
+        # lower series for P(s, x); Q = 1 - P
+        term = 1.0 / s
+        total = term
+        denom = s
+        for _ in range(10_000):
+            denom += 1.0
+            term *= x / denom
+            total += term
+            if abs(term) < abs(total) * 1e-16:
+                break
+        p = total * math.exp(-x + s * math.log(x) - math.lgamma(s))
+        return min(1.0, max(0.0, 1.0 - p))
+    # modified Lentz continued fraction for Q(s, x)
+    tiny = 1e-300
+    b = x + 1.0 - s
+    c = 1.0 / tiny
+    d = 1.0 / b
+    h = d
+    for i in range(1, 10_000):
+        an = -i * (i - s)
+        b += 2.0
+        d = an * d + b
+        if abs(d) < tiny:
+            d = tiny
+        c = b + an / c
+        if abs(c) < tiny:
+            c = tiny
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < 1e-16:
+            break
+    return min(1.0, max(0.0, h * math.exp(-x + s * math.log(x)
+                                          - math.lgamma(s))))
+
+
+def chi2_sf(x: float, df: float) -> float:
+    """χ² survival function P[X >= x] for ``df`` degrees of freedom."""
+    if x <= 0.0:
+        return 1.0
+    return _gammainc_q(df / 2.0, x / 2.0)
+
+
+# ---------------------------------------------------------------------------
+# exact binomial tests
+# ---------------------------------------------------------------------------
+
+
+def _binom_logpmf(n: int) -> np.ndarray:
+    i = np.arange(n + 1, dtype=np.float64)
+    lgamma = np.vectorize(math.lgamma)
+    return lgamma(n + 1.0) - lgamma(i + 1.0) - lgamma(n - i + 1.0)
+
+
+def binom_pvalue_two_sided(k: int, n: int, p: float) -> float:
+    """Exact two-sided binomial test of H0: success prob == ``p``.
+
+    Sums P(X = i) over every outcome no more likely than the observed
+    ``k`` (the scipy ``binomtest`` convention, relative tolerance 1e-7).
+    """
+    if not 0 <= k <= n:
+        raise ValueError(f"k={k} outside [0, {n}]")
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"p={p} outside [0, 1]")
+    if p == 0.0:
+        return 1.0 if k == 0 else 0.0
+    if p == 1.0:
+        return 1.0 if k == n else 0.0
+    i = np.arange(n + 1, dtype=np.float64)
+    logpmf = (_binom_logpmf(n) + i * math.log(p)
+              + (n - i) * math.log1p(-p))
+    pmf = np.exp(logpmf)
+    return float(min(1.0, pmf[pmf <= pmf[k] * (1.0 + 1e-7)].sum()))
+
+
+def binom_sf(k: int, n: int, p: float) -> float:
+    """One-sided exact binomial P[X >= k] under success prob ``p``."""
+    if not 0 <= k <= n:
+        raise ValueError(f"k={k} outside [0, {n}]")
+    if p <= 0.0:
+        return 1.0 if k == 0 else 0.0
+    if p >= 1.0:
+        return 1.0
+    i = np.arange(n + 1, dtype=np.float64)
+    logpmf = (_binom_logpmf(n) + i * math.log(p)
+              + (n - i) * math.log1p(-p))
+    return float(min(1.0, np.exp(logpmf[k:]).sum()))
+
+
+# ---------------------------------------------------------------------------
+# χ² goodness-of-fit / homogeneity with small-bin merging
+# ---------------------------------------------------------------------------
+
+
+def _merge_bins(rows: np.ndarray, expected: np.ndarray,
+                min_expected: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge low-expectation bins into one pooled bin.
+
+    ``rows`` [R, V] observed counts, ``expected`` [R, V] — bins whose
+    expected count falls below ``min_expected`` in ANY row are pooled
+    (standard Cochran guard: χ²'s asymptotics need E >= ~5 per cell).
+    Returns merged ``(rows [R, V'], expected [R, V'])``.
+    """
+    ok = (expected >= min_expected).all(axis=0)
+    keep_r = rows[:, ok]
+    keep_e = expected[:, ok]
+    if (~ok).any():
+        pool_r = rows[:, ~ok].sum(axis=1, keepdims=True)
+        pool_e = expected[:, ~ok].sum(axis=1, keepdims=True)
+        if (pool_e < min_expected).any() and keep_r.shape[1] > 0:
+            # pooled leftover still too small: fold it into the smallest
+            # kept bin instead of giving it its own cell
+            j = int(keep_e[0].argmin())
+            keep_r = keep_r.copy()
+            keep_e = keep_e.copy()
+            keep_r[:, j] += pool_r[:, 0]
+            keep_e[:, j] += pool_e[:, 0]
+        else:
+            keep_r = np.concatenate([keep_r, pool_r], axis=1)
+            keep_e = np.concatenate([keep_e, pool_e], axis=1)
+    return keep_r, keep_e
+
+
+def chi2_gof(counts: Sequence[int], probs: Sequence[float],
+             min_expected: float = 5.0) -> Tuple[float, int, float]:
+    """χ² goodness-of-fit of observed ``counts`` against ``probs``.
+
+    Returns ``(stat, df, pvalue)`` after merging bins with expected
+    count < ``min_expected``.  ``df = bins - 1``.
+    """
+    obs = np.asarray(counts, np.float64)[None]
+    probs = np.asarray(probs, np.float64)
+    if probs.min() < 0 or not math.isclose(probs.sum(), 1.0, rel_tol=1e-6):
+        raise ValueError("probs must be a distribution")
+    exp = (obs.sum() * probs)[None]
+    obs, exp = _merge_bins(obs, exp, min_expected)
+    if obs.shape[1] < 2:
+        return 0.0, 0, 1.0
+    stat = float(((obs - exp) ** 2 / exp).sum())
+    df = obs.shape[1] - 1
+    return stat, df, chi2_sf(stat, df)
+
+
+def chi2_homogeneity(counts_a: Sequence[int], counts_b: Sequence[int],
+                     min_expected: float = 5.0) -> Tuple[float, int, float]:
+    """Two-sample χ² homogeneity test over shared bins.
+
+    ``counts_a`` / ``counts_b`` are observed frequencies over the same
+    support (e.g. next-token histograms from two engines).  Expected
+    cell counts come from the pooled distribution; bins expected below
+    ``min_expected`` in either sample are merged.  Returns
+    ``(stat, df, pvalue)`` with ``df = bins - 1`` (a 2 x V table).
+    """
+    a = np.asarray(counts_a, np.float64)
+    b = np.asarray(counts_b, np.float64)
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    rows = np.stack([a, b])
+    n_a, n_b = a.sum(), b.sum()
+    if n_a == 0 or n_b == 0:
+        raise ValueError("empty sample")
+    pooled = (a + b) / (n_a + n_b)
+    exp = np.stack([pooled * n_a, pooled * n_b])
+    live = pooled > 0
+    rows, exp = rows[:, live], exp[:, live]
+    rows, exp = _merge_bins(rows, exp, min_expected)
+    if rows.shape[1] < 2:
+        return 0.0, 0, 1.0
+    stat = float(((rows - exp) ** 2 / exp).sum())
+    df = rows.shape[1] - 1
+    return stat, df, chi2_sf(stat, df)
+
+
+# ---------------------------------------------------------------------------
+# assertion helpers — every claim names its alpha and n
+# ---------------------------------------------------------------------------
+
+
+def assert_same_distribution(counts_a, counts_b, *, alpha: float,
+                             what: str = "") -> float:
+    """Assert two frequency histograms are statistically indistinguishable
+    (χ² homogeneity, significance ``alpha``).  Returns the p-value."""
+    n_a = int(np.asarray(counts_a).sum())
+    n_b = int(np.asarray(counts_b).sum())
+    stat, df, p = chi2_homogeneity(counts_a, counts_b)
+    assert p >= alpha, (
+        f"distributions differ{': ' + what if what else ''} — "
+        f"chi2={stat:.2f} df={df} p={p:.3e} < alpha={alpha} "
+        f"(n_a={n_a}, n_b={n_b})")
+    return p
+
+
+def assert_matches_probs(counts, probs, *, alpha: float,
+                         what: str = "") -> float:
+    """Assert a histogram matches a known distribution (χ² GOF)."""
+    n = int(np.asarray(counts).sum())
+    stat, df, p = chi2_gof(counts, probs)
+    assert p >= alpha, (
+        f"histogram off its distribution{': ' + what if what else ''} — "
+        f"chi2={stat:.2f} df={df} p={p:.3e} < alpha={alpha} (n={n})")
+    return p
+
+
+def assert_binom_fraction(k: int, n: int, *, p_null: float, alpha: float,
+                          what: str = "") -> float:
+    """Assert ``k`` successes out of ``n`` are significantly MORE likely
+    than the null success probability ``p_null`` (one-sided exact
+    binomial).  Returns the p-value."""
+    p = binom_sf(k, n, p_null)
+    assert p < alpha, (
+        f"fraction not above chance{': ' + what if what else ''} — "
+        f"{k}/{n} successes, one-sided binomial p={p:.3e} >= alpha={alpha} "
+        f"under p_null={p_null}")
+    return p

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import stats
 from repro.configs import get_config, reduced
 from repro.models import abstract_params, decode_step, forward, init_cache
 from repro.models import param as pm
@@ -85,6 +86,7 @@ def test_padded_geometry():
         assert mask.sum() == cfg.n_heads
 
 
+@pytest.mark.stats
 def test_f8_kv_cache_decode_close():
     """f8 cache decode should track the fp32-cache decode closely.
 
@@ -92,24 +94,34 @@ def test_f8_kv_cache_decode_close():
     after two layers the logit drift is bounded but not tiny — on a random
     tiny model the top-2 margin is often *smaller* than that drift, so
     exact argmax equality is only asserted on rows where the fp32 margin
-    decisively exceeds the worst-case drift.
+    decisively exceeds the worst-case drift.  Instead of a hand-rolled
+    "most rows agree" tolerance, overall argmax agreement over all
+    (row, step) samples is an exact one-sided binomial claim with
+    explicit alpha against a p_null=0.5 coin-flip null (chance agreement
+    for a 128-way argmax is ~1/128, so the null is conservative).
     """
     cfg = dataclasses.replace(reduced(get_config("qwen2-7b"), n_layers=2,
                                       vocab=128), dtype="float32")
     cfg8 = dataclasses.replace(cfg, kv_cache_dtype="float8_e4m3fn")
     params = jax.tree.map(lambda x: x.astype(jnp.float32),
                           pm.init_params(abstract_params(cfg), RNG))
-    B = 2
-    c0, c1 = init_cache(cfg, B, 8), init_cache(cfg8, B, 8)
+    B, T = 8, 12
+    c0, c1 = init_cache(cfg, B, T + 2), init_cache(cfg8, B, T + 2)
     assert jax.tree.leaves(c1)[0].dtype == jnp.float8_e4m3fn
-    toks = jax.random.randint(RNG, (B, 6), 0, cfg.vocab)
-    for t in range(6):
+    toks = jax.random.randint(RNG, (B, T), 0, cfg.vocab)
+    agree, n_samples, snap = 0, 0, None
+    for t in range(T):
         l0, c0 = decode_step(params, cfg, c0, toks[:, t: t + 1], jnp.int32(t))
         l1, c1 = decode_step(params, cfg8, c1, toks[:, t: t + 1],
                              jnp.int32(t))
-    a, b = np.asarray(l0), np.asarray(l1)
+        a, b = np.asarray(l0), np.asarray(l1)
+        assert np.isfinite(b).all()
+        agree += int((np.argmax(a, -1) == np.argmax(b, -1)).sum())
+        n_samples += B
+        if t == 5:          # e4m3 drift compounds with context length —
+            snap = (a, b)   # the bounded-drift claim is pinned at step 6
+    a, b = snap
     drift = float(np.max(np.abs(a - b)))
-    assert np.isfinite(b).all()
     assert drift < 1.5, drift
     for i in range(B):
         cos = float(np.dot(a[i], b[i])
@@ -118,3 +130,5 @@ def test_f8_kv_cache_decode_close():
         top2 = np.sort(a[i])[-2:]
         if top2[1] - top2[0] > 2 * drift:      # decisive margin
             assert int(np.argmax(a[i])) == int(np.argmax(b[i]))
+    stats.assert_binom_fraction(agree, n_samples, p_null=0.5, alpha=1e-3,
+                                what="f8 vs fp32 argmax agreement")

@@ -201,6 +201,66 @@ def test_spec_engine_stress_rollback_keeps_invariants(moe):
     assert st["spec_emitted"] == sum(m for _, m in specs) - len(specs)
 
 
+@pytest.mark.stress
+def test_spec_tree_sampled_stress_keeps_invariants(moe):
+    """Tree drafts + mixed greedy/sampled temperatures + random EOS
+    under the randomized stress harness.  Sampled streams are not
+    token-comparable to plain decode, so the oracle here is the
+    SpecStats delivered-accounting invariants (emitted == accepted +
+    corrections, accepted <= drafted, drafted_nodes == N * drafted) plus
+    the page-table invariants after every step — with EOS/max_new firing
+    mid-tree-block and per-round rollback of the N*k overdraft rows.
+    Greedy lanes must still match plain decode exactly."""
+    cfg, params = moe
+    rs = np.random.RandomState(33)
+    N, k = 2, 3
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-cfg.n_experts // 4:] = 0.0
+    reqs = []
+    for _ in range(12):
+        n, m = int(rs.randint(2, 16)), int(rs.randint(1, 9))
+        temp = float(rs.choice([0.0, 0.7, 1.3]))
+        eos = int(rs.randint(0, cfg.vocab)) if rs.rand() < 0.5 else None
+        reqs.append(Request(rs.randint(0, cfg.vocab, n).astype(np.int32),
+                            m, eos_id=eos, temperature=temp))
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=3,
+                       prefill_chunk=8, page_size=8, page_budget=12,
+                       spec_decode="pruned", spec_k=k, spec_tree=N,
+                       expert_mask=mask)
+    assert spec.cache.overdraft == N * k - 1
+
+    rids = []
+    pending = list(reqs)
+    while pending or spec.busy:
+        while pending and rs.rand() < 0.6:
+            rids.append(spec.submit(pending.pop(0)))
+        spec.step()
+        _check_invariants(spec.cache)
+    outs = [spec.scheduler.result(rid) for rid in rids]
+    assert spec.cache.free_pages == spec.cache.page_budget
+    assert spec.cache.n_free == spec.cache.n_slots
+
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=3,
+                        prefill_chunk=8, page_size=8)
+    refs = plain.generate([Request(r.prompt, r.max_new_tokens,
+                                   eos_id=r.eos_id,
+                                   temperature=r.temperature)
+                           for r in reqs])
+    for r, out, ref in zip(reqs, outs, refs):
+        assert len(out) <= r.max_new_tokens
+        if r.eos_id is not None and len(out) < r.max_new_tokens:
+            assert out[-1] == r.eos_id
+        if r.temperature == 0.0:
+            # same seed, greedy: spec must reproduce plain exactly
+            np.testing.assert_array_equal(out, ref)
+
+    st = spec.latency_stats()
+    assert st["spec_emitted"] == st["spec_accepted"] + st["spec_corrections"]
+    assert st["spec_accepted"] <= st["spec_drafted"]
+    assert st["spec_drafted_nodes"] == N * st["spec_drafted"]
+    assert st["spec_emitted"] == sum(len(o) for o in outs) - len(reqs)
+
+
 def test_paged_matches_slot_windowed(moe):
     """Sliding-window dense config through both cache layouts."""
     cfg = reduced(get_config("qwen2-7b"), n_layers=2)

@@ -1,0 +1,195 @@
+"""Per-request PRNG key chains: sampled streams are schedule-invariant.
+
+The engine derives sampling noise from ``request_key(seed, rid, m)`` —
+a pure function of the engine seed, the request id, and the 0-based
+token index — with NO shared mutable key.  Consequences pinned here:
+
+  * a request's sampled stream is identical whether it runs alone or
+    packed in a batch, whatever the admission timing, lane count, or
+    prefill schedule;
+  * identity-drafter speculative decoding reproduces the plain sampled
+    stream token-for-token at any temperature (draft proposals and
+    bonus tokens consume the same ROLE_TARGET stream plain sampling
+    does, and q == p accepts everything);
+  * temperature==0 lanes in spec mode stay bit-for-bit greedy (chain
+    AND tree), even sharing a batch with sampled lanes;
+  * the OLD design — one shared key split per dispatch — fails the
+    batch-composition invariance (discrimination twin: reinstating it
+    via monkeypatch must break the test the new sampler passes).
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import Request, ServeEngine
+
+
+def _tiny_moe(seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, n_experts=8,
+                  top_k=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+def _engine(moe, **kw):
+    cfg, params = moe
+    kw.setdefault("max_len", 32)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("seed", 9)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _prompts(cfg, specs, seed=3):
+    rs = np.random.RandomState(seed)
+    return [rs.randint(0, cfg.vocab, n).astype(np.int32) for n in specs]
+
+
+def test_sampled_stream_invariant_to_batch_composition(moe):
+    """Same (seed, rid): running alone == running packed with neighbors,
+    across different lane counts."""
+    cfg, _ = moe
+    p0, p1, p2, p3 = _prompts(cfg, [6, 9, 4, 11])
+    solo = _engine(moe).generate([Request(p0, 6, temperature=0.8)])[0]
+    batched = _engine(moe).generate(
+        [Request(p0, 6, temperature=0.8), Request(p1, 5, temperature=0.5),
+         Request(p2, 7, temperature=1.2), Request(p3, 4)])
+    np.testing.assert_array_equal(solo, batched[0])
+    # fewer lanes -> different waves/slots, same rids, same streams
+    narrow = _engine(moe, max_batch=2).generate(
+        [Request(p0, 6, temperature=0.8), Request(p1, 5, temperature=0.5),
+         Request(p2, 7, temperature=1.2), Request(p3, 4)])
+    for a, b in zip(batched, narrow):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_sampled_stream_invariant_to_admission_timing(moe):
+    """Submitting mid-flight (same rids) does not perturb anyone's
+    stream — no shared key advances when a neighbor joins."""
+    cfg, _ = moe
+    p0, p1, p2 = _prompts(cfg, [6, 9, 4])
+    reqs = lambda: [Request(p0, 6, temperature=0.8),
+                    Request(p1, 6, temperature=0.6),
+                    Request(p2, 6, temperature=1.0)]
+    upfront = _engine(moe).generate(reqs())
+    eng = _engine(moe)
+    r0, r1, r2 = reqs()
+    rid0 = eng.submit(r0)
+    eng.step(); eng.step()
+    rid1 = eng.submit(r1)
+    eng.step()
+    rid2 = eng.submit(r2)
+    eng.run()
+    staggered = [eng.scheduler.result(r) for r in (rid0, rid1, rid2)]
+    for a, b in zip(upfront, staggered):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_sampled_stream_invariant_to_schedule(moe):
+    cfg, _ = moe
+    prompts = _prompts(cfg, [6, 9, 4, 11])
+    mk = lambda: [Request(p, 6, temperature=0.9) for p in prompts]
+    a = _engine(moe, schedule="interleaved").generate(mk())
+    b = _engine(moe, schedule="blocking").generate(mk())
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_spec_identity_drafter_sampled_identical_to_plain(moe):
+    """q == p: every draft accepted, and because draft proposals +
+    bonus tokens ride the ROLE_TARGET stream at the token's own index,
+    the spec sampled stream is token-identical to plain sampling — for
+    chain AND tree drafts."""
+    cfg, _ = moe
+    prompts = _prompts(cfg, [6, 4])
+    mk = lambda: [Request(prompts[0], 8, temperature=0.7),
+                  Request(prompts[1], 8, temperature=1.1)]
+    ref = _engine(moe).generate(mk())
+    for tree in (1, 2):
+        spec = _engine(moe, spec_decode="pruned", spec_k=3, spec_tree=tree)
+        outs = spec.generate(mk())
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+        assert spec.latency_stats()["spec_accept_rate"] == 1.0
+
+
+def test_temp0_lanes_stay_greedy_in_mixed_spec_batch(moe):
+    """Greedy lanes sharing a spec batch with sampled lanes stay
+    bit-for-bit identical to plain greedy decode (chain and tree,
+    disagreeing drafter)."""
+    cfg, params = moe
+    prompts = _prompts(cfg, [6, 9, 4])
+    mk = lambda: [Request(prompts[0], 8),
+                  Request(prompts[1], 8, temperature=0.7),
+                  Request(prompts[2], 8)]
+    plain = _engine(moe)
+    ref = plain.generate(mk())
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-cfg.n_experts // 4:] = 0.0
+    for tree in (1, 2):
+        spec = _engine(moe, spec_decode="pruned", spec_k=3, spec_tree=tree,
+                       expert_mask=mask)
+        outs = spec.generate(mk())
+        np.testing.assert_array_equal(outs[0], ref[0])
+        np.testing.assert_array_equal(outs[2], ref[2])
+        st = spec.latency_stats()
+        assert st["spec_emitted"] == (st["spec_accepted"]
+                                      + st["spec_corrections"])
+
+
+def _install_legacy_shared_sampler(eng, seed):
+    """Reinstate the pre-ISSUE-8 sampler: ONE engine-owned key, split
+    once per sampling dispatch — every neighbor's dispatch advances it."""
+    eng._legacy_key = jax.random.PRNGKey(seed)
+
+    def shared(self, logits, states):
+        lg = jnp.asarray(logits)[:, : self.cfg.vocab].astype(jnp.float32)
+        temps = np.zeros(lg.shape[0], np.float32)
+        for st in states:
+            idx = st.slot if lg.shape[0] > 1 else 0
+            temps[idx] = st.req.temperature
+        self._legacy_key, sub = jax.random.split(self._legacy_key)
+        g = jax.random.gumbel(sub, lg.shape, jnp.float32)
+        t = jnp.asarray(temps)
+        samp = jnp.argmax(lg / jnp.maximum(t[:, None], 1e-6) + g, axis=-1)
+        return np.asarray(
+            jnp.where(t > 0, samp, jnp.argmax(lg, axis=-1)), np.int32)
+
+    eng._sample_batch = types.MethodType(shared, eng)
+
+
+def test_shared_stream_sampler_breaks_batch_invariance(moe):
+    """Discrimination twin: with the legacy shared-key sampler patched
+    back in, the batch-composition invariance that
+    test_sampled_stream_invariant_to_batch_composition pins MUST fail —
+    proving that test discriminates the old design, not vacuously
+    passing for any sampler."""
+    cfg, _ = moe
+    p0, p1, p2 = _prompts(cfg, [6, 9, 4])
+    solo = _engine(moe)
+    _install_legacy_shared_sampler(solo, seed=9)
+    out_solo = solo.generate([Request(p0, 6, temperature=0.8)])[0]
+    batched = _engine(moe)
+    _install_legacy_shared_sampler(batched, seed=9)
+    out_batched = batched.generate(
+        [Request(p0, 6, temperature=0.8),
+         Request(p1, 6, temperature=0.6),
+         Request(p2, 6, temperature=1.0)])[0]
+    assert not np.array_equal(out_solo, out_batched), (
+        "legacy shared-stream sampler unexpectedly schedule-invariant — "
+        "the batch-composition test has no discriminating power")

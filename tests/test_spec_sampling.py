@@ -1,0 +1,207 @@
+"""Distribution-equivalence oracle for speculative sampling (ISSUE 8).
+
+Rejection-sampling verification (Leviathan accept/resample, SpecInfer
+multi-round roots for trees) is *exactly* distribution-preserving: for
+any drafter, the spec-served token stream must follow the same law as
+plain temperature sampling from the dense model.  That claim cannot be
+pinned token-by-token (acceptance consumes randomness differently), so
+it is pinned statistically:
+
+  * per-position next-token histograms over many identical-prompt
+    requests, spec vs plain, must pass a χ² homogeneity test at an
+    explicit ``alpha`` — across chain and tree drafts, all four drafter
+    flavors (perturbed dense, expert-mask, weight-mask, packed sparse),
+    and both schedules;
+  * a deliberately-biased accept rule (force-accept every draft) must
+    FAIL the same oracle — otherwise the harness has no power and the
+    equivalence tests above are vacuous.
+
+Plain and spec engines use DIFFERENT base seeds: χ² homogeneity assumes
+independent samples, and with equal seeds the identity-drafter case
+would be token-identical (dependence, not evidence).  The M requests
+share one prompt but have distinct request ids, so their streams are
+independent draws from the same per-position marginal.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import stats
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import Request, ServeEngine, speculative
+
+pytestmark = pytest.mark.stats
+
+ALPHA = 1e-3     # per-position significance for every equivalence claim
+TEMP = 0.7
+MAX_NEW = 4      # positions tested per run
+N_REQ = 288      # identical-prompt requests per histogram (36 waves of 8)
+
+
+def _tiny_moe(seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, n_experts=8,
+                  top_k=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+@pytest.fixture(scope="module")
+def drafters(moe):
+    """Engine kwargs for each drafter flavor of the oracle matrix."""
+    from repro import sparse
+    from repro.core.stun import unstructured_only
+    from repro.data.synthetic import calibration_batches
+
+    cfg, params = moe
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-cfg.n_experts // 4:] = 0.0
+    dense = jax.tree.map(lambda x: x + 0.05 * jnp.ones_like(x), params)
+    batches = calibration_batches(cfg, n_batches=2)
+    _, wmasks, _ = unstructured_only(params, cfg, batches,
+                                     target_sparsity=0.5, method="wanda")
+    _, omasks, _ = unstructured_only(params, cfg, batches,
+                                     target_sparsity=0.3, method="owl")
+    plan = sparse.plan_sparse_ffn(omasks,
+                                  sparse.ffn_weights_from_params(params, cfg),
+                                  block=(8, 8), target_block_sparsity=0.2)
+    packed, _ = sparse.pack_sparse_ffn(params, cfg, plan)
+    base_masks = dict(omasks)
+    base_masks.update(plan.element_masks())
+    return {
+        "dense": dict(draft_params=dense),
+        "expert-mask": dict(expert_mask=mask),
+        "weight-mask": dict(weight_masks=wmasks),
+        "sparse": dict(weight_masks=base_masks, sparse_weights=packed),
+    }
+
+
+def _histograms(params, cfg, prompt, *, seed, schedule="interleaved", **kw):
+    """Serve N_REQ identical-prompt sampled requests; bin next-token
+    counts per position.  Returns [MAX_NEW, vocab] int64."""
+    eng = ServeEngine(params, cfg, max_len=16, max_batch=8,
+                      prefill_chunk=8, page_size=8, seed=seed,
+                      schedule=schedule, **kw)
+    outs = eng.generate([Request(prompt, MAX_NEW, temperature=TEMP)
+                         for _ in range(N_REQ)])
+    hist = np.zeros((MAX_NEW, cfg.vocab), np.int64)
+    for out in outs:
+        assert len(out) == MAX_NEW
+        for pos, tok in enumerate(out):
+            hist[pos, int(tok)] += 1
+    return hist
+
+
+_PLAIN_CACHE = {}
+
+
+def _plain_histograms(moe, prompt, prompt_seed, schedule):
+    key = (prompt_seed, schedule)
+    if key not in _PLAIN_CACHE:
+        cfg, params = moe
+        _PLAIN_CACHE[key] = _histograms(params, cfg, prompt, seed=100,
+                                        schedule=schedule)
+    return _PLAIN_CACHE[key]
+
+
+def _assert_positions_match(plain, spec, what):
+    for pos in range(MAX_NEW):
+        stats.assert_same_distribution(
+            plain[pos], spec[pos], alpha=ALPHA,
+            what=f"{what} @ position {pos} (n={N_REQ}/engine)")
+
+
+def test_spec_chain_sampling_matches_plain(moe, drafters, seeded_tokens):
+    """Fast fixed-seed oracle: chain drafts with the expert-mask drafter
+    under the interleaved schedule vs plain sampling."""
+    cfg, params = moe
+    prompt = seeded_tokens(0, 6, cfg.vocab)
+    plain = _plain_histograms(moe, prompt, 0, "interleaved")
+    spec = _histograms(params, cfg, prompt, seed=101,
+                       spec_decode="pruned", spec_k=3,
+                       **drafters["expert-mask"])
+    _assert_positions_match(plain, spec, "chain/expert-mask")
+
+
+def test_spec_tree_sampling_matches_plain(moe, drafters, seeded_tokens):
+    """Fast fixed-seed oracle: 2-branch tree drafts with the perturbed
+    dense drafter — multi-round root rejection + winner compaction must
+    keep the served distribution pinned."""
+    cfg, params = moe
+    prompt = seeded_tokens(0, 6, cfg.vocab)
+    plain = _plain_histograms(moe, prompt, 0, "interleaved")
+    spec = _histograms(params, cfg, prompt, seed=102,
+                       spec_decode="pruned", spec_k=3, spec_tree=2,
+                       **drafters["dense"])
+    _assert_positions_match(plain, spec, "tree/dense")
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("schedule", ["interleaved", "blocking"])
+@pytest.mark.parametrize("drafter",
+                         ["dense", "expert-mask", "weight-mask", "sparse"])
+def test_spec_sampling_matrix(moe, drafters, seeded_tokens, drafter,
+                              schedule):
+    """Wide oracle matrix: {chain, tree} x every drafter flavor x both
+    schedules.  REPRO_STATS_WIDE=1 (set by the CI stress job) widens the
+    prompt-seed axis."""
+    cfg, params = moe
+    wide = os.environ.get("REPRO_STATS_WIDE", "0") == "1"
+    prompt_seeds = (0, 1) if wide else (0,)
+    for prompt_seed in prompt_seeds:
+        prompt = seeded_tokens(prompt_seed, 6, cfg.vocab)
+        plain = _plain_histograms(moe, prompt, prompt_seed, schedule)
+        for label, tree_kw in (("chain", {}), ("tree", dict(spec_tree=2))):
+            seed = 103 + prompt_seed
+            spec = _histograms(params, cfg, prompt, seed=seed,
+                               schedule=schedule, spec_decode="pruned",
+                               spec_k=3, **tree_kw, **drafters[drafter])
+            _assert_positions_match(
+                plain, spec,
+                f"{label}/{drafter}/{schedule}/prompt{prompt_seed}")
+
+
+def test_biased_accept_rule_fails_oracle(moe, seeded_tokens, monkeypatch):
+    """Discrimination power: force-accepting every draft token (the
+    classic broken 'speculative sampling' that silently serves the
+    drafter's distribution) MUST fail the same χ² oracle the equivalence
+    tests pass.  ``accept_block`` is a module-global looked up at trace
+    time precisely so this patch lands inside the jitted verify."""
+    cfg, params = moe
+    prompt = seeded_tokens(0, 6, cfg.vocab)
+    plain = _plain_histograms(moe, prompt, 0, "interleaved")
+
+    real = speculative.accept_block
+
+    def always_accept(logits, block, draft_logits, temps, base_key, rids,
+                      counts, n_branches, k, vocab):
+        winner, accept, next_tok = real(logits, block, draft_logits, temps,
+                                        base_key, rids, counts, n_branches,
+                                        k, vocab)
+        accept = jnp.where(temps > 0.0, jnp.full_like(accept, k), accept)
+        return winner, accept, next_tok
+
+    monkeypatch.setattr(speculative, "accept_block", always_accept)
+    # a strongly-perturbed drafter, k=MAX_NEW so every served position is
+    # a force-accepted draft proposal (drafter law, not dense law)
+    draft = jax.tree.map(lambda x: x + 0.25 * jnp.ones_like(x), params)
+    biased = _histograms(params, cfg, prompt, seed=104,
+                         spec_decode="pruned", spec_k=MAX_NEW,
+                         draft_params=draft)
+    pvals = [stats.chi2_homogeneity(plain[pos], biased[pos])[2]
+             for pos in range(MAX_NEW)]
+    assert min(pvals) < ALPHA, (
+        f"biased accept rule was NOT detected (p-values {pvals}) — the "
+        f"equivalence oracle has no power at n={N_REQ}, alpha={ALPHA}")

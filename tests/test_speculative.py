@@ -187,10 +187,66 @@ def test_spec_rejects_unservable(moe):
                     spec_decode="pruned")
     with pytest.raises(ValueError, match="spec_k"):
         ServeEngine(params, cfg, max_len=32, spec_decode="pruned", spec_k=0)
+    with pytest.raises(ValueError, match="spec_tree"):
+        ServeEngine(params, cfg, max_len=32, spec_decode="pruned",
+                    spec_tree=0)
     with pytest.raises(ValueError, match="spec_decode"):
         ServeEngine(params, cfg, max_len=32, spec_decode="layerdrop")
+    # sampled requests are servable in spec mode now: rejection-sampling
+    # verification preserves the dense distribution at any temperature
     spec = ServeEngine(params, cfg, max_len=32, max_batch=2,
                        prefill_chunk=8, page_size=8, spec_decode="pruned")
-    with pytest.raises(ValueError, match="greedy"):
-        spec.submit(Request(np.zeros(4, np.int32), 4, temperature=0.7))
-    assert not spec.scheduler.has_pending
+    out = spec.generate([Request(np.arange(4, dtype=np.int32), 4,
+                                 temperature=0.7)])[0]
+    assert len(out) == 4
+
+
+def test_spec_tree_greedy_identical_to_plain(moe):
+    """Tree drafts (spec_tree > 1): greedy output must STILL be
+    token-identical to plain dense decode for any drafter — the tree
+    only widens what each verify dispatch can accept."""
+    cfg, params = moe
+    reqs = _requests(cfg, SPECS)
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=3,
+                        prefill_chunk=8, page_size=8)
+    ref = plain.generate(_clone(reqs))
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-cfg.n_experts // 4:] = 0.0
+    for n_branches, k in ((2, 3), (3, 2)):
+        spec = ServeEngine(params, cfg, max_len=32, max_batch=3,
+                           prefill_chunk=8, page_size=8,
+                           spec_decode="pruned", spec_k=k,
+                           spec_tree=n_branches, expert_mask=mask)
+        assert spec.cache.overdraft == n_branches * k - 1
+        outs = spec.generate(_clone(reqs))
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+        st = spec.latency_stats()
+        assert st["spec_emitted"] == (st["spec_accepted"]
+                                      + st["spec_corrections"])
+        assert st["spec_accepted"] <= st["spec_drafted"]
+        assert st["spec_drafted_nodes"] == n_branches * st["spec_drafted"]
+        assert spec.cache.free_pages == spec.cache.page_budget
+
+
+def test_spec_tree_eos_mid_block(moe):
+    """EOS firing inside an accepted tree block terminates exactly where
+    plain decode does, and the lane's pages are fully released."""
+    cfg, params = moe
+    req = _requests(cfg, [(6, 12)])[0]
+    plain = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                        prefill_chunk=8, page_size=8)
+    ref = plain.generate([Request(req.prompt, 12)])[0]
+    eos = int(ref[5])
+    plain2 = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                         prefill_chunk=8, page_size=8)
+    ref_eos = plain2.generate([Request(req.prompt, 12, eos_id=eos)])[0]
+    spec = ServeEngine(params, cfg, max_len=32, max_batch=1,
+                       prefill_chunk=8, page_size=8,
+                       spec_decode="pruned", spec_k=3, spec_tree=2)
+    out = spec.generate([Request(req.prompt, 12, eos_id=eos)])[0]
+    np.testing.assert_array_equal(out, ref_eos)
+    st = spec.latency_stats()
+    assert st["spec_emitted"] == (st["spec_accepted"]
+                                  + st["spec_corrections"])
+    assert spec.cache.free_pages == spec.cache.page_budget

@@ -1,0 +1,100 @@
+"""The statistical harness itself: pinned special-function values and
+calibration/discrimination sanity for the helpers every ``stats``-marked
+suite builds on.  Reference numbers are standard χ²/binomial table
+values (scipy agrees to the shown precision, but CI does not ship scipy
+— stats.py is stdlib math on purpose).
+"""
+import numpy as np
+import pytest
+
+import stats
+
+pytestmark = pytest.mark.stats
+
+
+def test_chi2_sf_reference_values():
+    assert stats.chi2_sf(0.0, 5) == 1.0
+    assert stats.chi2_sf(-1.0, 5) == 1.0
+    # classic critical values: P[X >= x] for df at alpha in {.05, .01}
+    assert abs(stats.chi2_sf(3.841458820694124, 1) - 0.05) < 1e-9
+    assert abs(stats.chi2_sf(11.070497693516351, 5) - 0.05) < 1e-9
+    assert abs(stats.chi2_sf(6.634896601021213, 1) - 0.01) < 1e-9
+    # both incomplete-gamma regimes (series x < s+1, continued fraction)
+    assert abs(stats.chi2_sf(1.0, 10) - 0.9998278843700441) < 1e-12
+    assert abs(stats.chi2_sf(40.0, 10) - 1.694474393006737e-05) < 1e-15
+    # monotone in x, antitone in df direction of mass
+    xs = [stats.chi2_sf(x, 4) for x in (0.5, 1.0, 2.0, 8.0, 20.0)]
+    assert all(a > b for a, b in zip(xs, xs[1:]))
+
+
+def test_binom_two_sided_exact_values():
+    # most-likely outcome -> p = 1 (up to summation roundoff)
+    assert abs(stats.binom_pvalue_two_sided(5, 10, 0.5) - 1.0) < 1e-12
+    # extreme outcome: {0, 10} each 2^-10 -> exactly 2/1024
+    assert abs(stats.binom_pvalue_two_sided(0, 10, 0.5) - 2 / 1024) < 1e-15
+    # asymmetric null keeps exactness
+    p = stats.binom_pvalue_two_sided(9, 10, 0.2)
+    assert 0.0 < p < 1e-4
+    # degenerate nulls
+    assert stats.binom_pvalue_two_sided(0, 7, 0.0) == 1.0
+    assert stats.binom_pvalue_two_sided(3, 7, 0.0) == 0.0
+    assert stats.binom_pvalue_two_sided(7, 7, 1.0) == 1.0
+
+
+def test_binom_sf_exact_values():
+    assert abs(stats.binom_sf(0, 10, 0.5) - 1.0) < 1e-12
+    assert abs(stats.binom_sf(10, 10, 0.5) - 1 / 1024) < 1e-15
+    # complement identity: P[X >= k] + P[X <= k-1] == 1
+    total = stats.binom_sf(4, 12, 0.3) + sum(
+        np.exp(stats._binom_logpmf(12)[i] + i * np.log(0.3)
+               + (12 - i) * np.log(0.7)) for i in range(4))
+    assert abs(total - 1.0) < 1e-12
+
+
+def test_chi2_gof_calibration_and_power():
+    rs = np.random.RandomState(11)
+    probs = np.array([0.5, 0.25, 0.125, 0.0625, 0.0625])
+    counts = rs.multinomial(2000, probs)
+    stats.assert_matches_probs(counts, probs, alpha=1e-3)
+    # a clearly different distribution must be rejected at the same n
+    skew = rs.multinomial(2000, probs[::-1])
+    _, _, p = stats.chi2_gof(skew, probs)
+    assert p < 1e-6
+
+
+def test_chi2_homogeneity_calibration_and_power():
+    rs = np.random.RandomState(7)
+    probs = rs.dirichlet(np.ones(32))
+    a = rs.multinomial(1500, probs)
+    b = rs.multinomial(1500, probs)
+    stats.assert_same_distribution(a, b, alpha=1e-3, what="same source")
+    other = rs.dirichlet(np.ones(32))
+    c = rs.multinomial(1500, other)
+    _, _, p = stats.chi2_homogeneity(a, c)
+    assert p < 1e-6
+    with pytest.raises(AssertionError, match="alpha"):
+        stats.assert_same_distribution(a, c, alpha=1e-3)
+
+
+def test_small_expected_bins_are_merged():
+    # 100 samples over 64 bins: raw expected ~1.5/bin would wreck the
+    # asymptotics; merging must keep df well below bins-1 and the test
+    # calibrated
+    rs = np.random.RandomState(3)
+    probs = rs.dirichlet(np.ones(64) * 0.3)
+    a = rs.multinomial(100, probs)
+    b = rs.multinomial(100, probs)
+    stat, df, p = stats.chi2_homogeneity(a, b)
+    assert 1 <= df < 63
+    assert p >= 1e-3
+    # GOF path merges too
+    stat, df, p = stats.chi2_gof(a, probs)
+    assert 1 <= df < 63
+
+
+def test_assert_binom_fraction():
+    # 950/1000 agreements is overwhelmingly above a coin-flip null
+    stats.assert_binom_fraction(950, 1000, p_null=0.5, alpha=1e-6,
+                                what="f8 argmax agreement")
+    with pytest.raises(AssertionError, match="p_null"):
+        stats.assert_binom_fraction(510, 1000, p_null=0.5, alpha=1e-3)
