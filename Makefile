@@ -4,7 +4,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_FLAGS ?=
 
 .PHONY: test test-fast test-stress test-stats bench bench-serving \
-	example-serve docs-check lint
+	bench-slo example-serve docs-check lint
 
 # tier-1 verification (ROADMAP.md) — runs everything
 test:
@@ -40,6 +40,13 @@ bench:
 
 bench-serving:
 	$(PY) benchmarks/run.py serving
+
+# open-loop SLO harness: Poisson wall-clock arrivals, per-request
+# TTFT/TPOT attainment, QPS bisection per engine config; merges the
+# `slo` section into BENCH_serving.json and asserts attainment degrades
+# monotonically with offered load
+bench-slo:
+	$(PY) benchmarks/run.py slo
 
 example-serve:
 	$(PY) examples/serve_pruned.py

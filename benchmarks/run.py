@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
   scaling  — O(1) cost claim vs n experts (footnote 2)
   kernels  — kernel micro-benchmarks (jnp ref path on CPU)
   serving  — chunked prefill vs seed engine; dense vs pruned serving
+  slo      — open-loop wall-clock load: max sustainable QPS at SLO
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import traceback
 
 from benchmarks import (bench_fig1, bench_fig2, bench_kernels,
                         bench_kurtosis, bench_scaling, bench_serving,
-                        bench_table1, bench_table2, bench_table3)
+                        bench_slo, bench_table1, bench_table2, bench_table3)
 
 ALL = {
     "table1": bench_table1.main,
@@ -30,6 +31,7 @@ ALL = {
     "scaling": bench_scaling.main,
     "kernels": bench_kernels.main,
     "serving": bench_serving.main,
+    "slo": bench_slo.main,
 }
 
 

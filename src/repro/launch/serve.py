@@ -4,10 +4,17 @@ batched requests through the continuous-batching engine.
     python -m repro.launch.serve --arch olmoe-1b-7b --reduced \
         --checkpoint-dir /ckpt/pruned --n-requests 8 --new-tokens 16
 
+``--frontend`` serves the same requests through the asyncio streaming
+frontend (per-request token streams over the running step loop) instead
+of the synchronous batch API; ``--qps`` offers them open-loop at a
+Poisson arrival rate rather than all upfront — the wall-clock serving
+mode ``benchmarks/bench_slo.py`` measures.
+
 On hardware the engine runs under the production mesh (EP over "model");
 pruned checkpoints re-shard onto the same mesh with a smaller expert axis.
 """
 import argparse
+import asyncio
 import dataclasses
 
 import jax
@@ -15,7 +22,32 @@ import numpy as np
 
 from repro.checkpoint import restore_checkpoint
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
-from repro.serving import Request, ServeEngine
+from repro.serving import AsyncFrontend, Request, ServeEngine
+
+
+def _run_frontend(eng, reqs, qps):
+    """Stream every request through ``AsyncFrontend``; with ``qps`` the
+    clients arrive open-loop on a Poisson process instead of all at once.
+    """
+    rs = np.random.RandomState(0)
+    arrivals = (np.cumsum(rs.exponential(1.0 / qps, len(reqs)))
+                if qps else np.zeros(len(reqs)))
+
+    async def client(fe, i, req, due, outs):
+        if due > 0:
+            await asyncio.sleep(due)
+        stream = await fe.submit(req)
+        outs[i] = await stream.drain()
+
+    async def main():
+        outs = [None] * len(reqs)
+        async with AsyncFrontend(eng) as fe:
+            await asyncio.gather(*(
+                client(fe, i, r, float(a), outs)
+                for i, (r, a) in enumerate(zip(reqs, arrivals))))
+        return outs
+
+    return asyncio.run(main())
 
 
 def main():
@@ -63,6 +95,15 @@ def main():
                     help="cap trie residency below what page pressure "
                          "alone would allow (default: unlimited — the "
                          "page budget is the only bound)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the asyncio streaming frontend "
+                         "(per-request token streams, admission "
+                         "backpressure, cancel-on-disconnect) instead of "
+                         "the synchronous batch API")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="offer requests open-loop at this Poisson "
+                         "arrival rate (requires --frontend; default: "
+                         "all requests submitted upfront)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 = softmax sampling")
     ap.add_argument("--eos-id", type=int, default=None)
@@ -95,6 +136,9 @@ def main():
                          "gather kernel on TPU, bit-exact unpack "
                          "elsewhere)")
     args = ap.parse_args()
+    if args.qps is not None and not args.frontend:
+        ap.error("--qps needs --frontend (open-loop arrivals are a "
+                 "frontend property; the batch API submits upfront)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -150,9 +194,12 @@ def main():
                       prefix_cache=args.prefix_cache,
                       prefix_cache_max_pages=args.prefix_cache_max_pages,
                       **sparse_kwargs, **spec_kwargs)
-    outs = eng.generate(reqs)
+    if args.frontend:
+        outs = _run_frontend(eng, reqs, args.qps)
+    else:
+        outs = [o.tolist() for o in eng.generate(reqs)]
     for i, o in enumerate(outs):
-        print(f"req{i}: {o.tolist()}")
+        print(f"req{i}: {o}")
     stats = eng.latency_stats()
     lat = {k: f"{v * 1e3:.1f}ms" for k, v in stats.items()
            if k.endswith("_s")}

@@ -3,6 +3,7 @@ from repro.serving.engine import (  # noqa: F401
     apply_weight_masks,
     greedy_generate,
 )
+from repro.serving.frontend import AsyncFrontend, TokenStream  # noqa: F401
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401

@@ -268,6 +268,7 @@ class ServeEngine:
         self.prefill_dispatches = 0      # jitted prefill calls (bench hook)
         self.decode_dispatches = 0
         self.requests_admitted = 0
+        self.requests_canceled = 0       # cancel() calls that removed state
         self.pages_allocated = 0         # lifetime pages over all admissions
         # per-request PRNG key chains: every random draw derives from
         # (seed, rid, token-index) via speculative.request_key, so a
@@ -360,6 +361,13 @@ class ServeEngine:
         too: rejection-sampling verification keeps the emitted
         distribution exactly the dense model's at any temperature.
         """
+        self._validate(request)
+        return self.scheduler.submit(request, time.monotonic())
+
+    def _validate(self, request: Request):
+        """Raise ValueError for a request that could never be admitted —
+        shared by ``submit`` and frontends that want to reject before
+        queueing (nothing is mutated)."""
         if len(request.prompt) < 1:
             raise ValueError("empty prompt")
         total = len(request.prompt) + request.max_new_tokens
@@ -376,7 +384,46 @@ class ServeEngine:
                     f"rows at page_size="
                     f"{self.cache.page_size}) but the cache's whole page "
                     f"budget is {self.cache.page_budget}")
-        return self.scheduler.submit(request, time.monotonic())
+
+    def can_admit_now(self, request: Request) -> bool:
+        """Would ``request`` be admitted by the next ``step()`` if it sat
+        at the head of the queue — a free lane plus page headroom for its
+        whole lifetime?  A *conservative* backpressure gate for streaming
+        frontends (ignores prefix-cache sharing, which only reduces the
+        pages actually drawn): False means "hold it client-side", not
+        "submit would fail" — the FIFO admission loop copes either way."""
+        if self.cache is None:
+            return True                  # sequential fallback: no lanes
+        total = len(request.prompt) + request.max_new_tokens
+        return self.cache.can_admit(total)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort request ``rid`` at whatever stage it is in, releasing its
+        lane and page references immediately.  Returns True if state was
+        removed; False for unknown rids and — deliberately — requests
+        that already finished (their tokens belong to the caller until
+        ``result()`` collects them; cancel never destroys a completed
+        stream).
+
+        Safe at every lifecycle point the single-threaded step loop can
+        observe: **pending** (nothing allocated — just dequeued),
+        **mid-prefill** (lane + lifetime reservation released; the staged
+        prompt buffer is dropped; nothing was inserted into the prefix
+        trie, which only ever caches *fully prefilled* prompts), and
+        **decode-active** (lane released exactly like a finished
+        request — shared prefix pages decrement their refcount, private
+        pages return to the pool; in spec mode the next decode round
+        simply rebuilds its lane list without the canceled request).
+        The canceled state is marked so a late token delivery fails
+        loudly instead of resurrecting the request."""
+        stage, st = self.scheduler.cancel(rid)
+        if stage is None:
+            return False
+        self.requests_canceled += 1
+        if stage in ("prefilling", "active") and self.cache is not None:
+            self._prefills.pop(rid, None)
+            self.cache.release(st.slot)
+        return True
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
         """Batch API: submit, drain, return outputs in request order."""

@@ -1,0 +1,212 @@
+"""Asyncio streaming frontend over ``ServeEngine.submit/step``.
+
+The engine is a synchronous step machine: ``submit`` queues, ``step``
+advances every in-flight request by (at most) one schedule round, and
+tokens land in ``Scheduler`` state.  ``AsyncFrontend`` turns that into
+the thing you can point traffic at — per-request **async token
+streams** — without threads and without touching the engine's
+dispatch path:
+
+  * **one step loop** (``run()``): a single task calls ``engine.step()``
+    whenever any request is in flight, yielding to the event loop
+    between steps so arrivals submitted "while the engine runs"
+    interleave exactly like an open-loop client.  When the engine is
+    idle the loop parks on an :class:`asyncio.Event` instead of
+    spinning — a new ``submit`` wakes it.
+  * **per-request streams**: ``submit()`` returns a :class:`TokenStream`
+    whose ``async for`` yields tokens in generation order as steps
+    produce them.  The stream is push-fed from the step loop (an
+    ``asyncio.Queue`` per request), so a slow consumer never stalls the
+    engine — tokens buffer in the (bounded-by-``max_new_tokens``) queue.
+  * **backpressure**: ``submit(wait=True)`` holds the caller while the
+    engine has no admission headroom (``can_admit_now`` — free lane +
+    lifetime page reservation), waking on every request completion.
+    The cap on *queued* requests is therefore the caller count, not an
+    unbounded deque: an open-loop generator that outruns the engine
+    accumulates waiting coroutines, exactly the visible queue a load
+    bench wants to measure.
+  * **cancellation**: breaking out of the ``async for`` (client
+    disconnect) cancels the request in the engine — its lane, page
+    reservation, COW forks, and prefix-cache claims are released on the
+    next loop tick instead of decoding to ``max_new_tokens`` as a
+    zombie.  ``TokenStream.cancel()`` does the same explicitly.
+
+Everything runs on one event loop in one thread: the engine's
+numpy/cache bookkeeping needs no locking, and "cancel mid-spec-block"
+simply means the cancel lands between two decode rounds — the engine
+releases the lane before the next round rebuilds its lane list.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import AsyncIterator, Optional
+
+from repro.serving.scheduler import Request
+
+_DONE = object()          # queue sentinel: stream complete
+_CANCELED = object()      # queue sentinel: request canceled engine-side
+
+
+class TokenStream:
+    """One request's async token stream (returned by
+    ``AsyncFrontend.submit``).
+
+    ``async for tok in stream`` yields ints in generation order and ends
+    when the request finishes (EOS or ``max_new_tokens``).  Leaving the
+    loop early — ``break``, an exception, a dropped client — cancels the
+    request engine-side via the generator's ``finally``; iterating a
+    canceled stream stops cleanly at whatever was already queued."""
+
+    def __init__(self, frontend: "AsyncFrontend", rid: int):
+        self.frontend = frontend
+        self.rid = rid
+        self.queue: asyncio.Queue = asyncio.Queue()
+        self.tokens: list = []         # everything yielded so far
+        self.finished = False          # engine delivered the full stream
+        self.canceled = False
+
+    def cancel(self) -> bool:
+        """Abort this request engine-side (idempotent).  Returns True if
+        live state was removed — False once finished: a completed
+        stream's tokens are never destroyed."""
+        if self.canceled or self.finished:
+            return False
+        self.canceled = True
+        removed = self.frontend.engine.cancel(self.rid)
+        self.queue.put_nowait(_CANCELED)
+        self.frontend._wake()
+        return removed
+
+    async def __aiter__(self) -> AsyncIterator[int]:
+        try:
+            while True:
+                tok = await self.queue.get()
+                if tok is _DONE or tok is _CANCELED:
+                    return
+                yield tok
+        finally:
+            # early exit (break / client disconnect): free the lane now
+            self.cancel()
+
+    async def drain(self) -> list:
+        """Collect the whole stream (convenience for non-streaming
+        callers and tests)."""
+        return [tok async for tok in self]
+
+
+class AsyncFrontend:
+    """Thin asyncio frontend over a :class:`ServeEngine` (see module
+    docstring).  Construct, then either ``async with frontend:`` (runs
+    the step loop for the block) or call ``start()``/``aclose()``."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._streams: dict = {}       # rid -> TokenStream, in flight
+        self._work = asyncio.Event()   # engine has (or just got) work
+        self._room = asyncio.Event()   # admission headroom changed
+        self._task: Optional[asyncio.Task] = None
+        self._closed = False
+
+    # ---- lifecycle ------------------------------------------------------
+    def start(self):
+        """Spawn the step loop on the running event loop (idempotent)."""
+        if self._task is None or self._task.done():
+            self._task = asyncio.get_running_loop().create_task(self.run())
+
+    async def aclose(self):
+        """Stop the step loop; in-flight requests are canceled."""
+        self._closed = True
+        for stream in list(self._streams.values()):
+            stream.cancel()
+        self._wake()
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    async def __aenter__(self) -> "AsyncFrontend":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.aclose()
+
+    # ---- submission -----------------------------------------------------
+    async def submit(self, request: Request, wait: bool = True
+                     ) -> TokenStream:
+        """Validate + queue ``request``; returns its :class:`TokenStream`.
+
+        ``wait=True`` (default) applies backpressure: the caller is held
+        until the engine has admission headroom for this request (a free
+        lane + its lifetime page reservation), so the engine-side queue
+        stays bounded by the callers willing to wait.  ``wait=False``
+        queues unconditionally — the open-loop bench uses this, because
+        open-loop arrivals by definition do not slow down when the
+        server falls behind.  Unservable requests raise ValueError
+        immediately in both modes (nothing is queued)."""
+        self.engine._validate(request)
+        if wait:
+            while not self.engine.can_admit_now(request):
+                self._room.clear()
+                await self._room.wait()
+        rid = self.engine.submit(request)
+        stream = TokenStream(self, rid)
+        self._streams[rid] = stream
+        self._wake()
+        return stream
+
+    @property
+    def in_flight(self) -> int:
+        """Streams submitted and not yet finished or canceled."""
+        return len(self._streams)
+
+    # ---- step loop ------------------------------------------------------
+    async def run(self):
+        """Drive ``engine.step()`` while any request is in flight; park on
+        the wake event when idle.  One ``await`` per step keeps the loop
+        cooperative: arrivals and cancels land *between* steps, which is
+        the only place the single-threaded engine can observe them."""
+        while not self._closed:
+            if not self.engine.busy:
+                self._work.clear()
+                # nothing in flight: any stream still tracked is a
+                # zombie (canceled mid-prefill before its queue drained)
+                await self._work.wait()
+                continue
+            self.engine.step()
+            self._publish()
+            await asyncio.sleep(0)     # let arrivals/cancels interleave
+
+    def _publish(self):
+        """Push newly generated tokens to their streams; retire finished
+        and canceled requests."""
+        sched = self.engine.scheduler
+        for rid, stream in list(self._streams.items()):
+            if stream.canceled:
+                del self._streams[rid]
+                self._room.set()
+                continue
+            st = sched.state(rid)
+            if st is None:             # canceled engine-side, not via stream
+                stream.canceled = True
+                stream.queue.put_nowait(_CANCELED)
+                del self._streams[rid]
+                self._room.set()
+                continue
+            while len(stream.tokens) < len(st.tokens):
+                tok = st.tokens[len(stream.tokens)]
+                stream.tokens.append(tok)
+                stream.queue.put_nowait(tok)
+            if st.done:
+                stream.finished = True
+                stream.queue.put_nowait(_DONE)
+                sched.result(rid)      # pop finished state; tokens are ours
+                del self._streams[rid]
+                self._room.set()
+
+    def _wake(self):
+        self._work.set()
+        self._room.set()

@@ -20,17 +20,29 @@ Requests move through three stages:
     and releases the lane immediately, so a long request never makes
     short batchmates burn decode steps past their end.
 
-Latency accounting covers the three serving metrics: full-request and
-first-token (TTFT) percentiles per completed request, plus **inter-token
-latency** (TPOT) — the gap between consecutive tokens of the same
-request — which is what a blocking prefill schedule inflates and the
-interleaved schedule bounds.
+Latency accounting covers the three serving metrics: full-request
+percentiles per completed request, first-token (TTFT) percentiles
+recorded **at first-token time** (so requests still in flight — exactly
+the ones an open-loop bench saturates the engine with — are visible to
+p95 TTFT), plus **inter-token latency** (TPOT) — the gap between
+consecutive tokens of the same request — which is what a blocking
+prefill schedule inflates and the interleaved schedule bounds.  A
+verified speculative block delivers many tokens at one wall instant;
+``on_tokens`` amortizes the block's wall interval (previous block
+boundary -> now) evenly across the tokens it delivers, so spec-mode
+TPOT reflects the per-token pace a client actually experiences instead
+of recording zero-length intra-block gaps.
+
+All timestamps default to ``time.monotonic()`` when omitted — a direct
+caller that forgets ``now`` must not silently record latencies against
+``t = 0``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -72,10 +84,15 @@ class RequestState:
     # token, replayed through the first batched decode dispatch to
     # produce first-token logits; None for every other request
     replay_token: Optional[int] = None
+    canceled: bool = False
     t_submit: float = 0.0
     t_first_token: Optional[float] = None
     t_last_token: Optional[float] = None
     t_done: Optional[float] = None
+    # this request's own inter-token gaps (seconds), parallel to
+    # ``tokens[1:]`` — per-request TPOT percentiles for SLO attainment;
+    # bounded by max_new_tokens and popped with the state at result()
+    itl: List[float] = dataclasses.field(default_factory=list)
 
 
 class Scheduler:
@@ -94,14 +111,25 @@ class Scheduler:
         # bounded latency history: a long-lived engine must not grow
         # without bound, so percentile stats run over recent windows.
         # Inter-token gaps arrive ~max_new_tokens times per request, so
-        # their window is wider than the per-request one.
+        # their window is wider than the per-request one.  TTFT has its
+        # OWN window, fed at first-token time — long or in-flight
+        # requests would otherwise be invisible to p95 TTFT exactly when
+        # an open-loop load is saturating the engine.
         self._latency: collections.deque = collections.deque(
+            maxlen=latency_window)
+        self._ttft: collections.deque = collections.deque(
             maxlen=latency_window)
         self._itl: collections.deque = collections.deque(
             maxlen=8 * latency_window)
 
+    @staticmethod
+    def _now(now: Optional[float]) -> float:
+        """Defaulted wall clock: an omitted timestamp means "now", never
+        the t=0 footgun (latencies recorded against the epoch)."""
+        return time.monotonic() if now is None else now
+
     # ---- submission / admission ----------------------------------------
-    def submit(self, req: Request, now: float = 0.0) -> int:
+    def submit(self, req: Request, now: Optional[float] = None) -> int:
         if req.max_new_tokens < 1:
             raise ValueError("need at least one generated token")
         total = len(req.prompt) + req.max_new_tokens
@@ -119,7 +147,8 @@ class Scheduler:
         # mutation is a deterministic DispatchRaceError
         req.prompt = sanitizer.guard(np.asarray(req.prompt, np.int32),
                                      f"Request[{rid}].prompt")
-        self.pending.append(RequestState(rid=rid, req=req, t_submit=now))
+        self.pending.append(RequestState(rid=rid, req=req,
+                                         t_submit=self._now(now)))
         return rid
 
     def admit(self, slot: int) -> RequestState:
@@ -147,6 +176,46 @@ class Scheduler:
         """FIFO head of the prefilling stage (oldest admitted)."""
         return next(iter(self.prefilling.values()))
 
+    def state(self, rid: int) -> Optional[RequestState]:
+        """Look up a request's live state at any stage (pending /
+        prefilling / active / finished) — None if unknown (canceled, or
+        already collected via ``result``).  The returned object is
+        stable across stage transitions, so a frontend can hold it and
+        watch ``tokens`` / ``done`` grow."""
+        for stage in (self.active, self.prefilling, self.finished):
+            st = stage.get(rid)
+            if st is not None:
+                return st
+        for st in self.pending:
+            if st.rid == rid:
+                return st
+        return None
+
+    def cancel(self, rid: int) -> Tuple[Optional[str], Optional[RequestState]]:
+        """Remove a request from the pipeline at whatever stage it is in.
+
+        Returns ``(stage, state)`` with ``stage`` one of ``"pending"`` /
+        ``"prefilling"`` / ``"active"``, or ``(None, None)`` if the
+        request is unknown or already finished (a finished request's
+        tokens belong to the caller — ``result`` collects them; cancel
+        never destroys a completed stream).  The caller (engine) owns
+        the lane/page cleanup for the two admitted stages; the state is
+        marked ``canceled`` so a late token delivery fails loudly."""
+        for i, st in enumerate(self.pending):
+            if st.rid == rid:
+                del self.pending[i]
+                st.canceled = True
+                return "pending", st
+        st = self.prefilling.pop(rid, None)
+        if st is not None:
+            st.canceled = True
+            return "prefilling", st
+        st = self.active.pop(rid, None)
+        if st is not None:
+            st.canceled = True
+            return "active", st
+        return None, None
+
     @property
     def has_pending(self) -> bool:
         return bool(self.pending)
@@ -160,13 +229,16 @@ class Scheduler:
         return bool(self.active)
 
     # ---- token stream ---------------------------------------------------
-    def on_token(self, rid: int, token: int, now: float = 0.0) -> bool:
+    def on_token(self, rid: int, token: int, now: Optional[float] = None
+                 ) -> bool:
         """Record one generated token; returns True if the request finished
         (its slot should be freed).
 
         Raises :class:`SchedulerError` if ``rid`` is not decode-active —
-        a token delivered to a finished (or mid-prefill / unknown)
-        request is an engine bug that must not be silently swallowed."""
+        a token delivered to a finished (or mid-prefill / canceled /
+        unknown) request is an engine bug that must not be silently
+        swallowed."""
+        now = self._now(now)
         st = self.active.get(rid)
         if st is None or st.done:
             stage = ("finished" if rid in self.finished else
@@ -177,10 +249,17 @@ class Scheduler:
         st.tokens.append(int(token))
         if st.t_first_token is None:
             st.t_first_token = now
+            # TTFT enters its window NOW, not at completion: an open-loop
+            # bench saturating the engine must see still-streaming
+            # requests in p95 TTFT
+            self._ttft.append(now - st.t_submit)
         else:
             # inter-token (TPOT) gap — the stall a blocking prefill
-            # schedule inflates; percentiles over the recent window
-            self._itl.append(now - st.t_last_token)
+            # schedule inflates; percentiles over the recent window,
+            # plus the request's own gap list for per-request SLOs
+            gap = now - st.t_last_token
+            self._itl.append(gap)
+            st.itl.append(gap)
         st.t_last_token = now
         eos = st.req.eos_id
         if (eos is not None and token == eos) or \
@@ -189,12 +268,11 @@ class Scheduler:
             st.t_done = now
             del self.active[rid]
             self.finished[rid] = st
-            self._latency.append((st.t_done - st.t_submit,
-                                  st.t_first_token - st.t_submit))
+            self._latency.append(st.t_done - st.t_submit)
             return True
         return False
 
-    def on_tokens(self, rid: int, tokens, now: float = 0.0):
+    def on_tokens(self, rid: int, tokens, now: Optional[float] = None):
         """Feed a verified speculative block of tokens to one request.
 
         Acceptance-aware accounting: tokens are consumed in order until
@@ -204,11 +282,45 @@ class Scheduler:
         ``(consumed, finished)``: the number of tokens actually recorded
         (the caller rolls the KV cache back to the matching row count)
         and whether the request finished (its lane should be freed).
-        """
-        consumed = 0
+
+        **Amortized timestamps**: the whole block lands at one wall
+        instant (``now``), so stamping every token with ``now`` would
+        record zero-length intra-block gaps and systematically deflate
+        spec-mode TPOT percentiles.  Instead the block's wall interval —
+        previous block boundary (``t_last_token``) to ``now`` — is
+        divided evenly across the tokens actually delivered: token ``i``
+        of ``n`` is stamped ``prev + (i+1)/n * (now - prev)``, so the
+        last delivered token lands exactly at ``now`` and the recorded
+        per-token pace matches what a client draining the stream
+        experiences.  A request whose very first delivery is a block (a
+        fully-prefix-cached prompt in spec mode) has no previous
+        boundary; its tokens all stamp at ``now`` (the instant they
+        became available — TTFT is exact, intra-block gaps of that one
+        block are zero)."""
+        now = self._now(now)
+        if len(tokens) == 0:
+            return 0, False
+        st = self.active.get(rid)
+        if st is None or st.done:
+            # delegate to on_token for the stage-specific error
+            self.on_token(rid, int(tokens[0]), now)
+            raise SchedulerError(f"unreachable: request {rid}")  # pragma: no cover
+        # how many tokens the request's own termination lets it consume —
+        # needed up front so the wall interval amortizes over the tokens
+        # actually delivered, not the block's full width
+        room = st.req.max_new_tokens - len(st.tokens)
+        eos = st.req.eos_id
+        n = 0
         for tok in tokens:
+            n += 1
+            if (eos is not None and int(tok) == eos) or n >= room:
+                break
+        prev = st.t_last_token
+        consumed = 0
+        for i, tok in enumerate(tokens):
+            t_i = now if prev is None else prev + (i + 1) * (now - prev) / n
             consumed += 1
-            if self.on_token(rid, int(tok), now):
+            if self.on_token(rid, int(tok), t_i):
                 return consumed, True
         return consumed, False
 
@@ -227,19 +339,19 @@ class Scheduler:
 
     def latencies(self) -> Dict[str, float]:
         """Latency percentiles (seconds) over the recent windows:
-        p50/p95 full-request and first-token (per completed request) and
-        p50/p95 inter-token — TPOT, the gap between consecutive tokens of
-        one request (present once any request has emitted two tokens)."""
+        p50/p95 full-request (per completed request), first-token (TTFT,
+        recorded at first-token time — in-flight requests count) and
+        inter-token — TPOT, the gap between consecutive tokens of one
+        request (present once any request has emitted two tokens)."""
         out: Dict[str, float] = {}
         if self._latency:
-            total = np.array([t for t, _ in self._latency])
-            first = np.array([f for _, f in self._latency])
-            out.update({
-                "p50_latency_s": float(np.percentile(total, 50)),
-                "p95_latency_s": float(np.percentile(total, 95)),
-                "p50_first_token_s": float(np.percentile(first, 50)),
-                "p95_first_token_s": float(np.percentile(first, 95)),
-            })
+            total = np.asarray(self._latency)
+            out["p50_latency_s"] = float(np.percentile(total, 50))
+            out["p95_latency_s"] = float(np.percentile(total, 95))
+        if self._ttft:
+            first = np.asarray(self._ttft)
+            out["p50_first_token_s"] = float(np.percentile(first, 50))
+            out["p95_first_token_s"] = float(np.percentile(first, 95))
         if self._itl:
             itl = np.asarray(self._itl)
             out["p50_inter_token_s"] = float(np.percentile(itl, 50))
@@ -248,4 +360,5 @@ class Scheduler:
 
     def reset_latencies(self):
         self._latency.clear()
+        self._ttft.clear()
         self._itl.clear()

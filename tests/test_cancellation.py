@@ -1,0 +1,427 @@
+"""Cancellation + latency-accounting coverage.
+
+Fake-clock unit tests pin the two accounting fixes:
+
+  * **spec-mode TPOT amortization** — ``on_tokens`` used to stamp every
+    token of a verified block with one shared ``now``, recording
+    zero-length intra-block gaps and deflating spec-mode p50/p95 TPOT;
+    the block's wall interval is now amortized across the tokens it
+    delivers.  The regression test replays the OLD stamping and shows it
+    fails the no-zero-gaps assertion the new path satisfies.
+  * **TTFT windowing** — first-token latency used to enter the
+    percentile window only at request *completion*; it is now recorded
+    at first-token time, so in-flight requests are visible to p95 TTFT.
+
+Cancel coverage: scheduler-stage units (pending / prefilling / active /
+finished / unknown), engine release-path units (lane + page bookkeeping
+restored, late token delivery fails loudly), and a randomized
+cancel-under-stress suite (mid-prefill, mid-decode, mid-spec-block,
+already-finished) under the dispatch-race sanitizer asserting zero
+page/refcount leaks and that surviving lanes' token streams are
+unchanged versus a no-cancel twin engine (per-request PRNG key chains
+make both greedy and sampled streams batch-composition-invariant, so
+the twin comparison is exact).
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import (PagedKVCache, Request, Scheduler, SchedulerError,
+                           ServeEngine)
+
+
+def _tiny_moe(n_experts=8, top_k=2, seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2,
+                  n_experts=n_experts, top_k=top_k)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+@pytest.fixture
+def sanitized():
+    """Run under the dispatch-race sanitizer (REPRO_SANITIZE=1
+    equivalent)."""
+    sanitizer.enable(True)
+    try:
+        yield
+    finally:
+        sanitizer.clear_override()
+
+
+def _active_request(max_new_tokens=16, eos_id=None):
+    sched = Scheduler()
+    rid = sched.submit(Request(np.array([1, 2], np.int32),
+                               max_new_tokens=max_new_tokens,
+                               eos_id=eos_id), now=0.0)
+    sched.admit(slot=0)
+    sched.activate(rid)
+    return sched, rid
+
+
+# ---------------------------------------------------------------------------
+# spec-block TPOT amortization (fake clock)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_block_gaps_amortized_over_wall_interval():
+    """A 4-token verified block landing 2.0s after the previous token
+    records four 0.5s gaps — the per-token pace a client draining the
+    stream sees — not one 2.0s gap and three zeros."""
+    sched, rid = _active_request()
+    sched.on_token(rid, 7, now=1.0)
+    consumed, done = sched.on_tokens(rid, [3, 4, 5, 6], now=3.0)
+    assert (consumed, done) == (4, False)
+    st = sched.active[rid]
+    np.testing.assert_allclose(st.itl, [0.5, 0.5, 0.5, 0.5])
+    np.testing.assert_allclose(list(sched._itl), [0.5, 0.5, 0.5, 0.5])
+    assert st.t_last_token == pytest.approx(3.0)   # last token lands at now
+
+
+def test_spec_block_regression_old_stamping_fails():
+    """The pre-fix accounting — every block token stamped with the same
+    ``now`` — produces zero-length intra-block gaps, which the
+    amortized path must never record.  Replaying the old behavior shows
+    the assertion it fails."""
+    # old behavior: one shared timestamp per block token
+    old, rid_o = _active_request()
+    old.on_token(rid_o, 7, now=1.0)
+    for tok in (3, 4, 5, 6):
+        old.on_token(rid_o, tok, now=3.0)          # what on_tokens used to do
+    old_gaps = np.asarray(old._itl)
+    assert np.percentile(old_gaps, 50) == 0.0      # deflated: p50 TPOT = 0
+    assert (old_gaps == 0.0).sum() == 3
+
+    # fixed path over the identical delivery: no artificial zero gaps
+    new, rid_n = _active_request()
+    new.on_token(rid_n, 7, now=1.0)
+    new.on_tokens(rid_n, [3, 4, 5, 6], now=3.0)
+    new_gaps = np.asarray(new._itl)
+    assert new_gaps.min() > 0.0
+    assert np.percentile(new_gaps, 50) == pytest.approx(0.5)
+    # both accountings agree on the total wall interval
+    assert old_gaps.sum() == pytest.approx(new_gaps.sum())
+
+
+def test_spec_block_amortizes_over_delivered_not_block_width():
+    """EOS inside the block: the wall interval divides across the tokens
+    actually delivered (2), not the block's full width (4)."""
+    sched, rid = _active_request(eos_id=9)
+    sched.on_token(rid, 7, now=1.0)
+    consumed, done = sched.on_tokens(rid, [3, 9, 5, 6], now=2.0)
+    assert (consumed, done) == (2, True)
+    st = sched.finished[rid]
+    np.testing.assert_allclose(st.itl, [0.5, 0.5])
+    assert st.t_done == pytest.approx(2.0)
+
+
+def test_spec_block_max_new_tokens_mid_block():
+    sched, rid = _active_request(max_new_tokens=3)
+    sched.on_token(rid, 7, now=1.0)
+    consumed, done = sched.on_tokens(rid, [3, 4, 5, 6], now=2.0)
+    assert (consumed, done) == (2, True)
+    np.testing.assert_allclose(sched.finished[rid].itl, [0.5, 0.5])
+
+
+def test_first_delivery_block_stamps_at_now():
+    """A request whose FIRST delivery is a block (fully-prefix-cached
+    prompt in spec mode) has no previous boundary: all tokens stamp at
+    ``now`` — TTFT is exact, and that one block records zero gaps."""
+    sched, rid = _active_request()
+    consumed, done = sched.on_tokens(rid, [3, 4, 5], now=2.0)
+    assert (consumed, done) == (3, False)
+    st = sched.active[rid]
+    assert st.t_first_token == pytest.approx(2.0)
+    np.testing.assert_allclose(st.itl, [0.0, 0.0])
+    assert sched.latencies()["p50_first_token_s"] == pytest.approx(2.0)
+
+
+def test_on_tokens_empty_and_bad_rid():
+    sched, rid = _active_request()
+    assert sched.on_tokens(rid, [], now=1.0) == (0, False)
+    with pytest.raises(SchedulerError, match="unknown"):
+        sched.on_tokens(rid + 999, [1, 2], now=1.0)
+
+
+# ---------------------------------------------------------------------------
+# TTFT windowing (fake clock)
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_recorded_at_first_token_not_completion():
+    """An in-flight request's TTFT is visible in the window immediately,
+    before it completes — exactly what an open-loop bench saturating
+    the engine needs for honest p95 TTFT."""
+    sched, rid = _active_request(max_new_tokens=16)
+    sched.on_token(rid, 7, now=1.25)
+    lat = sched.latencies()
+    assert lat["p50_first_token_s"] == pytest.approx(1.25)
+    assert lat["p95_first_token_s"] == pytest.approx(1.25)
+    assert "p50_latency_s" not in lat        # nothing completed yet
+    assert rid in sched.active
+
+
+def test_per_request_itl_trace_matches_window():
+    sched, rid = _active_request()
+    for t in (1.0, 1.5, 3.5, 3.6):
+        sched.on_token(rid, 7, now=t)
+    st = sched.active[rid]
+    np.testing.assert_allclose(st.itl, [0.5, 2.0, 0.1])
+    np.testing.assert_allclose(list(sched._itl), st.itl)
+
+
+def test_omitted_now_defaults_to_monotonic_not_epoch():
+    """The old ``now: float = 0.0`` default recorded latencies against
+    t=0 — a caller omitting ``now`` saw TTFTs of ~monotonic() seconds.
+    Omitted timestamps now mean time.monotonic()."""
+    sched = Scheduler()
+    rid = sched.submit(Request(np.array([1], np.int32), max_new_tokens=2))
+    st = sched.pending[0]
+    assert abs(st.t_submit - time.monotonic()) < 60.0
+    sched.admit(slot=0)
+    sched.activate(rid)
+    sched.on_token(rid, 7)
+    ttft = sched.latencies()["p50_first_token_s"]
+    assert 0.0 <= ttft < 60.0                # epoch bug: would be ~1e4s
+
+
+# ---------------------------------------------------------------------------
+# scheduler cancel stages
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_cancel_stages():
+    sched = Scheduler()
+    rids = [sched.submit(Request(np.array([1, 2], np.int32), 4), now=0.0)
+            for _ in range(3)]
+    # pending
+    stage, st = sched.cancel(rids[1])
+    assert (stage, st.rid, st.canceled) == ("pending", rids[1], True)
+    assert [s.rid for s in sched.pending] == [rids[0], rids[2]]
+    # prefilling
+    sched.admit(slot=0)
+    stage, st = sched.cancel(rids[0])
+    assert (stage, st.rid) == ("prefilling", rids[0])
+    assert not sched.has_prefilling
+    # active
+    sched.admit(slot=1)
+    sched.activate(rids[2])
+    stage, st = sched.cancel(rids[2])
+    assert (stage, st.rid) == ("active", rids[2])
+    assert not sched.has_active
+    # unknown / double-cancel
+    assert sched.cancel(rids[2]) == (None, None)
+    assert sched.cancel(999) == (None, None)
+
+
+def test_scheduler_cancel_never_destroys_finished():
+    sched, rid = _active_request(max_new_tokens=1)
+    sched.on_token(rid, 7, now=1.0)
+    assert sched.cancel(rid) == (None, None)
+    assert sched.result(rid).tolist() == [7]
+
+
+def test_token_after_cancel_raises():
+    sched, rid = _active_request()
+    sched.on_token(rid, 7, now=1.0)
+    sched.cancel(rid)
+    with pytest.raises(SchedulerError, match="unknown"):
+        sched.on_token(rid, 8, now=2.0)
+
+
+def test_state_lookup_across_stages():
+    sched = Scheduler()
+    rid = sched.submit(Request(np.array([1, 2], np.int32), 1), now=0.0)
+    assert sched.state(rid).rid == rid           # pending
+    sched.admit(slot=0)
+    assert sched.state(rid).slot == 0            # prefilling
+    sched.activate(rid)
+    st = sched.state(rid)                        # active
+    sched.on_token(rid, 7, now=1.0)
+    assert sched.state(rid) is st and st.done    # finished, same object
+    sched.result(rid)
+    assert sched.state(rid) is None
+
+
+# ---------------------------------------------------------------------------
+# engine cancel: release-path units
+# ---------------------------------------------------------------------------
+
+
+def _leak_check(cache: PagedKVCache):
+    """Every page is either free or accounted by a refcount; every lane
+    is free once nothing is in flight."""
+    assert len(cache._free_pages) + len(cache._refs) == cache.page_budget
+    assert sorted(cache._free_slots) == list(range(cache.n_slots))
+    assert not cache._pages_of and not cache._prefilling
+
+
+def _drive_with_cancels(eng, reqs, cancel_at):
+    """Step the engine to drain, canceling rid r before step i for every
+    (i, r) in ``cancel_at``.  Returns {rid: tokens} for survivors."""
+    rids = [eng.submit(Request(r.prompt.copy(), r.max_new_tokens,
+                               eos_id=r.eos_id, temperature=r.temperature))
+            for r in reqs]
+    canceled = set()
+    step_i = 0
+    while eng.busy:
+        for i, ridx in cancel_at:
+            if i == step_i:
+                if eng.cancel(rids[ridx]):
+                    canceled.add(ridx)
+        eng.step()
+        step_i += 1
+        assert step_i < 10_000
+    return {i: eng.scheduler.result(rid).tolist()
+            for i, rid in enumerate(rids)
+            if i not in canceled and rid in eng.scheduler.finished}
+
+
+def test_engine_cancel_mid_prefill_releases_everything(moe):
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=64, max_batch=2, prefill_chunk=8,
+                      schedule="interleaved")
+    prompt = np.arange(1, 33, dtype=np.int32)    # 4 chunks: stays mid-prefill
+    rid = eng.submit(Request(prompt, 4))
+    eng.step()                                   # admit + first chunk only
+    assert rid in eng.scheduler.prefilling
+    assert eng.cancel(rid) and eng.requests_canceled == 1
+    assert not eng.busy
+    _leak_check(eng.cache)
+    assert rid not in eng._prefills
+
+
+def test_engine_cancel_mid_decode_frees_lane_for_waiter(moe):
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=1, prefill_chunk=8)
+    r1 = eng.submit(Request(np.array([1, 2, 3], np.int32), 8))
+    r2 = eng.submit(Request(np.array([4, 5, 6], np.int32), 4))
+    while r1 not in eng.scheduler.active:
+        eng.step()
+    assert eng.cancel(r1)                        # the only lane frees
+    while eng.busy:
+        eng.step()
+    assert len(eng.scheduler.result(r2)) == 4    # waiter got the lane
+    _leak_check(eng.cache)
+
+
+def test_engine_cancel_finished_and_unknown_return_false(moe):
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=1, prefill_chunk=8)
+    rid = eng.submit(Request(np.array([1, 2], np.int32), 2))
+    eng.run()
+    assert not eng.cancel(rid)                   # finished: tokens are ours
+    assert not eng.cancel(rid + 1)               # unknown
+    assert eng.requests_canceled == 0
+    assert len(eng.scheduler.result(rid)) == 2
+
+
+def test_engine_cancel_pending_only_dequeues(moe):
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=1, prefill_chunk=8)
+    r1 = eng.submit(Request(np.array([1, 2], np.int32), 2))
+    r2 = eng.submit(Request(np.array([3, 4], np.int32), 2))
+    assert eng.cancel(r2)                        # never admitted
+    eng.run()
+    assert len(eng.scheduler.result(r1)) == 2
+    _leak_check(eng.cache)
+
+
+# ---------------------------------------------------------------------------
+# randomized cancel-under-stress: sanitizer on, no-cancel twin oracle
+# ---------------------------------------------------------------------------
+
+
+def _stress_reqs(cfg, rs, n):
+    reqs = []
+    for i in range(n):
+        prompt = rs.randint(0, cfg.vocab, rs.randint(3, 20)).astype(np.int32)
+        temp = 0.7 if i % 3 == 0 else 0.0        # mix sampled + greedy lanes
+        reqs.append(Request(prompt, int(rs.randint(3, 10)),
+                            temperature=temp))
+    return reqs
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("engine_kwargs", [
+    {},                                                    # plain paged
+    {"schedule": "blocking"},
+    {"spec_decode": "pruned", "spec_k": 3},                # mid-spec-block
+    {"prefix_cache": True},                                # shared pages
+], ids=["interleaved", "blocking", "spec", "prefix_cache"])
+def test_cancel_stress_no_leaks_survivors_unchanged(moe, sanitized,
+                                                    engine_kwargs):
+    """Random cancels at every lifecycle stage (pending, mid-prefill,
+    mid-decode, mid-spec-block, already-finished), sanitizer on: the
+    cache must end leak-free (pages + refcounts restored, lanes free)
+    and every surviving request's token stream must equal the no-cancel
+    twin's — cancellation must not perturb batchmates."""
+    cfg, params = moe
+
+    def mk():
+        return ServeEngine(params, cfg, max_len=48, max_batch=3,
+                           prefill_chunk=8, page_size=8, **engine_kwargs)
+
+    for trial in range(3):
+        rs = np.random.RandomState(100 + trial)
+        reqs = _stress_reqs(cfg, rs, n=8)
+        # twin: same requests, no cancels — the survivors' oracle
+        twin = _drive_with_cancels(mk(), reqs, cancel_at=[])
+        assert len(twin) == len(reqs)
+        # random (step, request) cancel points; duplicates exercise the
+        # already-canceled/already-finished paths
+        cancel_at = [(int(rs.randint(0, 25)), int(rs.randint(0, len(reqs))))
+                     for _ in range(4)]
+        eng = mk()
+        got = _drive_with_cancels(eng, reqs, cancel_at)
+        for i, toks in got.items():
+            assert toks == twin[i], \
+                f"trial {trial}: survivor {i} diverged after cancels"
+        _leak_check(eng.cache)
+        if eng.prefix_cache is not None:
+            # trie-held pages are exactly the refcounted remainder
+            assert all(eng.cache.refcount(p) >= 1
+                       for p in eng.prefix_cache.pages())
+
+
+@pytest.mark.stress
+def test_cancel_mid_spec_block_deterministic(moe, sanitized):
+    """Cancel an active request right after a spec round delivered part
+    of its block — the lane releases between rounds with zero leaks and
+    the batchmate's stream is untouched."""
+    cfg, params = moe
+    reqs = [Request(np.arange(1, 6, dtype=np.int32), 12),
+            Request(np.arange(6, 11, dtype=np.int32), 12)]
+
+    def mk():
+        return ServeEngine(params, cfg, max_len=48, max_batch=2,
+                           prefill_chunk=8, page_size=8,
+                           spec_decode="pruned", spec_k=4)
+
+    twin = _drive_with_cancels(mk(), reqs, cancel_at=[])
+    eng = mk()
+    rids = [eng.submit(Request(r.prompt.copy(), r.max_new_tokens))
+            for r in reqs]
+    # step until the first request has consumed a partial block
+    while not eng.scheduler.state(rids[0]).tokens:
+        eng.step()
+    assert rids[0] in eng.scheduler.active
+    assert eng.cancel(rids[0])
+    while eng.busy:
+        eng.step()
+    assert eng.scheduler.result(rids[1]).tolist() == twin[1]
+    _leak_check(eng.cache)

@@ -1,0 +1,198 @@
+"""Asyncio streaming frontend over the serve engine.
+
+Everything runs through plain ``asyncio.run`` (no pytest-asyncio
+dependency).  Coverage: per-request streams match the batch API
+token-for-token, arrivals submitted while the loop is stepping
+interleave correctly, backpressure holds submitters until admission
+headroom exists, client disconnect (breaking out of the stream)
+cancels engine-side with zero page leaks, and ``aclose`` tears down
+in-flight requests.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import AsyncFrontend, Request, ServeEngine
+
+
+def _tiny_moe(seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, n_experts=8,
+                  top_k=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+def _prompts(cfg, n, seed=0):
+    rs = np.random.RandomState(seed)
+    return [rs.randint(0, cfg.vocab, rs.randint(3, 10)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("max_len", 64)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("prefill_chunk", 8)
+    return ServeEngine(params, cfg, **kw)
+
+
+def test_streams_match_batch_api(moe):
+    """Streamed tokens == the synchronous batch API's outputs, per
+    request, including a sampled lane (per-request PRNG key chains make
+    sampled streams schedule- and batch-invariant)."""
+    cfg, params = moe
+    prompts = _prompts(cfg, 5)
+    temps = [0.0, 0.0, 0.8, 0.0, 0.8]
+    refs = _engine(params, cfg).generate(
+        [Request(p.copy(), 8, temperature=t)
+         for p, t in zip(prompts, temps)])
+
+    async def main():
+        async with AsyncFrontend(_engine(params, cfg)) as fe:
+            streams = [await fe.submit(Request(p.copy(), 8, temperature=t))
+                       for p, t in zip(prompts, temps)]
+            return await asyncio.gather(*(s.drain() for s in streams))
+
+    outs = asyncio.run(main())
+    for out, ref in zip(outs, refs):
+        assert out == ref.tolist()
+
+
+def test_late_arrival_interleaves_mid_flight(moe):
+    """A request submitted while earlier streams are mid-decode is
+    admitted by the running step loop and completes — the open-loop
+    property the frontend exists for."""
+    cfg, params = moe
+    prompts = _prompts(cfg, 3, seed=1)
+
+    async def main():
+        async with AsyncFrontend(_engine(params, cfg)) as fe:
+            first = await fe.submit(Request(prompts[0].copy(), 12))
+            got = []
+            late = None
+            async for tok in first:
+                got.append(tok)
+                if len(got) == 2:            # engine mid-flight: arrive now
+                    late = await fe.submit(Request(prompts[1].copy(), 4))
+            return got, await late.drain()
+
+    got, late_out = asyncio.run(main())
+    assert len(got) == 12 and len(late_out) == 4
+
+
+def test_backpressure_holds_submitter_until_headroom(moe):
+    """With one lane, the second ``submit(wait=True)`` parks until the
+    first request finishes, then admits and completes."""
+    cfg, params = moe
+
+    async def main():
+        eng = _engine(params, cfg, max_batch=1, max_len=32)
+        async with AsyncFrontend(eng) as fe:
+            s1 = await fe.submit(Request(_prompts(cfg, 1)[0], 6))
+            waiter = asyncio.ensure_future(
+                fe.submit(Request(_prompts(cfg, 1, seed=2)[0], 4)))
+            await asyncio.sleep(0)
+            held = not waiter.done()         # no headroom: still parked
+            out1 = await s1.drain()
+            s2 = await waiter
+            return held, out1, await s2.drain()
+
+    held, out1, out2 = asyncio.run(main())
+    assert held and len(out1) == 6 and len(out2) == 4
+
+
+def test_disconnect_cancels_engine_side(moe):
+    """Breaking out of a stream (client disconnect) cancels the request:
+    the lane frees immediately, pages are restored, and batchmates
+    stream on unperturbed."""
+    cfg, params = moe
+    prompts = _prompts(cfg, 2, seed=3)
+    ref = _engine(params, cfg).generate([Request(prompts[1].copy(), 10)])[0]
+
+    async def main():
+        eng = _engine(params, cfg, max_batch=2)
+        async with AsyncFrontend(eng) as fe:
+            s1 = await fe.submit(Request(prompts[0].copy(), 16))
+            s2 = await fe.submit(Request(prompts[1].copy(), 10))
+            got = []
+            async for tok in s1:
+                got.append(tok)
+                if len(got) == 3:
+                    break                    # disconnect
+            out2 = await s2.drain()
+            return eng, got, out2
+
+    eng, got, out2 = asyncio.run(main())
+    assert len(got) == 3
+    assert out2 == ref.tolist()              # survivor unchanged
+    assert eng.requests_canceled == 1
+    cache = eng.cache
+    assert len(cache._free_pages) + len(cache._refs) == cache.page_budget
+
+
+def test_explicit_cancel_is_idempotent_and_finished_safe(moe):
+    cfg, params = moe
+
+    async def main():
+        eng = _engine(params, cfg)
+        async with AsyncFrontend(eng) as fe:
+            s = await fe.submit(Request(_prompts(cfg, 1, seed=4)[0], 4))
+            out = await s.drain()
+            finished_cancel = s.cancel()     # after completion: no-op
+            s2 = await fe.submit(Request(_prompts(cfg, 1, seed=5)[0], 16))
+            first = s2.cancel()              # live: removes engine state
+            second = s2.cancel()             # idempotent: no-op
+            return out, finished_cancel, first, second, eng
+
+    out, finished_cancel, first, second, eng = asyncio.run(main())
+    assert len(out) == 4
+    assert finished_cancel is False
+    assert first is True and second is False
+    assert eng.requests_canceled == 1
+
+
+def test_validation_surfaces_at_submit(moe):
+    cfg, params = moe
+
+    async def main():
+        eng = _engine(params, cfg, max_len=16)
+        async with AsyncFrontend(eng) as fe:
+            with pytest.raises(ValueError, match="max_len"):
+                await fe.submit(Request(np.arange(1, 12, dtype=np.int32),
+                                        16))
+            with pytest.raises(ValueError, match="empty"):
+                await fe.submit(Request(np.array([], np.int32), 4))
+            return fe.in_flight
+
+    assert asyncio.run(main()) == 0          # nothing was queued
+
+
+def test_aclose_cancels_in_flight(moe):
+    cfg, params = moe
+
+    async def main():
+        eng = _engine(params, cfg)
+        fe = AsyncFrontend(eng)
+        fe.start()
+        s = await fe.submit(Request(_prompts(cfg, 1, seed=6)[0], 16))
+        await asyncio.sleep(0)
+        await fe.aclose()
+        return eng, s
+
+    eng, s = asyncio.run(main())
+    assert s.canceled and not eng.busy
+    cache = eng.cache
+    assert len(cache._free_pages) + len(cache._refs) == cache.page_budget

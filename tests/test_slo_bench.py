@@ -1,0 +1,140 @@
+"""Units for the open-loop SLO harness (benchmarks/bench_slo.py).
+
+Fake-clock tests pin the scoring logic (TTFT measured from *arrival*,
+per-request p95 TPOT from the scheduler's per-request gap trace, the
+attainment/goodput arithmetic) and the Poisson arrival generator;
+one tiny-engine test drives the real wall-clock loop end to end and
+checks every request is submitted at (not before) its arrival and the
+drained trial scores cleanly.
+"""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import bench_slo
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import Request, Scheduler, ServeEngine
+
+
+def _tiny_moe(seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, n_experts=8,
+                  top_k=2)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+def test_poisson_arrivals_shape_and_rate():
+    arr = bench_slo._arrivals(qps=4.0, n=4000, seed=0)
+    assert len(arr) == 4000
+    assert np.all(np.diff(arr) > 0)              # strictly increasing
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    assert np.mean(gaps) == pytest.approx(0.25, rel=0.1)   # Exp(1/qps)
+    # deterministic per seed, different across seeds
+    np.testing.assert_array_equal(arr, bench_slo._arrivals(4.0, 4000, 0))
+    assert not np.array_equal(arr, bench_slo._arrivals(4.0, 4000, 1))
+
+
+def _fake_finished(t_submit, token_times):
+    """Drive one request through a real Scheduler on a fake clock."""
+    sched = Scheduler()
+    rid = sched.submit(Request(np.array([1, 2], np.int32),
+                               max_new_tokens=len(token_times)),
+                       now=t_submit)
+    sched.admit(slot=0)
+    sched.activate(rid)
+    for t in token_times:
+        sched.on_token(rid, 7, now=t)
+    return sched, rid
+
+
+def test_score_trial_ttft_from_arrival_and_per_request_tpot():
+    """TTFT is scored against the request's ARRIVAL offset (queueing
+    counts), TPOT against the request's own p95 gap."""
+    # t0=10; arrival at offset 1 (absolute 11); first token at 12 ->
+    # TTFT = 1.0s even though t_submit (12 - well after arrival) would
+    # say less.  Gaps 0.1 x3 -> p95 0.1.
+    sched, rid = _fake_finished(t_submit=11.5,
+                                token_times=[12.0, 12.1, 12.2, 12.3])
+    eng = types.SimpleNamespace(scheduler=sched)
+    out = bench_slo.score_trial(eng, [(rid, 1.0)], t0=10.0, wall=5.0,
+                                slo_ttft=1.5, slo_tpot=0.2)
+    assert out["attainment"] == 1.0
+    assert out["goodput_rps"] == pytest.approx(1 / 5.0)
+    assert out["p95_ttft_s"] == pytest.approx(1.0)   # 12.0 - (10.0 + 1.0)
+    assert out["p95_tpot_s"] == pytest.approx(0.1)
+
+
+def test_score_trial_attainment_counts_both_slos():
+    # req A: fast TTFT, fast TPOT -> meets.  B: slow TTFT.  C: TTFT ok,
+    # one huge gap -> p95 TPOT blows the SLO.
+    sched = Scheduler()
+    specs = [  # (arrival_offset, first_token_at, gaps)
+        (0.0, 0.5, [0.1, 0.1]),
+        (0.0, 9.0, [0.1, 0.1]),
+        (0.0, 0.5, [5.0, 0.1]),
+    ]
+    records = []
+    for slot, (arr, first, gaps) in enumerate(specs):
+        rid = sched.submit(Request(np.array([1], np.int32),
+                                   max_new_tokens=1 + len(gaps)), now=arr)
+        sched.admit(slot=slot)
+        sched.activate(rid)
+        t = first
+        sched.on_token(rid, 7, now=t)
+        for g in gaps:
+            t += g
+            sched.on_token(rid, 7, now=t)
+        records.append((rid, arr))
+    eng = types.SimpleNamespace(scheduler=sched)
+    out = bench_slo.score_trial(eng, records, t0=0.0, wall=10.0,
+                                slo_ttft=1.0, slo_tpot=1.0)
+    assert out["attainment"] == pytest.approx(1 / 3)
+    assert out["goodput_rps"] == pytest.approx(1 / 10.0)
+    # scoring pops finished state (bounded memory over a long run)
+    assert not sched.finished
+
+
+def test_score_trial_single_token_stream_tpot_vacuous():
+    sched, rid = _fake_finished(t_submit=0.0, token_times=[0.5])
+    eng = types.SimpleNamespace(scheduler=sched)
+    out = bench_slo.score_trial(eng, [(rid, 0.0)], t0=0.0, wall=1.0,
+                                slo_ttft=1.0, slo_tpot=1e-9)
+    assert out["attainment"] == 1.0              # no gaps: TPOT can't fail
+
+
+def test_drive_open_loop_wall_clock(monkeypatch):
+    """End to end on a real tiny engine: every request is submitted at
+    or after its arrival offset, all drain, and the trial scores."""
+    cfg, params = _tiny_moe()
+    monkeypatch.setattr(bench_slo, "N_REQUESTS", 6)
+    eng = ServeEngine(params, cfg, max_len=64, max_batch=2,
+                      prefill_chunk=8)
+    rs = np.random.RandomState(0)
+    reqs = [Request(rs.randint(0, cfg.vocab, 6).astype(np.int32), 4)
+            for _ in range(6)]
+    arrivals = bench_slo._arrivals(qps=50.0, n=6, seed=0)
+    records, wall, t0 = bench_slo.drive_open_loop(eng, reqs, arrivals)
+    assert len(records) == 6 and wall >= arrivals[-1]
+    sched = eng.scheduler
+    for (rid, arr) in records:
+        st = sched.finished[rid]
+        # submitted at/after its arrival instant, never before
+        assert st.t_submit - t0 >= arr - 1e-6
+    out = bench_slo.score_trial(eng, records, t0, wall,
+                                slo_ttft=None, slo_tpot=None)
+    assert out["attainment"] == 1.0              # no SLO: everything meets
+    assert out["n_requests"] == 6
+
+
+def test_config_matrix_covers_required_grid():
+    grid = {(c["schedule"], c["spec"]) for c in bench_slo.CONFIGS.values()}
+    assert {("blocking", False), ("interleaved", False),
+            ("blocking", True), ("interleaved", True)} <= grid
