@@ -4,7 +4,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_FLAGS ?=
 
 .PHONY: test test-fast test-stress test-stats bench bench-serving \
-	bench-slo example-serve docs-check lint
+	bench-slo trace-smoke example-serve docs-check lint
 
 # tier-1 verification (ROADMAP.md) — runs everything
 test:
@@ -30,10 +30,12 @@ docs-check:
 	$(PY) tools/check_docs.py
 
 # lint job: dispatch-safety static analysis (aliasing-hazard,
-# jit-discipline, pallas-invariants, dtype-discipline) — stdlib-only,
-# fails on any finding or unexplained suppression
+# jit-discipline, pallas-invariants, dtype-discipline,
+# timing-discipline) — stdlib-only, fails on any finding or unexplained
+# suppression; benchmarks/ additionally gets the wall-clock hygiene pass
 lint:
 	$(PY) tools/lint_repro.py src/ --strict
+	$(PY) tools/lint_repro.py benchmarks/ --check timing-discipline --strict
 
 bench:
 	$(PY) benchmarks/run.py
@@ -47,6 +49,16 @@ bench-serving:
 # monotonically with offered load
 bench-slo:
 	$(PY) benchmarks/run.py slo
+
+# trace-driven replay smoke: serve the committed bursty workload trace
+# through the telemetry-instrumented engine, export Chrome-trace JSON,
+# validate it structurally, and merge the disaggregated stage timing
+# (`trace_replay` section) into BENCH_serving.json
+trace-smoke:
+	$(PY) benchmarks/bench_slo.py \
+		--replay benchmarks/traces/bursty_small.jsonl \
+		--trace trace_replay.json
+	$(PY) tools/validate_trace.py trace_replay.json
 
 example-serve:
 	$(PY) examples/serve_pruned.py

@@ -30,12 +30,26 @@ and merges everything into the ``slo`` section of
 ``BENCH_serving.json`` (schema in docs/serving.md).  Run via
 ``make bench-slo`` or ``python benchmarks/run.py slo``.
 
+``--replay trace.jsonl`` switches to **workload-trace replay**: instead
+of Poisson arrivals, the recorded ``(arrival_offset_s, prompt_len,
+max_new_tokens, seed)`` schedule (dumped by
+``Tracer.dump_workload``, or the committed
+``benchmarks/traces/bursty_small.jsonl``) drives the same open-loop
+harness — production-shaped bursts are burstier than Poisson
+(inter-arrival CV > 1), which is exactly the regime where queue depth
+and stage timing diverge from the Poisson numbers.  The scored trial —
+including the per-stage queue/prefill/decode split — lands in the
+``trace_replay`` section of ``BENCH_serving.json``; ``--trace out.json``
+additionally exports the replay's Chrome-trace spans (``make
+trace-smoke`` validates that export in CI).
+
 The substrate is the TRAINED tiny MoE from ``benchmarks.common`` (the
 spec-decode drafter must be faithful for spec configs to mean
 anything), with in-distribution prompts from the synthetic Markov LM.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -45,7 +59,7 @@ import numpy as np
 
 from benchmarks.common import DATA_SEED, emit, tiny_moe_cfg, train_tiny
 from repro.data.synthetic import SyntheticLM
-from repro.serving import Request, ServeEngine
+from repro.serving import Request, ServeEngine, Tracer, load_workload
 
 JSON_OUT = "BENCH_serving.json"
 
@@ -126,21 +140,31 @@ def score_trial(eng: ServeEngine, records, t0: float, wall: float,
     """Per-request SLO scoring over a drained trial.  A request meets the
     SLO iff its arrival-to-first-token time is within ``slo_ttft`` AND
     its own p95 inter-token gap is within ``slo_tpot`` (vacuously true
-    for single-token streams).  Returns the trial metrics dict."""
+    for single-token streams).  Returns the trial metrics dict,
+    including the disaggregated JetStream-style stage split from the
+    scheduler's stamps: **queue** (arrival to lane admission — open-loop
+    pre-submit lag plus FIFO wait, charged to the request exactly like
+    TTFT), **prefill** (admission to activation) and **decode**
+    (activation to completion)."""
     sched = eng.scheduler
     ttfts, tpots, met = [], [], 0
+    stage_vals = {"queue": [], "prefill": [], "decode": []}
     for rid, arr in records:
         st = sched.finished[rid]
         ttft = st.t_first_token - (t0 + arr)
         tpot = float(np.percentile(st.itl, 95)) if st.itl else 0.0
         ttfts.append(ttft)
         tpots.append(tpot)
+        if st.t_admit is not None and st.t_active is not None:
+            stage_vals["queue"].append(st.t_admit - (t0 + arr))
+            stage_vals["prefill"].append(st.t_active - st.t_admit)
+            stage_vals["decode"].append(st.t_done - st.t_active)
         ok = (slo_ttft is None or ttft <= slo_ttft) and \
              (slo_tpot is None or tpot <= slo_tpot)
         met += bool(ok)
         sched.result(rid)              # pop state; long runs stay bounded
     n = len(records)
-    return {
+    out = {
         "n_requests": n,
         "wall_s": wall,
         "attainment": met / n,
@@ -149,6 +173,11 @@ def score_trial(eng: ServeEngine, records, t0: float, wall: float,
         "p95_ttft_s": float(np.percentile(ttfts, 95)),
         "p95_tpot_s": float(np.percentile(tpots, 95)),
     }
+    for name, vals in stage_vals.items():
+        if vals:
+            out[f"p50_{name}_s"] = float(np.percentile(vals, 50))
+            out[f"p95_{name}_s"] = float(np.percentile(vals, 95))
+    return out
 
 
 def make_engine(params, cfg, schedule: str, spec: bool) -> ServeEngine:
@@ -340,5 +369,106 @@ def main():
     print(f"# wrote {JSON_OUT} (slo section)")
 
 
+def _replay_requests(cfg, entries):
+    """Reconstruct the recorded workload: each trace record regenerates
+    its prompt deterministically from ``seed`` (prompts are not stored in
+    the trace — ``Tracer.record_request`` keeps only the shape and a
+    content checksum), so a replay exercises the recorded *schedule* with
+    in-distribution token content."""
+    lm = SyntheticLM(vocab=cfg.vocab, seed=DATA_SEED)
+    reqs = []
+    for e in entries:
+        if e["prompt_len"] + e["max_new_tokens"] > MAX_LEN:
+            raise ValueError(
+                f"trace entry needs {e['prompt_len']} + "
+                f"{e['max_new_tokens']} tokens > max_len={MAX_LEN}")
+        prompt = lm.sample(1, int(e["prompt_len"]),
+                           step=50_000 + int(e["seed"]) % 9973)[0]
+        reqs.append(Request(prompt.astype(np.int32),
+                            int(e["max_new_tokens"]),
+                            temperature=float(e.get("temperature", 0.0))))
+    arrivals = np.asarray([float(e["arrival_offset_s"]) for e in entries])
+    return reqs, arrivals
+
+
+def _burstiness_cv(arrivals: np.ndarray) -> float:
+    """Coefficient of variation of inter-arrival gaps (first gap from
+    t=0).  Poisson arrivals sit near 1.0; recorded bursts land above —
+    the property that makes replay a different test than ``--qps``."""
+    gaps = np.diff(np.concatenate([[0.0], np.asarray(arrivals, float)]))
+    mean = float(gaps.mean())
+    return float(gaps.std() / mean) if mean > 0 else 0.0
+
+
+def run_replay(trace_path: str, trace_out: Optional[str] = None) -> Dict:
+    """Drive the open-loop harness from a recorded workload trace and
+    merge the scored trial into the ``trace_replay`` section of
+    ``BENCH_serving.json``.  ``trace_out`` additionally attaches a fresh
+    :class:`Tracer` (after the compile wave, so the export holds only
+    steady-state spans) and writes its Chrome-trace JSON there."""
+    entries = load_workload(trace_path)
+    cfg = tiny_moe_cfg()
+    params = train_tiny(cfg, "tiny_moe")
+    eng = make_engine(params, cfg, "interleaved", spec=False)
+    eng.generate(_workload(cfg, seed=999))     # compile outside the trial
+    eng.reset_stats()
+    tracer = None
+    if trace_out is not None:
+        tracer = Tracer()
+        eng.set_tracer(tracer)
+
+    reqs, arrivals = _replay_requests(cfg, entries)
+    records, wall, t0 = drive_open_loop(eng, reqs, arrivals)
+    trial = score_trial(eng, records, t0, wall, None, None)
+    section = {
+        "source": os.path.basename(trace_path),
+        "arrivals": "replay",
+        "burstiness_cv": _burstiness_cv(arrivals),
+        "schedule": "interleaved",
+        "spec_decode": False,
+        **trial,
+    }
+    if tracer is not None:
+        tracer.export(trace_out)
+        section["trace_events"] = len(tracer.events)
+        print(f"# wrote {trace_out} ({len(tracer.events)} trace events)")
+
+    existing = {}
+    if os.path.exists(JSON_OUT):
+        with open(JSON_OUT) as f:
+            existing = json.load(f)
+    existing["trace_replay"] = section
+    with open(JSON_OUT, "w") as f:
+        json.dump(existing, f, indent=2)
+    stages = " ".join(
+        f"p95_{s}={section[f'p95_{s}_s'] * 1e3:.0f}ms"
+        for s in ("queue", "prefill", "decode") if f"p95_{s}_s" in section)
+    emit("slo_replay", wall * 1e6,
+         f"n={section['n_requests']} cv={section['burstiness_cv']:.2f} "
+         f"p95_ttft={section['p95_ttft_s'] * 1e3:.0f}ms {stages}")
+    print(f"# wrote {JSON_OUT} (trace_replay section)")
+    return section
+
+
+def cli(argv=None):
+    """Argparse entry for direct invocation.  Kept separate from
+    ``main()`` so ``benchmarks/run.py`` (which calls ``main`` with its
+    own sys.argv still in place) never sees these flags."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--replay", metavar="TRACE_JSONL", default=None,
+                    help="replay a recorded workload trace instead of "
+                         "running the Poisson QPS search")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="with --replay: export the replay's Chrome-trace "
+                         "span JSON (load in Perfetto / chrome://tracing)")
+    args = ap.parse_args(argv)
+    if args.trace and not args.replay:
+        ap.error("--trace requires --replay")
+    if args.replay:
+        run_replay(args.replay, args.trace)
+    else:
+        main()
+
+
 if __name__ == "__main__":
-    main()
+    cli()

@@ -28,6 +28,11 @@ lint-time findings and deterministic test failures:
   * :mod:`repro.analysis.dtype` — **dtype-discipline**: sub-fp32
     (f8/bf16/f16) boundary crossings into accumulating ops without an
     explicit cast site in ``serving/`` and ``sparse/``.
+  * :mod:`repro.analysis.timing` — **timing-discipline**: ``time.time()``
+    in serving/bench/launch code (wall clocks are not monotonic), and
+    latency windows whose closing stamp spans a device dispatch with no
+    host fence — async dispatch makes such windows measure enqueue
+    overhead, not device time.
   * :mod:`repro.analysis.sanitizer` — the runtime half: version-stamped
     buffer guards (``REPRO_SANITIZE=1``) that turn a mutate-while-
     aliased race from an alignment-dependent coin flip into a

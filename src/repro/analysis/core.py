@@ -127,8 +127,10 @@ def all_checkers() -> List[type]:
     from repro.analysis.dtype import DtypeDisciplineChecker
     from repro.analysis.jit import JitDisciplineChecker
     from repro.analysis.pallas import PallasInvariantsChecker
+    from repro.analysis.timing import TimingDisciplineChecker
     return [AliasingHazardChecker, JitDisciplineChecker,
-            PallasInvariantsChecker, DtypeDisciplineChecker]
+            PallasInvariantsChecker, DtypeDisciplineChecker,
+            TimingDisciplineChecker]
 
 
 def checkers_for(path: str,

@@ -1,0 +1,159 @@
+"""timing-discipline: wall-clock hygiene in serving, bench and launch code.
+
+Two families of findings, both born from real latency-accounting bugs:
+
+  * **wrong clock** — any ``time.time()`` call site.  Wall time is not
+    monotonic (NTP slews it, VMs step it), so latency windows computed
+    from it can go negative or jump by seconds.  Every serving/bench
+    timestamp must come from ``time.monotonic()`` (cross-request
+    timelines) or ``time.perf_counter()`` (micro-benchmarks).
+  * **timing window over an un-fenced dispatch** — a
+    ``monotonic()``/``perf_counter()`` stamp, then a device dispatch,
+    then a second stamp with **no host synchronization between the
+    dispatch and the closing stamp**.  JAX dispatch is asynchronous: the
+    call returns as soon as the work is enqueued, so the window measures
+    dispatch overhead, not device time — the classic
+    "my decode step takes 40us" lie.  A fence is anything that forces
+    the result to host: ``np.asarray(...)``, ``jax.block_until_ready``,
+    ``jax.device_get``, ``.block_until_ready()``, or a scalar coercion
+    (``int(...)`` / ``float(...)``).
+
+Dispatches are recognized structurally: calls through the engine's
+jitted attribute slots (``self._decode(...)``, ``self._prefill(...)``,
+``self._draft``/``_verify``/``_sample``/``_fork_fn``, ...) and calls of
+local names bound from ``jax.jit(...)``.  High-level engine entry points
+(``.generate()``, ``.step()``) are deliberately *not* dispatches — they
+fence internally (tokens are materialized before they return), so timing
+them is exactly what an SLO bench should do.
+
+Events are collected in **post-order** (children before parents), which
+matches evaluation order for nested calls — in
+``jax.block_until_ready(fn(x))`` the dispatch is seen before the fence,
+and in ``sched.on_token(rid, int(tok), time.monotonic())`` the scalar
+coercion fences before the stamp is taken.  Control flow is linearized
+(a loop body is scanned once), which errs toward silence — lint-level
+precision, no false positives from cross-iteration windows.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, SourceFile, call_name
+
+STAMP_NAMES = {
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "monotonic", "monotonic_ns", "perf_counter", "perf_counter_ns",
+}
+FENCE_NAMES = {
+    "np.asarray", "numpy.asarray", "np.array", "numpy.array",
+    "jax.block_until_ready", "block_until_ready",
+    "jax.device_get", "device_get",
+    "int", "float",
+}
+# jitted attribute slots assigned in ServeEngine/__init__ paths — calls
+# through these enqueue device work and return immediately
+DISPATCH_ATTRS = {
+    "_decode", "_prefill", "_draft", "_verify", "_sample",
+    "_decode_uniform", "_fork_fn",
+}
+
+
+def _jit_locals(tree: ast.AST) -> Set[str]:
+    """Names bound (anywhere in the file) from a ``jax.jit(...)`` call —
+    calling one is a dispatch."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and call_name(node.value) in ("jax.jit", "jit"):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+class TimingDisciplineChecker(Checker):
+    name = "timing-discipline"
+    severity = "error"
+    paths = ("serving/", "benchmarks/", "launch/")
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        jit_locals = _jit_locals(src.tree)
+        # wrong clock: anywhere in the file, including nested scopes
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and call_name(node) == "time.time":
+                yield self.finding(
+                    src, node, "time.time() is not monotonic — NTP slews "
+                    "and VM clock steps corrupt latency windows; use "
+                    "time.monotonic() (timelines) or time.perf_counter() "
+                    "(micro-benchmarks)")
+        # un-fenced windows: one linear scan per function scope
+        for fn in ast.walk(src.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_scope(src, fn.body, jit_locals)
+        if isinstance(src.tree, ast.Module):
+            yield from self._check_scope(src, src.tree.body, jit_locals)
+
+    # -- event collection --------------------------------------------------
+    def _classify(self, node: ast.Call,
+                  jit_locals: Set[str]) -> Optional[str]:
+        name = call_name(node)
+        if name in STAMP_NAMES:
+            return "stamp"
+        if name in FENCE_NAMES:
+            return "fence"
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "block_until_ready":
+                return "fence"
+            if node.func.attr in DISPATCH_ATTRS:
+                return "dispatch"
+        if isinstance(node.func, ast.Name) and node.func.id in jit_locals:
+            return "dispatch"
+        return None
+
+    def _events(self, body, jit_locals: Set[str]
+                ) -> List[Tuple[str, ast.Call]]:
+        events: List[Tuple[str, ast.Call]] = []
+
+        def visit(node):
+            # nested scopes are scanned as their own windows
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                return
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            if isinstance(node, ast.Call):
+                kind = self._classify(node, jit_locals)
+                if kind is not None:
+                    events.append((kind, node))
+
+        for stmt in body:
+            visit(stmt)
+        return events
+
+    # -- window scan -------------------------------------------------------
+    def _check_scope(self, src: SourceFile, body,
+                     jit_locals: Set[str]) -> Iterator[Finding]:
+        seen_stamp = False
+        pending: Optional[ast.Call] = None
+        for kind, node in self._events(body, jit_locals):
+            if kind == "stamp":
+                if seen_stamp and pending is not None:
+                    yield self.finding(
+                        src, pending,
+                        f"timing window (closed by the stamp at line "
+                        f"{node.lineno}) spans this dispatch with no fence "
+                        f"— async dispatch returns before the device "
+                        f"finishes, so the window measures enqueue "
+                        f"overhead; materialize the result "
+                        f"(np.asarray / block_until_ready / int(...)) "
+                        f"before the closing stamp, or record it via a "
+                        f"telemetry Span with fence_rate > 0")
+                seen_stamp = True
+                pending = None
+            elif kind == "dispatch":
+                if seen_stamp and pending is None:
+                    pending = node
+            else:  # fence
+                pending = None

@@ -8,7 +8,9 @@ batched requests through the continuous-batching engine.
 frontend (per-request token streams over the running step loop) instead
 of the synchronous batch API; ``--qps`` offers them open-loop at a
 Poisson arrival rate rather than all upfront — the wall-clock serving
-mode ``benchmarks/bench_slo.py`` measures.
+mode ``benchmarks/bench_slo.py`` measures.  ``--trace out.json``
+records span telemetry (docs/observability.md) and exports Chrome-trace
+JSON loadable in Perfetto.
 
 On hardware the engine runs under the production mesh (EP over "model");
 pruned checkpoints re-shard onto the same mesh with a smaller expert axis.
@@ -22,7 +24,7 @@ import numpy as np
 
 from repro.checkpoint import restore_checkpoint
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced
-from repro.serving import AsyncFrontend, Request, ServeEngine
+from repro.serving import AsyncFrontend, Request, ServeEngine, Tracer
 
 
 def _run_frontend(eng, reqs, qps):
@@ -104,6 +106,16 @@ def main():
                     help="offer requests open-loop at this Poisson "
                          "arrival rate (requires --frontend; default: "
                          "all requests submitted upfront)")
+    ap.add_argument("--trace", metavar="OUT_JSON", default=None,
+                    help="record span telemetry for the whole run and "
+                         "export Chrome-trace JSON here (load in Perfetto "
+                         "or chrome://tracing; span taxonomy in "
+                         "docs/observability.md)")
+    ap.add_argument("--trace-fence-rate", type=float, default=0.0,
+                    help="fraction of dispatch spans closed with a "
+                         "block_until_ready fence so durations measure "
+                         "device work, not dispatch overhead (0 = never "
+                         "fence, the async-dispatch default; 1 = always)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 = softmax sampling")
     ap.add_argument("--eos-id", type=int, default=None)
@@ -184,6 +196,8 @@ def main():
         else:
             print("spec drafter: dense (identity) — non-MoE arch or "
                   "--spec-expert-drop 0")
+    tracer = (Tracer(fence_rate=args.trace_fence_rate)
+              if args.trace else None)
     eng = ServeEngine(params, cfg, max_len=args.max_len,
                       max_batch=args.max_batch,
                       prefill_chunk=args.prefill_chunk,
@@ -193,6 +207,7 @@ def main():
                       prefill_budget=args.prefill_budget,
                       prefix_cache=args.prefix_cache,
                       prefix_cache_max_pages=args.prefix_cache_max_pages,
+                      trace=tracer,
                       **sparse_kwargs, **spec_kwargs)
     if args.frontend:
         outs = _run_frontend(eng, reqs, args.qps)
@@ -215,6 +230,10 @@ def main():
         print("spec:", spec)
     print(f"dispatches: prefill={eng.prefill_dispatches} "
           f"decode={eng.decode_dispatches}")
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"trace: {args.trace} ({len(tracer.events)} events, "
+              f"{tracer.n_spans} spans, {tracer.n_fences} fenced)")
 
 
 if __name__ == "__main__":

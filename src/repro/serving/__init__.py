@@ -20,3 +20,13 @@ from repro.serving.speculative import (  # noqa: F401
     request_key,
     tree_layout,
 )
+from repro.serving.telemetry import (  # noqa: F401
+    METRICS_SCHEMA,
+    NULL_TRACER,
+    MetricsSchemaError,
+    NullTracer,
+    Tracer,
+    load_workload,
+    stage_timeline,
+    validate_metrics,
+)

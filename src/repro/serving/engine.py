@@ -94,11 +94,13 @@ from repro.analysis import sanitizer
 from repro.models import (decode_step, decode_step_paged, decode_step_ragged,
                           init_cache, prefill_step, prefill_step_paged)
 from repro.sparse import install_sparse_ffn
+from repro.serving import telemetry
 from repro.serving.kv_cache import PagedKVCache, SlotKVCache
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.speculative import (ROLE_TARGET, SpeculativeDecoder,
                                        request_key)
+from repro.serving.telemetry import NULL_TRACER, Tracer, lane_track
 
 
 def apply_weight_masks(params, cfg, masks: Dict):
@@ -188,7 +190,8 @@ class ServeEngine:
                  sparse_weights: Optional[Dict] = None,
                  sparse_exec: Optional[str] = None,
                  prefix_cache: bool = False,
-                 prefix_cache_max_pages: Optional[int] = None):
+                 prefix_cache_max_pages: Optional[int] = None,
+                 trace=None):
         if kv_layout not in ("paged", "slot"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if prefix_cache and kv_layout != "paged":
@@ -340,10 +343,39 @@ class ServeEngine:
                                          n_branches=spec_tree, seed=seed)
                       if spec_decode else None)
         self._sample = jax.jit(self._sample_fn)
+        # span tracer (telemetry.py): None/False -> the shared no-op
+        # NullTracer (zero-allocation trace points — the default);
+        # True -> a fresh Tracer; or pass a configured Tracer (e.g.
+        # Tracer(fence_rate=0.1) to sample block_until_ready fencing)
+        if trace is None or trace is False:
+            tracer = NULL_TRACER
+        elif trace is True:
+            tracer = Tracer()
+        elif isinstance(trace, (Tracer, telemetry.NullTracer)):
+            tracer = trace
+        else:
+            raise ValueError(f"trace must be a Tracer, bool, or None: "
+                             f"{trace!r}")
+        self.set_tracer(tracer)
 
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
+    def set_tracer(self, tracer) -> None:
+        """Wire ``tracer`` through every instrumented component (caches,
+        scheduler completion hook).  Called by ``__init__``; also usable
+        post-construction, e.g. to attach a fresh tracer after a
+        warmup/compile wave so the trace covers only steady state."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.cache is not None:
+            self.cache.tracer = self.tracer
+        if self.prefix_cache is not None:
+            self.prefix_cache.tracer = self.tracer
+        # retroactive per-request lifecycle spans fire at completion,
+        # while the stage stamps are still attached to the state
+        self.scheduler.on_finish = (self.tracer.request_done
+                                    if self.tracer.enabled else None)
+
     def submit(self, request: Request) -> int:
         """Queue a request; returns its id.  ``run()`` drains the queue.
 
@@ -362,7 +394,11 @@ class ServeEngine:
         distribution exactly the dense model's at any temperature.
         """
         self._validate(request)
-        return self.scheduler.submit(request, time.monotonic())
+        rid = self.scheduler.submit(request, time.monotonic())
+        self.tracer.record_request(rid, request.prompt,
+                                   request.max_new_tokens,
+                                   request.temperature)
+        return rid
 
     def _validate(self, request: Request):
         """Raise ValueError for a request that could never be admitted —
@@ -420,6 +456,7 @@ class ServeEngine:
         if stage is None:
             return False
         self.requests_canceled += 1
+        self.tracer.instant("cancel", rid=rid, stage=stage)
         if stage in ("prefilling", "active") and self.cache is not None:
             self._prefills.pop(rid, None)
             self.cache.release(st.slot)
@@ -467,7 +504,12 @@ class ServeEngine:
         ``cache_hit_rate`` / ``shared_pages`` / ``cow_forks``; with
         ``prefix_cache=True`` the ``prefix_*`` counters (lookups, hits,
         hit rate, resident cached pages, claimed tokens, token-savings
-        ratio, evicted pages) are merged in as well."""
+        ratio, evicted pages) are merged in as well.  Completed requests
+        also feed the JetStream-style stage split —
+        ``p50/p95_{queue,prefill,decode}_s``.  Every key is declared in
+        ``telemetry.METRICS_SCHEMA`` (the canonical schema, pinned to
+        the table in docs/serving.md); undeclared keys raise
+        ``MetricsSchemaError``."""
         stats = self.scheduler.latencies()
         if self.cache is not None:
             stats.update(self.cache.gauges())
@@ -475,7 +517,23 @@ class ServeEngine:
             stats.update(self._spec.stats.as_dict())
         if self.prefix_cache is not None:
             stats.update(self.prefix_cache.stats())
-        return stats
+        # every emitted key must be declared in the unified schema
+        # (telemetry.METRICS_SCHEMA, pinned to the docs/serving.md table)
+        return telemetry.validate_metrics(stats, "latency_stats")
+
+    def metrics(self) -> Dict[str, float]:
+        """``latency_stats()`` plus the engine dispatch counters — the
+        full unified-schema snapshot (every key declared in
+        ``telemetry.METRICS_SCHEMA``)."""
+        stats = self.latency_stats()
+        stats.update({
+            "prefill_dispatches": float(self.prefill_dispatches),
+            "decode_dispatches": float(self.decode_dispatches),
+            "requests_admitted": float(self.requests_admitted),
+            "requests_canceled": float(self.requests_canceled),
+            "pages_allocated": float(self.pages_allocated),
+        })
+        return telemetry.validate_metrics(stats, "metrics")
 
     def reset_stats(self):
         """Clear latency history and dispatch counters (e.g. after a
@@ -521,50 +579,59 @@ class ServeEngine:
             nxt = sched.pending[0]
             S = len(nxt.req.prompt)
             total = S + nxt.req.max_new_tokens
-            cached_len, full_hit = 0, False
-            if self.prefix_cache is not None:
-                cached_len, shared = self.prefix_cache.match(nxt.req.prompt)
-                full_hit = cached_len == S
-                if not full_hit:
-                    # partial hits resume on the chunked-prefill grid:
-                    # claim whole claim-grain units so chunk dispatches
-                    # stay aligned with the cold-path grid
-                    grain = self._claim_grain
-                    cached_len = (cached_len // grain) * grain
-                    shared = shared[: cached_len // cache.page_size]
-                slot = cache.alloc(total, shared_pages=shared,
-                                   fork_last=full_hit)
-            else:
-                slot = cache.alloc(total)
-            if slot is None:           # FIFO: wait for pages/lane to free
-                break
-            st = sched.admit(slot)
-            self.requests_admitted += 1
-            if isinstance(cache, PagedKVCache):
-                self.pages_allocated += cache.lifetime_pages(total)
-            if self.prefix_cache is not None:
-                self.prefix_cache.note_claim(cached_len, S)
-            if full_hit:
-                # fully cached prompt — ZERO prefill dispatches: rows
-                # [0, S-1) are shared cached K/V; row S-1 lives in the
-                # COW-forked private last page and is rewritten by
-                # replaying the final prompt token through the next
-                # batched decode dispatch, whose logits yield the first
-                # generated token (numerically the same last-position
-                # logits prefill would have produced)
-                st.prefill_pos = S
-                st.replay_token = int(nxt.req.prompt[S - 1])
-                cache.seq_lens[st.slot] = S - 1
-                sched.activate(st.rid)
-                continue
-            if cached_len:
-                # resume the PR-4 prefill cursor past the claimed prefix;
-                # rows [0, cached_len) already hold valid shared K/V, so
-                # interleaved placeholder writes (at row cached_len, in
-                # the first PRIVATE page) stay off the shared pages
-                st.prefill_pos = cached_len
-                cache.seq_lens[st.slot] = cached_len
-            self._begin_prefill(st)
+            # one admission span per attempt, covering prefix match +
+            # claim + page allocation; a failed attempt (pool full)
+            # records admitted=False and ends the FIFO scan
+            with self.tracer.span("admission", prompt_len=S) as sp:
+                cached_len, full_hit = 0, False
+                if self.prefix_cache is not None:
+                    cached_len, shared = \
+                        self.prefix_cache.match(nxt.req.prompt)
+                    full_hit = cached_len == S
+                    if not full_hit:
+                        # partial hits resume on the chunked-prefill grid:
+                        # claim whole claim-grain units so chunk dispatches
+                        # stay aligned with the cold-path grid
+                        grain = self._claim_grain
+                        cached_len = (cached_len // grain) * grain
+                        shared = shared[: cached_len // cache.page_size]
+                    slot = cache.alloc(total, shared_pages=shared,
+                                       fork_last=full_hit)
+                else:
+                    slot = cache.alloc(total)
+                if slot is None:       # FIFO: wait for pages/lane to free
+                    sp.set(admitted=False)
+                    break
+                st = sched.admit(slot)
+                sp.set(rid=st.rid, slot=slot, cached_len=cached_len,
+                       full_hit=full_hit)
+                self.requests_admitted += 1
+                if isinstance(cache, PagedKVCache):
+                    self.pages_allocated += cache.lifetime_pages(total)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.note_claim(cached_len, S)
+                if full_hit:
+                    # fully cached prompt — ZERO prefill dispatches: rows
+                    # [0, S-1) are shared cached K/V; row S-1 lives in the
+                    # COW-forked private last page and is rewritten by
+                    # replaying the final prompt token through the next
+                    # batched decode dispatch, whose logits yield the first
+                    # generated token (numerically the same last-position
+                    # logits prefill would have produced)
+                    st.prefill_pos = S
+                    st.replay_token = int(nxt.req.prompt[S - 1])
+                    cache.seq_lens[st.slot] = S - 1
+                    sched.activate(st.rid)
+                    continue
+                if cached_len:
+                    # resume the PR-4 prefill cursor past the claimed
+                    # prefix; rows [0, cached_len) already hold valid
+                    # shared K/V, so interleaved placeholder writes (at
+                    # row cached_len, in the first PRIVATE page) stay off
+                    # the shared pages
+                    st.prefill_pos = cached_len
+                    cache.seq_lens[st.slot] = cached_len
+                self._begin_prefill(st)
             if self.schedule == "blocking":
                 while st.rid in sched.prefilling:   # run prompt to the end
                     self._prefill_chunk(st)
@@ -586,15 +653,16 @@ class ServeEngine:
             # prompt token (first-token logits, zero prefill dispatches)
             tokens[st.slot, 0] = (st.tokens[-1] if st.tokens
                                   else st.replay_token)
-        if isinstance(cache, PagedKVCache):
-            logits, cache.tree = self._decode(self.params, cache.tree,
-                                              sanitizer.device_view(tokens),
-                                              cache.seq_lens_device(),
-                                              cache.page_table_device())
-        else:
-            logits, cache.tree = self._decode(self.params, cache.tree,
-                                              sanitizer.device_view(tokens),
-                                              cache.seq_lens_device())
+        with self.tracer.span("decode", n_active=len(active)) as sp:
+            if isinstance(cache, PagedKVCache):
+                logits, cache.tree = self._decode(
+                    self.params, cache.tree, sanitizer.device_view(tokens),
+                    cache.seq_lens_device(), cache.page_table_device())
+            else:
+                logits, cache.tree = self._decode(
+                    self.params, cache.tree, sanitizer.device_view(tokens),
+                    cache.seq_lens_device())
+            sp.fence(logits)
         self.decode_dispatches += 1
         for st in active:
             cache.advance(st.slot)
@@ -643,9 +711,15 @@ class ServeEngine:
         buf, S, n_pad, ref = self._prefills[st.rid]
         C = self.prefill_chunk
         c0 = st.prefill_pos
-        logits, cache.tree = self._prefill(
-            self.params, cache.tree,
-            sanitizer.device_view(buf[None, c0: c0 + C]), ref, jnp.int32(c0))
+        # span carries the resumable-cursor position, so a Perfetto lane
+        # row shows exactly which prompt chunk each dispatch covered
+        with self.tracer.span("prefill_chunk", track=lane_track(st.slot),
+                              rid=st.rid, pos=c0, chunk=C) as sp:
+            logits, cache.tree = self._prefill(
+                self.params, cache.tree,
+                sanitizer.device_view(buf[None, c0: c0 + C]), ref,
+                jnp.int32(c0))
+            sp.fence(logits)
         self.prefill_dispatches += 1
         st.prefill_pos = c0 + C
         if st.prefill_pos < n_pad:

@@ -42,6 +42,7 @@ import asyncio
 from typing import AsyncIterator, Optional
 
 from repro.serving.scheduler import Request
+from repro.serving.telemetry import stage_timeline
 
 _DONE = object()          # queue sentinel: stream complete
 _CANCELED = object()      # queue sentinel: request canceled engine-side
@@ -64,6 +65,11 @@ class TokenStream:
         self.tokens: list = []         # everything yielded so far
         self.finished = False          # engine delivered the full stream
         self.canceled = False
+        # per-request stage split (telemetry.stage_timeline dict:
+        # queue_s / prefill_s / decode_s / total_s / ttft_s / n_tokens),
+        # captured at completion before the scheduler pops the state;
+        # None until finished (and for canceled streams)
+        self.timeline: Optional[dict] = None
 
     def cancel(self) -> bool:
         """Abort this request engine-side (idempotent).  Returns True if
@@ -202,6 +208,8 @@ class AsyncFrontend:
                 stream.queue.put_nowait(tok)
             if st.done:
                 stream.finished = True
+                # capture the stage split BEFORE result() pops the state
+                stream.timeline = stage_timeline(st)
                 stream.queue.put_nowait(_DONE)
                 sched.result(rid)      # pop finished state; tokens are ours
                 del self._streams[rid]

@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.analysis import sanitizer
 from repro.models import init_cache, init_paged_cache
+from repro.serving.telemetry import NULL_TRACER, TRACK_CACHE
 
 
 class PagedKVCache:
@@ -118,6 +119,7 @@ class PagedKVCache:
         self._prefix = None              # attached PrefixCache (optional)
         self._fork_fn = None             # jitted COW page copy, built lazily
         self.cow_forks = 0               # copy-on-write forks (gauge)
+        self.tracer = NULL_TRACER        # set by ServeEngine.set_tracer
 
     # ---- lifecycle ------------------------------------------------------
     @property
@@ -175,6 +177,16 @@ class PagedKVCache:
         ``seq_lens[slot]`` to the claimed prefix length next (0 for a
         cold admission) — until then idle-lane placeholder writes would
         land at row 0, which on a cache hit is shared."""
+        with self.tracer.span("page_alloc", track=TRACK_CACHE,
+                              tokens=int(n_tokens),
+                              shared=len(shared_pages),
+                              fork=bool(fork_last)) as sp:
+            slot = self._alloc(n_tokens, shared_pages, fork_last)
+            sp.set(slot=-1 if slot is None else int(slot))
+            return slot
+
+    def _alloc(self, n_tokens: int, shared_pages: Sequence[int],
+               fork_last: bool) -> Optional[int]:
         need = self.lifetime_pages(n_tokens)
         shared = [int(p) for p in shared_pages]
         assert len(shared) <= need and (not fork_last or shared)
@@ -284,7 +296,11 @@ class PagedKVCache:
                 lambda tr, s, d: jax.tree.map(
                     lambda x: x.at[:, d].set(x[:, s]), tr),
                 donate_argnums=donate)
-        self.tree = self._fork_fn(self.tree, jnp.int32(src), jnp.int32(dst))
+        with self.tracer.span("cow_fork", track=TRACK_CACHE,
+                              src=int(src), dst=int(dst)) as sp:
+            self.tree = self._fork_fn(self.tree, jnp.int32(src),
+                                      jnp.int32(dst))
+            sp.fence(self.tree)
 
     def _invalidate_table(self, slot: Optional[int] = None):
         """A page-table mutation stales the cached device snapshots."""
@@ -412,6 +428,9 @@ class SlotKVCache:
                                         "SlotKVCache.seq_lens")
         self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
         self._prefilling: set = set()    # lanes mid-prefill (gauges)
+        # slot allocation is a host-side list pop — no spans worth a
+        # track row; the attr just keeps set_tracer layout-agnostic
+        self.tracer = NULL_TRACER
 
     # ---- slot lifecycle -------------------------------------------------
     @property

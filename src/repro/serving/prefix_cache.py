@@ -44,6 +44,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.serving.telemetry import NULL_TRACER, TRACK_CACHE
+
 
 class _Node:
     """One cached page: ``chunk`` (page_size-token tuple) -> ``page``."""
@@ -83,6 +85,7 @@ class PrefixCache:
         self.prompt_tokens = 0      # prompt tokens over all admissions
         self.inserted_pages = 0
         self.evicted_pages = 0
+        self.tracer = NULL_TRACER   # set by ServeEngine.set_tracer
 
     # ---- chunking --------------------------------------------------------
     def _chunks(self, tokens) -> List[tuple]:
@@ -102,17 +105,20 @@ class PrefixCache:
         refcounts) via the pool's ``alloc(..., shared_pages=pages)``, and
         may round the claim down (e.g. to its prefill-chunk grid) by
         truncating the list."""
-        self._tick += 1
-        pages: List[int] = []
-        level = self._children
-        for chunk in self._chunks(tokens):
-            node = level.get(chunk)
-            if node is None:
-                break
-            node.tick = self._tick
-            pages.append(node.page)
-            level = node.children
-        return len(pages) * self.page_size, pages
+        with self.tracer.span("prefix_match", track=TRACK_CACHE,
+                              prompt_len=len(tokens)) as sp:
+            self._tick += 1
+            pages: List[int] = []
+            level = self._children
+            for chunk in self._chunks(tokens):
+                node = level.get(chunk)
+                if node is None:
+                    break
+                node.tick = self._tick
+                pages.append(node.page)
+                level = node.children
+            sp.set(matched_tokens=len(pages) * self.page_size)
+            return len(pages) * self.page_size, pages
 
     def note_claim(self, cached_len: int, prompt_len: int):
         """Hit/miss accounting for one successful admission (kept apart
@@ -134,23 +140,26 @@ class PrefixCache:
         node retains its page, so the pages outlive the lane.  Returns
         the number of pages newly cached; afterwards an LRU trim enforces
         ``max_pages`` (never evicting lane-referenced pages)."""
-        self._tick += 1
-        added = 0
-        level, parent = self._children, None
-        for i, chunk in enumerate(self._chunks(tokens)):
-            node = level.get(chunk)
-            if node is None:
-                node = _Node(chunk, int(pages[i]), parent)
-                self.pool.retain_page(node.page)
-                level[chunk] = node
-                self.n_nodes += 1
-                added += 1
-            node.tick = self._tick
-            level, parent = node.children, node
-        self.inserted_pages += added
-        if self.max_pages is not None and self.n_nodes > self.max_pages:
-            self.evict(self.n_nodes - self.max_pages)
-        return added
+        with self.tracer.span("prefix_insert", track=TRACK_CACHE,
+                              prompt_len=len(tokens)) as sp:
+            self._tick += 1
+            added = 0
+            level, parent = self._children, None
+            for i, chunk in enumerate(self._chunks(tokens)):
+                node = level.get(chunk)
+                if node is None:
+                    node = _Node(chunk, int(pages[i]), parent)
+                    self.pool.retain_page(node.page)
+                    level[chunk] = node
+                    self.n_nodes += 1
+                    added += 1
+                node.tick = self._tick
+                level, parent = node.children, node
+            self.inserted_pages += added
+            sp.set(added=added)
+            if self.max_pages is not None and self.n_nodes > self.max_pages:
+                self.evict(self.n_nodes - self.max_pages)
+            return added
 
     # ---- eviction --------------------------------------------------------
     def _evictable_leaves(self) -> List[_Node]:
@@ -171,6 +180,13 @@ class PrefixCache:
         references it) are candidates, so eviction can never free a page
         out from under a live dispatch.  Evicting a leaf may expose its
         parent as the next candidate.  Returns the number reclaimed."""
+        with self.tracer.span("prefix_evict", track=TRACK_CACHE,
+                              wanted=int(n_pages)) as sp:
+            done = self._evict(n_pages)
+            sp.set(reclaimed=done)
+            return done
+
+    def _evict(self, n_pages: int) -> int:
         done = 0
         leaves = self._evictable_leaves()
         leaves.sort(key=lambda nd: nd.tick)     # oldest first

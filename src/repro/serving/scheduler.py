@@ -86,6 +86,11 @@ class RequestState:
     replay_token: Optional[int] = None
     canceled: bool = False
     t_submit: float = 0.0
+    # stage boundaries for the queue -> prefill -> decode split
+    # (telemetry.stage_timeline): admission grants the lane, activation
+    # marks prefill complete / decode begun
+    t_admit: Optional[float] = None
+    t_active: Optional[float] = None
     t_first_token: Optional[float] = None
     t_last_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -121,6 +126,19 @@ class Scheduler:
             maxlen=latency_window)
         self._itl: collections.deque = collections.deque(
             maxlen=8 * latency_window)
+        # per-stage windows (queue wait / prefill / decode), fed at
+        # completion from the stage stamps — the JetStream-style split
+        # behind p50/p95_{queue,prefill,decode}_s
+        self._queue: collections.deque = collections.deque(
+            maxlen=latency_window)
+        self._prefill: collections.deque = collections.deque(
+            maxlen=latency_window)
+        self._decode: collections.deque = collections.deque(
+            maxlen=latency_window)
+        # completion hook (e.g. Tracer.request_done): called with the
+        # finished RequestState while its stamps are still attached,
+        # BEFORE result() can pop it.  None (default) costs nothing.
+        self.on_finish = None
 
     @staticmethod
     def _now(now: Optional[float]) -> float:
@@ -151,17 +169,20 @@ class Scheduler:
                                          t_submit=self._now(now)))
         return rid
 
-    def admit(self, slot: int) -> RequestState:
+    def admit(self, slot: int, now: Optional[float] = None
+              ) -> RequestState:
         """Move the oldest pending request into a (pre-allocated) lane.
 
         The request enters the **prefilling** stage; ``activate()`` moves
         it to decode-active once its prompt is fully prefilled."""
         st = self.pending.popleft()
         st.slot = slot
+        st.t_admit = self._now(now)
         self.prefilling[st.rid] = st
         return st
 
-    def activate(self, rid: int) -> RequestState:
+    def activate(self, rid: int, now: Optional[float] = None
+                 ) -> RequestState:
         """Prefill complete: move a prefilling request to decode-active.
         The caller samples the first token (from the final prefill
         chunk's logits) and feeds it through ``on_token`` next."""
@@ -169,6 +190,7 @@ class Scheduler:
         if st is None:
             raise SchedulerError(f"activate() for request {rid}, which is "
                                  f"not mid-prefill")
+        st.t_active = self._now(now)
         self.active[rid] = st
         return st
 
@@ -269,6 +291,12 @@ class Scheduler:
             del self.active[rid]
             self.finished[rid] = st
             self._latency.append(st.t_done - st.t_submit)
+            if st.t_admit is not None and st.t_active is not None:
+                self._queue.append(st.t_admit - st.t_submit)
+                self._prefill.append(st.t_active - st.t_admit)
+                self._decode.append(st.t_done - st.t_active)
+            if self.on_finish is not None:
+                self.on_finish(st)
             return True
         return False
 
@@ -356,9 +384,19 @@ class Scheduler:
             itl = np.asarray(self._itl)
             out["p50_inter_token_s"] = float(np.percentile(itl, 50))
             out["p95_inter_token_s"] = float(np.percentile(itl, 95))
+        for name, window in (("queue", self._queue),
+                             ("prefill", self._prefill),
+                             ("decode", self._decode)):
+            if window:
+                vals = np.asarray(window)
+                out[f"p50_{name}_s"] = float(np.percentile(vals, 50))
+                out[f"p95_{name}_s"] = float(np.percentile(vals, 95))
         return out
 
     def reset_latencies(self):
         self._latency.clear()
         self._ttft.clear()
         self._itl.clear()
+        self._queue.clear()
+        self._prefill.clear()
+        self._decode.clear()

@@ -516,21 +516,32 @@ class SpeculativeDecoder:
         temps_d = jnp.asarray(temps)
         rids_d = jnp.asarray(rids)
         ms_d = jnp.asarray(ms)
-        draft, dlg, cache.tree = self._draft(
-            engine.draft_params, cache.tree, last_dev, seq, tbl,
-            temps_d, rids_d, ms_d)
+        tracer = engine.tracer
+        with tracer.span("spec_draft", lanes=len(active), k=k,
+                         branches=N) as sp:
+            draft, dlg, cache.tree = self._draft(
+                engine.draft_params, cache.tree, last_dev, seq, tbl,
+                temps_d, rids_d, ms_d)
+            sp.fence(draft)
         block = jnp.concatenate([last_dev, draft.reshape(B, N * k)], axis=1)
-        winner, accept, next_tok, cache.tree = self._verify(
-            engine.params, cache.tree, block, seq, tbl, dlg,
-            temps_d, rids_d, ms_d)
+        with tracer.span("spec_verify", lanes=len(active)) as sp:
+            winner, accept, next_tok, cache.tree = self._verify(
+                engine.params, cache.tree, block, seq, tbl, dlg,
+                temps_d, rids_d, ms_d)
+            # materialize inside the span: the host transfer is where the
+            # verify dispatch's device time surfaces, and the accept
+            # counts become span args for the Perfetto view
+            draft_np = np.asarray(draft)
+            w_np = np.asarray(winner)
+            a_np = np.asarray(accept)
+            n_np = np.asarray(next_tok)
+            sp.set(accepted=int(a_np[[st.slot for st in active]].sum())
+                   if active else 0,
+                   drafted=k * len(active))
         engine.decode_dispatches += 2          # 1 fused draft + 1 verify
         self.stats.rounds += 1
         self.stats.draft_dispatches += 1
         self.stats.verify_dispatches += 1
-        draft_np = np.asarray(draft)
-        w_np = np.asarray(winner)
-        a_np = np.asarray(accept)
-        n_np = np.asarray(next_tok)
         now = time.monotonic()
         for st in active:
             b = st.slot

@@ -1,0 +1,474 @@
+"""Structured serving telemetry: span tracing, the unified metrics
+schema, per-request stage timelines, and workload-trace record/replay.
+
+Three layers, all zero-cost when disabled (the ``REPRO_SANITIZE``
+pattern — the default ``NULL_TRACER`` allocates nothing per call):
+
+**Spans.**  :class:`Tracer` records stage-typed spans around every
+engine-step phase — admission, prefix match/insert/evict, prefill
+chunks (with the resumable-cursor position), decode rounds, spec
+draft/verify (with accept counts), page alloc/COW-fork, cancel — on a
+monotonic clock.  JAX dispatches return before the device finishes, so
+a span that merely brackets a dispatch measures *enqueue* cost; call
+:meth:`Span.fence` with the dispatch outputs and the tracer samples
+``jax.block_until_ready`` at span close (``fence_rate``, a
+deterministic accumulator — no RNG) so device time is attributed to
+the dispatch that issued it without fencing every step.  Spans export
+as Chrome-trace-event JSON (:meth:`Tracer.export`) loadable in
+Perfetto / ``chrome://tracing``: one track per engine lane plus
+scheduler / cache / queue tracks.
+
+**Metrics schema.**  ``METRICS_SCHEMA`` is the single canonical
+declaration of every key ``ServeEngine.latency_stats()`` (and the
+wider ``ServeEngine.metrics()``) may emit — scheduler latency windows,
+cache gauges, spec counters, prefix-cache counters, engine dispatch
+counters.  ``validate_metrics`` rejects undeclared keys, and a pin
+test holds the schema equal to the documented table in
+``docs/serving.md``, so the three historical dict schemas can no
+longer drift apart silently.
+
+**Stage timelines & workload traces.**  :func:`stage_timeline` splits
+a finished request JetStream-style (queue -> prefill -> decode) from
+the scheduler's per-request stamps; the tracer also records a
+replayable workload trace — ``(arrival_offset_s, prompt_len,
+max_new_tokens, seed)`` per submitted request — that
+``benchmarks/bench_slo.py --replay`` drives back through the open-loop
+harness (see ``docs/observability.md`` for the format).
+"""
+from __future__ import annotations
+
+import json
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional
+
+# ---------------------------------------------------------------------------
+# track layout (Chrome trace: pid/tid pairs; we use one process, one
+# tid per track, named via metadata events)
+
+TRACK_SCHEDULER = "scheduler"   # admission / decode / spec / cancel
+TRACK_CACHE = "cache"           # page alloc / COW fork / prefix ops
+TRACK_QUEUE = "queue"           # retroactive per-request queue spans
+
+
+def lane_track(slot: int) -> str:
+    """Track name for a cache lane (one Perfetto row per lane)."""
+    return f"lane {int(slot)}"
+
+
+# ---------------------------------------------------------------------------
+# null implementations — the disabled path.  ``NULL_SPAN`` is a shared
+# singleton: a disabled trace point allocates NOTHING (pin-tested).
+
+class _NullSpan:
+    """Shared no-op span; every method is a constant-time no-op."""
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **args) -> None:
+        pass
+
+    def fence(self, payload):
+        return payload
+
+
+NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Disabled tracer: the engine default.  Every hook is a no-op and
+    ``span()`` returns the shared :data:`NULL_SPAN` singleton, so
+    tracing-off costs one attribute lookup + one call per trace point
+    and zero allocations.
+    """
+    enabled = False
+    fence_rate = 0.0
+
+    def span(self, name, track=TRACK_SCHEDULER, **args) -> _NullSpan:
+        return NULL_SPAN
+
+    def instant(self, name, track=TRACK_SCHEDULER, **args) -> None:
+        pass
+
+    def complete(self, name, track, t_start, t_end, **args) -> None:
+        pass
+
+    def record_request(self, rid, prompt, max_new_tokens,
+                       temperature=0.0) -> None:
+        pass
+
+    def request_done(self, st) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()
+
+
+# ---------------------------------------------------------------------------
+# live tracer
+
+class Span:
+    """One in-flight span.  Use as a context manager::
+
+        with tracer.span("decode", n_active=4) as sp:
+            logits, tree = decode(...)
+            sp.fence(logits)          # sampled block_until_ready at close
+            sp.set(tokens=4)          # extra args, post-hoc
+
+    ``fence()`` registers the dispatch outputs; whether the close
+    actually blocks is decided by the tracer's deterministic
+    ``fence_rate`` sampler, so steady-state overhead is bounded.
+    """
+    __slots__ = ("_tracer", "name", "track", "args", "t_start", "_payload")
+
+    def __init__(self, tracer: "Tracer", name: str, track: str,
+                 args: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.track = track
+        self.args = args
+        self.t_start = 0.0
+        self._payload = None
+
+    def __enter__(self) -> "Span":
+        self.t_start = self._tracer._clock()
+        return self
+
+    def set(self, **args) -> None:
+        self.args.update(args)
+
+    def fence(self, payload):
+        self._payload = payload
+        return payload
+
+    def __exit__(self, *exc) -> bool:
+        tracer = self._tracer
+        if self._payload is not None and tracer._take_fence():
+            import jax  # deferred: schema/replay users never import jax
+            jax.block_until_ready(self._payload)
+            tracer.n_fences += 1
+            self.args.setdefault("fenced", True)
+        tracer.complete(self.name, self.track, self.t_start,
+                        tracer._clock(), **self.args)
+        return False
+
+
+class Tracer:
+    """Span recorder with Chrome-trace export and workload capture.
+
+    ``fence_rate`` in [0, 1] is the fraction of *fenced* span closes
+    that actually ``jax.block_until_ready`` their payload (0.0 — the
+    default — never blocks; 1.0 fences every dispatch).  Sampling is a
+    deterministic accumulator, not RNG, so traced runs stay replayable.
+
+    ``clock`` defaults to ``time.monotonic``; tests inject fake clocks.
+    """
+    enabled = True
+
+    def __init__(self, fence_rate: float = 0.0, clock=time.monotonic):
+        if not 0.0 <= fence_rate <= 1.0:
+            raise ValueError(f"fence_rate must be in [0, 1]: {fence_rate}")
+        self.fence_rate = float(fence_rate)
+        self._clock = clock
+        self.t0 = clock()
+        self.events: List[Dict[str, Any]] = []
+        self.workload: List[Dict[str, Any]] = []
+        self.n_spans = 0
+        self.n_fences = 0
+        self._fence_acc = 0.0
+        self._tids: Dict[str, int] = {}
+        for track in (TRACK_SCHEDULER, TRACK_CACHE, TRACK_QUEUE):
+            self._tid(track)
+
+    # -- internals --------------------------------------------------------
+
+    def _tid(self, track: str) -> int:
+        tid = self._tids.get(track)
+        if tid is None:
+            tid = len(self._tids)
+            self._tids[track] = tid
+            self.events.append({"ph": "M", "name": "thread_name",
+                                "pid": 0, "tid": tid,
+                                "args": {"name": track}})
+        return tid
+
+    def _take_fence(self) -> bool:
+        if self.fence_rate <= 0.0:
+            return False
+        self._fence_acc += self.fence_rate
+        if self._fence_acc >= 1.0:
+            self._fence_acc -= 1.0
+            return True
+        return False
+
+    # -- span API ---------------------------------------------------------
+
+    def span(self, name: str, track: str = TRACK_SCHEDULER,
+             **args) -> Span:
+        self.n_spans += 1
+        return Span(self, name, track, args)
+
+    def complete(self, name: str, track: str, t_start: float,
+                 t_end: float, **args) -> None:
+        """Record a finished span directly (retroactive spans use this
+        with scheduler timestamps — nesting is by time containment, so
+        emission order does not matter)."""
+        self.events.append({
+            "ph": "X", "name": name, "pid": 0, "tid": self._tid(track),
+            "ts": (t_start - self.t0) * 1e6,
+            "dur": max(0.0, (t_end - t_start) * 1e6),
+            "args": args,
+        })
+
+    def instant(self, name: str, track: str = TRACK_SCHEDULER,
+                **args) -> None:
+        self.events.append({
+            "ph": "i", "s": "t", "name": name, "pid": 0,
+            "tid": self._tid(track),
+            "ts": (self._clock() - self.t0) * 1e6, "args": args,
+        })
+
+    # -- per-request lifecycle -------------------------------------------
+
+    def record_request(self, rid: int, prompt, max_new_tokens: int,
+                       temperature: float = 0.0) -> None:
+        """Append one workload-trace record at submit time."""
+        self.workload.append({
+            "arrival_offset_s": round(self._clock() - self.t0, 6),
+            "prompt_len": int(len(prompt)),
+            "max_new_tokens": int(max_new_tokens),
+            "seed": prompt_seed(prompt),
+            "temperature": float(temperature),
+        })
+
+    def request_done(self, st) -> None:
+        """Emit the retroactive lifecycle spans for a finished request
+        (wired as ``Scheduler.on_finish``): a queue span on the queue
+        track, and request/prefill/decode spans on the request's lane
+        track.  Args carry the same windows ``latency_stats()``
+        aggregates (``ttft_s``, the per-token gap trace), so traces
+        reconcile exactly with the pooled percentiles (pin-tested).
+        """
+        timeline = stage_timeline(st)
+        if timeline is None:
+            return
+        lane = lane_track(st.slot)
+        self.n_spans += 4
+        self.complete(f"queue rid={st.rid}", TRACK_QUEUE,
+                      st.t_submit, st.t_admit, rid=st.rid)
+        self.complete(f"request rid={st.rid}", lane, st.t_admit,
+                      st.t_done, rid=st.rid,
+                      itl_gaps=[float(g) for g in st.itl], **timeline)
+        self.complete("prefill", lane, st.t_admit, st.t_active,
+                      rid=st.rid)
+        self.complete("decode", lane, st.t_active, st.t_done,
+                      rid=st.rid, n_tokens=len(st.tokens))
+
+    # -- export -----------------------------------------------------------
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        return {"traceEvents": list(self.events),
+                "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> None:
+        """Write Chrome-trace-event JSON (open in Perfetto)."""
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+    def dump_workload(self, path: str) -> None:
+        """Write the recorded workload trace as JSONL for ``--replay``."""
+        with open(path, "w") as f:
+            for rec in self.workload:
+                f.write(json.dumps(rec) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# per-request stage timeline (JetStream-style queue/prefill/decode split)
+
+def stage_timeline(st) -> Optional[Dict[str, Any]]:
+    """Split a finished request's wall time into stages from the
+    scheduler's stamps.  Duck-typed over ``RequestState`` (needs
+    ``t_submit/t_admit/t_active/t_done/t_first_token/tokens``); returns
+    None until the request finished with full stamps (e.g. a request
+    driven through a bare Scheduler without admit/activate times, or a
+    canceled one).
+    """
+    if (getattr(st, "t_done", None) is None
+            or getattr(st, "t_admit", None) is None
+            or getattr(st, "t_active", None) is None):
+        return None
+    return {
+        "queue_s": st.t_admit - st.t_submit,
+        "prefill_s": st.t_active - st.t_admit,
+        "decode_s": st.t_done - st.t_active,
+        "total_s": st.t_done - st.t_submit,
+        "ttft_s": (None if st.t_first_token is None
+                   else st.t_first_token - st.t_submit),
+        "n_tokens": len(st.tokens),
+    }
+
+
+# ---------------------------------------------------------------------------
+# workload traces (record/replay format; docs/observability.md)
+
+WORKLOAD_FIELDS = ("arrival_offset_s", "prompt_len", "max_new_tokens",
+                   "seed")
+
+
+def prompt_seed(prompt) -> int:
+    """Deterministic content seed for a prompt token sequence — replay
+    regenerates a synthetic prompt of the same length from it, so
+    traces ship no raw text."""
+    return zlib.crc32(",".join(str(int(t)) for t in prompt).encode())
+
+
+def load_workload(path: str) -> List[Dict[str, Any]]:
+    """Parse + validate a JSONL workload trace; returns records sorted
+    by arrival offset."""
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            for field in WORKLOAD_FIELDS:
+                if field not in rec:
+                    raise ValueError(
+                        f"{path}:{i}: workload record missing "
+                        f"{field!r} (need {WORKLOAD_FIELDS})")
+            if rec["arrival_offset_s"] < 0 or rec["prompt_len"] <= 0 \
+                    or rec["max_new_tokens"] <= 0:
+                raise ValueError(f"{path}:{i}: non-positive field "
+                                 f"in {rec}")
+            records.append(rec)
+    if not records:
+        raise ValueError(f"{path}: empty workload trace")
+    records.sort(key=lambda r: r["arrival_offset_s"])
+    return records
+
+
+# ---------------------------------------------------------------------------
+# unified metrics schema — the one canonical key set behind
+# ``latency_stats()`` / ``gauges()`` / ``SpecStats.as_dict()`` /
+# ``prefix_cache.stats()`` / ``ServeEngine.metrics()``.  The pin test
+# holds this equal to the documented table in docs/serving.md.
+
+@dataclass(frozen=True)
+class MetricSpec:
+    kind: str   # "histogram" | "gauge" | "counter"
+    doc: str
+
+
+_H, _G, _C = "histogram", "gauge", "counter"
+
+METRICS_SCHEMA: Dict[str, MetricSpec] = {
+    # scheduler latency windows (bounded deques; present once data exists)
+    "p50_latency_s": MetricSpec(_H, "median end-to-end request latency"),
+    "p95_latency_s": MetricSpec(_H, "p95 end-to-end request latency"),
+    "p50_first_token_s": MetricSpec(_H, "median TTFT (submit to first "
+                                        "token)"),
+    "p95_first_token_s": MetricSpec(_H, "p95 TTFT"),
+    "p50_inter_token_s": MetricSpec(_H, "median inter-token gap "
+                                        "(per-request trace, pooled)"),
+    "p95_inter_token_s": MetricSpec(_H, "p95 inter-token gap"),
+    # per-stage windows (queue -> prefill -> decode split)
+    "p50_queue_s": MetricSpec(_H, "median queue wait (submit to "
+                                  "admission)"),
+    "p95_queue_s": MetricSpec(_H, "p95 queue wait"),
+    "p50_prefill_s": MetricSpec(_H, "median prefill stage (admission "
+                                    "to activation)"),
+    "p95_prefill_s": MetricSpec(_H, "p95 prefill stage"),
+    "p50_decode_s": MetricSpec(_H, "median decode stage (activation "
+                                   "to done)"),
+    "p95_decode_s": MetricSpec(_H, "p95 decode stage"),
+    # paged KV cache gauges
+    "pages_in_use": MetricSpec(_G, "pages currently referenced"),
+    "pages_total": MetricSpec(_G, "page-pool capacity"),
+    "page_utilization": MetricSpec(_G, "pages_in_use / pages_total"),
+    "kv_fragmentation": MetricSpec(_G, "allocated-but-unwritten KV "
+                                       "fraction"),
+    "lanes_prefilling": MetricSpec(_G, "lanes mid-prefill"),
+    "prefill_pages_in_use": MetricSpec(_G, "pages held by prefilling "
+                                           "lanes"),
+    "cache_hit_rate": MetricSpec(_G, "alloc requests served without "
+                                     "eviction"),
+    "shared_pages": MetricSpec(_G, "pages with refcount > 1"),
+    "cow_forks": MetricSpec(_G, "copy-on-write page forks performed"),
+    # slot KV cache gauges (legacy layout)
+    "slots_in_use": MetricSpec(_G, "occupied cache slots"),
+    "slots_total": MetricSpec(_G, "cache slot capacity"),
+    "slot_utilization": MetricSpec(_G, "slots_in_use / slots_total"),
+    # speculative-decode counters (SpecStats.as_dict)
+    "spec_rounds": MetricSpec(_C, "draft+verify rounds"),
+    "spec_drafted": MetricSpec(_C, "per-lane path tokens proposed"),
+    "spec_drafted_nodes": MetricSpec(_C, "all draft-tree nodes "
+                                         "proposed"),
+    "spec_accepted": MetricSpec(_C, "draft tokens delivered"),
+    "spec_corrections": MetricSpec(_C, "correction/bonus tokens "
+                                       "delivered"),
+    "spec_emitted": MetricSpec(_C, "total tokens delivered via spec"),
+    "spec_accept_rate": MetricSpec(_G, "accepted / drafted"),
+    "spec_tokens_per_verify": MetricSpec(_G, "emitted per verify "
+                                             "dispatch"),
+    "spec_accepted_per_verify": MetricSpec(_G, "accepted draft tokens "
+                                               "per verify dispatch"),
+    # prefix-cache counters (prefix_cache.stats)
+    "prefix_lookups": MetricSpec(_C, "admission-time prefix lookups"),
+    "prefix_hits": MetricSpec(_C, "lookups matching >= 1 cached page"),
+    "prefix_hit_rate": MetricSpec(_G, "prefix_hits / prefix_lookups"),
+    "prefix_cached_pages": MetricSpec(_G, "pages resident in the trie"),
+    "prefix_claimed_tokens": MetricSpec(_C, "prompt tokens served from "
+                                            "cache"),
+    "prefix_token_savings": MetricSpec(_G, "claimed / offered prompt "
+                                           "tokens"),
+    "prefix_evicted_pages": MetricSpec(_C, "trie pages reclaimed by "
+                                           "LRU eviction"),
+    # engine dispatch counters (ServeEngine.metrics() only)
+    "prefill_dispatches": MetricSpec(_C, "prefill-chunk dispatches"),
+    "decode_dispatches": MetricSpec(_C, "decode/draft/verify "
+                                        "dispatches"),
+    "requests_admitted": MetricSpec(_C, "requests granted a cache "
+                                        "lane"),
+    "requests_canceled": MetricSpec(_C, "requests canceled mid-flight"),
+    "pages_allocated": MetricSpec(_C, "lifetime pages reserved at "
+                                      "admission"),
+}
+
+
+class MetricsSchemaError(KeyError):
+    """A metrics dict emitted a key not declared in METRICS_SCHEMA."""
+
+
+def validate_metrics(stats: Dict[str, Any],
+                     source: str = "latency_stats") -> Dict[str, Any]:
+    """Reject undeclared metric keys; returns ``stats`` unchanged.
+
+    Every emitting surface routes through this, so adding a metric
+    anywhere without declaring it in the schema (and therefore in the
+    docs/serving.md table, held equal by the pin test) fails fast.
+    """
+    unknown = [k for k in stats if k not in METRICS_SCHEMA]
+    if unknown:
+        raise MetricsSchemaError(
+            f"{source} emitted key(s) not in METRICS_SCHEMA: "
+            f"{sorted(unknown)} — declare them in "
+            f"repro.serving.telemetry.METRICS_SCHEMA and the metrics "
+            f"schema table in docs/serving.md")
+    return stats
+
+
+def schema_table(keys: Optional[Iterable[str]] = None) -> str:
+    """Render the schema as the markdown table embedded in
+    docs/serving.md (between the ``metrics-schema`` markers)."""
+    lines = ["| key | kind | meaning |", "|---|---|---|"]
+    for key in (keys or METRICS_SCHEMA):
+        spec = METRICS_SCHEMA[key]
+        lines.append(f"| `{key}` | {spec.kind} | {spec.doc} |")
+    return "\n".join(lines)

@@ -335,6 +335,83 @@ def matmul(a, b):
 
 
 # ---------------------------------------------------------------------------
+# timing-discipline
+# ---------------------------------------------------------------------------
+
+TIMING_BAD = '''
+import time
+
+class Engine:
+    def step(self, params, toks):
+        t0 = time.monotonic()
+        logits = self._decode(params, toks)
+        self.window.append(time.monotonic() - t0)
+'''
+
+# the minimal correct rewrite: materialize the dispatch result before
+# the closing stamp
+TIMING_CLEAN = TIMING_BAD.replace(
+    "self.window.append(time.monotonic() - t0)",
+    "np.asarray(logits)\n"
+    "        self.window.append(time.monotonic() - t0)")
+
+
+def test_timing_discipline_unfenced_window():
+    checks = _checks(TIMING_BAD, SERVING)
+    assert checks == [("timing-discipline", "error")]
+
+
+def test_timing_discipline_clean_twin():
+    assert _checks(TIMING_CLEAN, SERVING) == []
+
+
+def test_timing_discipline_wall_clock():
+    src = '''
+import time
+
+def stamp():
+    return time.time()
+'''
+    checks = _checks(src, SERVING)
+    assert checks == [("timing-discipline", "error")]
+    # scoped: the same code outside serving/bench/launch is not flagged
+    assert _checks(src, "src/repro/core/fixture.py") == []
+
+
+def test_timing_discipline_jit_local_dispatch():
+    src = '''
+import time
+import jax
+
+step = jax.jit(lambda x: x * 2)
+
+def bench(x):
+    t0 = time.monotonic()
+    y = step(x)
+    return time.monotonic() - t0
+'''
+    checks = _checks(src, "benchmarks/fixture.py")
+    assert checks == [("timing-discipline", "error")]
+    fenced = src.replace("y = step(x)", "y = jax.block_until_ready(step(x))")
+    assert _checks(fenced, "benchmarks/fixture.py") == []
+
+
+def test_timing_discipline_nested_stamp_fence_order():
+    # post-order: int(tok) fences before the stamp argument is taken —
+    # the exact on_token(rid, int(tok), time.monotonic()) engine idiom
+    src = '''
+import time
+
+class Engine:
+    def step(self, params, toks, rid):
+        t0 = time.monotonic()
+        tok = self._decode(params, toks)
+        self.sched.on_token(rid, int(tok), time.monotonic())
+'''
+    assert _checks(src, SERVING) == []
+
+
+# ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
 

@@ -205,6 +205,9 @@ def test_temperature_sampling_and_stats(moe):
     assert set(stats) == {"p50_latency_s", "p95_latency_s",
                           "p50_first_token_s", "p95_first_token_s",
                           "p50_inter_token_s", "p95_inter_token_s",
+                          "p50_queue_s", "p95_queue_s",
+                          "p50_prefill_s", "p95_prefill_s",
+                          "p50_decode_s", "p95_decode_s",
                           "pages_in_use", "pages_total",
                           "page_utilization", "kv_fragmentation",
                           "lanes_prefilling", "prefill_pages_in_use",

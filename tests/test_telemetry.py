@@ -1,0 +1,451 @@
+"""Telemetry tests: metrics-schema governance, zero-cost disabled
+tracing, traced == untraced token streams, Chrome-trace validity, and
+the reconciliation pin holding span args equal to the scheduler's
+latency windows.
+
+The expensive engine tests share one module-scoped tiny MoE (the
+test_serving.py idiom); the schema / workload / fence tests are pure
+and run on fake clocks.
+"""
+import dataclasses
+import importlib.util
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.configs import get_config, reduced
+from repro.models import abstract_params
+from repro.models import param as pm
+from repro.serving import (METRICS_SCHEMA, NULL_TRACER, MetricsSchemaError,
+                           Request, ServeEngine, Tracer, load_workload,
+                           stage_timeline, validate_metrics)
+from repro.serving import telemetry
+from repro.serving.telemetry import (NULL_SPAN, prompt_seed, schema_table)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _tiny_moe(n_experts=8, top_k=2, seed=0):
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2,
+                  n_experts=n_experts, top_k=top_k)
+    cfg = dataclasses.replace(cfg, moe_impl="dense", dtype="float32",
+                              remat_policy="full")
+    params = pm.init_params(abstract_params(cfg), jax.random.PRNGKey(seed))
+    return cfg, jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return _tiny_moe()
+
+
+def _requests(cfg, n=4, seed=3):
+    rs = np.random.RandomState(seed)
+    return [Request(rs.randint(0, cfg.vocab,
+                               int(rs.randint(4, 14))).astype(np.int32),
+                    int(rs.randint(3, 9)))
+            for _ in range(n)]
+
+
+def _fake_clock(start=100.0, step=0.125):
+    t = [start - step]
+
+    def clock():
+        t[0] += step
+        return t[0]
+    return clock
+
+
+def _load_validate_trace():
+    spec = importlib.util.spec_from_file_location(
+        "validate_trace", ROOT / "tools" / "validate_trace.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# schema governance
+# ---------------------------------------------------------------------------
+
+
+def test_schema_matches_docs_table():
+    """The table in docs/serving.md between the metrics-schema markers
+    is generated from METRICS_SCHEMA — adding/renaming a metric without
+    regenerating the docs fails here."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    begin = "<!-- metrics-schema:begin -->"
+    end = "<!-- metrics-schema:end -->"
+    assert begin in text and end in text
+    documented = text.split(begin, 1)[1].split(end, 1)[0].strip()
+    assert documented == schema_table().strip()
+
+
+def test_validate_metrics_rejects_undeclared_key():
+    ok = {"p50_latency_s": 0.1, "pages_in_use": 2.0}
+    assert validate_metrics(ok, "test") is ok
+    with pytest.raises(MetricsSchemaError, match="made_up_metric"):
+        validate_metrics({"made_up_metric": 1.0}, "test")
+
+
+def test_live_metrics_are_schema_subsets(moe):
+    """Every emitting surface (latency_stats and the wider metrics())
+    stays inside the declared schema across engine configs."""
+    cfg, params = moe
+    mask = np.ones(cfg.n_experts, np.float32)
+    mask[-2:] = 0.0
+    for kwargs in ({}, {"kv_layout": "slot"},
+                   {"prefix_cache": True},
+                   {"spec_decode": "pruned", "spec_k": 3,
+                    "expert_mask": mask}):
+        eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                          prefill_chunk=8, **kwargs)
+        eng.generate(_requests(cfg, n=2))
+        assert set(eng.latency_stats()) <= set(METRICS_SCHEMA)
+        assert set(eng.metrics()) <= set(METRICS_SCHEMA)
+
+
+def test_schema_kinds_are_closed():
+    assert {s.kind for s in METRICS_SCHEMA.values()} <= {
+        "histogram", "gauge", "counter"}
+    assert all(s.doc for s in METRICS_SCHEMA.values())
+
+
+# ---------------------------------------------------------------------------
+# disabled path: zero allocations, shared singletons
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_allocates_no_spans(moe, monkeypatch):
+    """The engine default is the shared NULL_TRACER and a full serving
+    run constructs zero Span objects (trace points cost one lookup +
+    one call)."""
+    cfg, params = moe
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                      prefill_chunk=8)
+    assert eng.tracer is NULL_TRACER
+    assert eng.tracer.span("decode") is NULL_SPAN
+    assert eng.tracer.span("x") is eng.tracer.span("y")
+
+    def boom(*a, **k):
+        raise AssertionError("Span allocated with tracing disabled")
+
+    monkeypatch.setattr(telemetry.Span, "__init__", boom)
+    outs = eng.generate(_requests(cfg, n=3))
+    assert all(len(o) > 0 for o in outs)
+
+
+def test_null_span_protocol():
+    with NULL_SPAN as sp:
+        assert sp is NULL_SPAN
+        payload = object()
+        assert sp.fence(payload) is payload
+        sp.set(anything=1)
+
+
+# ---------------------------------------------------------------------------
+# traced == untraced token streams (per engine family)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kwargs", [
+    {},                                       # paged + interleaved
+    {"schedule": "blocking"},
+    {"prefix_cache": True},
+    {"spec": True},
+], ids=["paged", "blocking", "prefix", "spec"])
+def test_tracing_leaves_streams_bit_identical(moe, kwargs):
+    cfg, params = moe
+    kwargs = dict(kwargs)
+    if kwargs.pop("spec", False):
+        mask = np.ones(cfg.n_experts, np.float32)
+        mask[-2:] = 0.0
+        kwargs.update(spec_decode="pruned", spec_k=3, expert_mask=mask)
+    reqs = _requests(cfg, n=4, seed=11)
+
+    def run(trace):
+        eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                          prefill_chunk=8, page_size=8, seed=7,
+                          trace=trace, **kwargs)
+        return eng.generate([Request(r.prompt.copy(), r.max_new_tokens)
+                             for r in reqs]), eng
+
+    refs, _ = run(None)
+    # fence_rate=1.0 blocks on every registered dispatch — the
+    # strongest perturbation tracing can apply
+    outs, eng = run(Tracer(fence_rate=1.0))
+    for ref, out in zip(refs, outs):
+        np.testing.assert_array_equal(ref, out)
+    assert eng.tracer.n_spans > 0
+    assert eng.tracer.n_fences > 0
+
+
+# ---------------------------------------------------------------------------
+# trace structure: validity + reconciliation with latency_stats
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_valid_and_reconciles(moe, tmp_path):
+    """The exported trace passes tools/validate_trace.py AND the
+    retroactive lifecycle spans carry exactly the floats the scheduler
+    pooled into its latency windows — traces and latency_stats() are
+    two views of the same stamps, not two clocks."""
+    cfg, params = moe
+    tracer = Tracer()
+    eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                      prefill_chunk=8, trace=tracer)
+    reqs = _requests(cfg, n=4, seed=5)
+    eng.generate(reqs)
+
+    trace = tracer.chrome_trace()
+    vt = _load_validate_trace()
+    assert vt.validate(trace) == []
+    out = tmp_path / "trace.json"
+    tracer.export(str(out))
+    assert vt.main([str(out)]) == 0
+
+    names = {e["name"] for e in trace["traceEvents"] if e["ph"] == "X"}
+    assert {"admission", "decode", "prefill_chunk", "prefill"} <= names
+
+    req_spans = [e for e in trace["traceEvents"]
+                 if e["ph"] == "X" and e["name"].startswith("request rid=")]
+    assert len(req_spans) == len(reqs)
+    sched = eng.scheduler
+    ttfts = sorted(e["args"]["ttft_s"] for e in req_spans)
+    assert ttfts == sorted(sched._ttft)          # exact floats
+    gaps = sorted(g for e in req_spans for g in e["args"]["itl_gaps"])
+    assert gaps == sorted(sched._itl)
+    # span durations are the same stamps scaled to microseconds
+    for e in req_spans:
+        assert e["dur"] == pytest.approx(
+            (e["args"]["prefill_s"] + e["args"]["decode_s"]) * 1e6)
+
+
+def test_queue_span_and_tracks():
+    """Retroactive lifecycle spans land on the right tracks and nest by
+    time containment (fake scheduler stamps, no engine)."""
+    from repro.serving.scheduler import Scheduler
+
+    clock = _fake_clock()
+    tracer = Tracer(clock=clock)
+    sched = Scheduler()
+    sched.on_finish = tracer.request_done
+    rid = sched.submit(Request(np.array([1, 2, 3], np.int32), 2),
+                       now=10.0)
+    sched.admit(slot=1, now=10.5)
+    sched.activate(rid, now=11.0)
+    sched.on_token(rid, 4, now=11.25)
+    assert sched.on_token(rid, 5, now=11.5)
+
+    by_name = {e["name"]: e for e in tracer.events if e["ph"] == "X"}
+    assert by_name[f"queue rid={rid}"]["tid"] == tracer._tids["queue"]
+    lane = tracer._tids["lane 1"]
+    assert by_name[f"request rid={rid}"]["tid"] == lane
+    req = by_name[f"request rid={rid}"]
+    for child in ("prefill", "decode"):
+        assert by_name[child]["tid"] == lane
+        assert by_name[child]["ts"] >= req["ts"]
+        assert (by_name[child]["ts"] + by_name[child]["dur"]
+                <= req["ts"] + req["dur"] + 1e-6)
+    assert req["args"]["n_tokens"] == 2
+    assert req["args"]["ttft_s"] == pytest.approx(1.25)
+
+
+def test_validate_trace_catches_malformed():
+    vt = _load_validate_trace()
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 0, "tid": 0, "ts": 1.0},  # no dur
+        {"ph": "Z", "name": "b", "pid": 0, "tid": 0},             # bad ph
+        {"ph": "X", "name": "c", "pid": 0, "tid": 9,              # unnamed
+         "ts": 0.0, "dur": 1.0},                                  # tid
+    ]}
+    errs = vt.validate(bad)
+    assert len(errs) >= 3
+    assert vt.validate({"traceEvents": []}) == []
+    assert vt.validate([]) != []                                  # not dict
+
+
+# ---------------------------------------------------------------------------
+# fence sampling: deterministic accumulator
+# ---------------------------------------------------------------------------
+
+
+def test_fence_accumulator_deterministic():
+    tracer = Tracer(fence_rate=0.5, clock=_fake_clock())
+    payload = np.zeros(1, np.float32)
+    for _ in range(6):
+        with tracer.span("d") as sp:
+            sp.fence(payload)
+    # acc: .5, 1.0*, .5, 1.0*, .5, 1.0* -> every 2nd close fences
+    assert tracer.n_fences == 3
+    fenced = [bool(e["args"].get("fenced"))
+              for e in tracer.events if e["ph"] == "X"]
+    assert fenced == [False, True] * 3
+
+    off = Tracer(fence_rate=0.0, clock=_fake_clock())
+    with off.span("d") as sp:
+        sp.fence(payload)
+    assert off.n_fences == 0
+
+    always = Tracer(fence_rate=1.0, clock=_fake_clock())
+    for _ in range(3):
+        with always.span("d") as sp:
+            sp.fence(payload)
+        with always.span("no-payload"):
+            pass                    # nothing registered -> never fences
+    assert always.n_fences == 3
+
+    with pytest.raises(ValueError):
+        Tracer(fence_rate=1.5)
+
+
+# ---------------------------------------------------------------------------
+# stage timelines
+# ---------------------------------------------------------------------------
+
+
+def test_stage_timeline_requires_full_stamps():
+    class St:
+        t_submit, t_admit, t_active, t_done = 1.0, 2.0, 3.5, 6.0
+        t_first_token = 4.0
+        tokens = [7, 8, 9]
+
+    tl = stage_timeline(St())
+    assert tl == {"queue_s": 1.0, "prefill_s": 1.5, "decode_s": 2.5,
+                  "total_s": 5.0, "ttft_s": 3.0, "n_tokens": 3}
+
+    class Canceled(St):
+        t_done = None
+
+    class NeverAdmitted(St):
+        t_admit = None
+
+    assert stage_timeline(Canceled()) is None
+    assert stage_timeline(NeverAdmitted()) is None
+
+
+def test_frontend_stream_timeline(moe):
+    """AsyncFrontend publishes the stage split on the TokenStream at
+    completion."""
+    import asyncio
+
+    from repro.serving.frontend import AsyncFrontend
+
+    cfg, params = moe
+
+    async def main():
+        eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                          prefill_chunk=8)
+        async with AsyncFrontend(eng) as fe:
+            stream = await fe.submit(
+                Request(np.array([1, 2, 3, 4], np.int32), 5))
+            toks = await stream.drain()
+            return stream, toks
+
+    stream, toks = asyncio.run(main())
+    tl = stream.timeline
+    assert tl is not None
+    assert tl["n_tokens"] == len(toks)
+    assert tl["queue_s"] >= 0 and tl["prefill_s"] >= 0
+    assert tl["decode_s"] >= 0 and tl["ttft_s"] > 0
+    assert tl["total_s"] == pytest.approx(
+        tl["queue_s"] + tl["prefill_s"] + tl["decode_s"])
+
+
+# ---------------------------------------------------------------------------
+# workload traces: record -> dump -> load roundtrip, committed example
+# ---------------------------------------------------------------------------
+
+
+def test_workload_roundtrip(tmp_path):
+    tracer = Tracer(clock=_fake_clock(start=5.0, step=0.25))
+    tracer.record_request(0, np.array([3, 1, 4, 1, 5], np.int32), 8)
+    tracer.record_request(1, [2, 7, 1], 4, temperature=0.7)
+    path = tmp_path / "wl.jsonl"
+    tracer.dump_workload(str(path))
+
+    back = load_workload(str(path))
+    assert [r["prompt_len"] for r in back] == [5, 3]
+    assert [r["max_new_tokens"] for r in back] == [8, 4]
+    assert back[1]["temperature"] == 0.7
+    assert back[0]["arrival_offset_s"] < back[1]["arrival_offset_s"]
+    assert back[0]["seed"] == prompt_seed([3, 1, 4, 1, 5])
+
+
+def test_prompt_seed_content_sensitive():
+    assert prompt_seed([1, 2, 3]) == prompt_seed(
+        np.array([1, 2, 3], np.int32))
+    assert prompt_seed([1, 2, 3]) != prompt_seed([1, 2, 4])
+    assert prompt_seed([1, 2, 3]) != prompt_seed([1, 2])
+
+
+def test_load_workload_validation(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text(json.dumps({"arrival_offset_s": 0.0, "prompt_len": 4})
+                 + "\n")
+    with pytest.raises(ValueError, match="missing"):
+        load_workload(str(p))
+    p.write_text(json.dumps({"arrival_offset_s": 0.0, "prompt_len": 0,
+                             "max_new_tokens": 4, "seed": 1}) + "\n")
+    with pytest.raises(ValueError, match="non-positive"):
+        load_workload(str(p))
+    p.write_text("\n")
+    with pytest.raises(ValueError, match="empty"):
+        load_workload(str(p))
+    # out-of-order arrivals are sorted, blank lines skipped
+    recs = [{"arrival_offset_s": t, "prompt_len": 2,
+             "max_new_tokens": 2, "seed": 0} for t in (0.5, 0.1)]
+    p.write_text("\n".join(json.dumps(r) for r in recs) + "\n\n")
+    assert [r["arrival_offset_s"]
+            for r in load_workload(str(p))] == [0.1, 0.5]
+
+
+def test_committed_bursty_trace():
+    """The checked-in replay trace stays loadable, bursty, and sized
+    for the trace-smoke engine config (max_len=64)."""
+    recs = load_workload(str(ROOT / "benchmarks" / "traces"
+                             / "bursty_small.jsonl"))
+    assert len(recs) == 24
+    assert all(r["prompt_len"] + r["max_new_tokens"] <= 64 for r in recs)
+    arrivals = np.array([r["arrival_offset_s"] for r in recs])
+    gaps = np.diff(np.concatenate([[0.0], arrivals]))
+    cv = float(np.std(gaps) / np.mean(gaps))
+    assert cv > 1.5          # bursty: far above Poisson's CV ~= 1
+
+
+# ---------------------------------------------------------------------------
+# sanitizer compatibility (CI stress job runs REPRO_SANITIZE=1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def sanitized():
+    sanitizer.enable(True)
+    try:
+        yield
+    finally:
+        sanitizer.clear_override()
+
+
+@pytest.mark.stress
+def test_traced_run_under_sanitizer(moe, sanitized):
+    """Tracing (including fenced closes) under the dispatch-race
+    sanitizer: no DispatchRaceError, streams identical to untraced."""
+    cfg, params = moe
+    reqs = _requests(cfg, n=4, seed=17)
+
+    def run(trace):
+        eng = ServeEngine(params, cfg, max_len=32, max_batch=2,
+                          prefill_chunk=8, page_size=8, trace=trace)
+        return eng.generate([Request(r.prompt.copy(), r.max_new_tokens)
+                             for r in reqs])
+
+    refs = run(None)
+    outs = run(Tracer(fence_rate=0.5))
+    for ref, out in zip(refs, outs):
+        np.testing.assert_array_equal(ref, out)

@@ -22,7 +22,8 @@ ROOT = Path(__file__).resolve().parent.parent
 # without requiring the caller to export PYTHONPATH=src
 sys.path.insert(0, str(ROOT / "src"))
 DOCS = ["README.md", "docs/serving.md", "docs/sparse.md",
-        "docs/analysis.md", "ROADMAP.md", "PAPER.md"]
+        "docs/analysis.md", "docs/observability.md", "ROADMAP.md",
+        "PAPER.md"]
 
 # [text](target) — excluding images and fenced code spans is overkill for
 # these docs; inline code never contains the ](... sequence we match

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace-event JSON export (``Tracer.export`` output).
+
+Checks the structural contract Perfetto / chrome://tracing rely on, so
+``make trace-smoke`` fails in CI when an exporter change would produce a
+file the viewers silently drop events from:
+
+  * top level is an object with a ``traceEvents`` list (and our exports
+    carry ``displayTimeUnit``);
+  * every event has ``ph``/``name``/``pid``/``tid``; ``ts`` (and ``dur``
+    for complete events) are non-negative numbers in microseconds;
+  * ``ph`` is one of ``X`` (complete span), ``i`` (instant, with a
+    scope ``s``), ``M`` (metadata — ``thread_name``/``process_name``
+    with ``args.name``);
+  * every ``tid`` that carries spans has a ``thread_name`` metadata
+    event, so tracks render with names instead of bare numbers.
+
+Importable: ``validate(trace) -> List[str]`` returns human-readable
+errors (empty = valid).  CLI: ``python tools/validate_trace.py out.json``
+exits non-zero and prints each error on failure.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+_PHASES = {"X", "i", "M"}
+
+
+def _num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate(trace) -> List[str]:
+    """Structural errors in a parsed Chrome-trace dict (empty = valid)."""
+    errors: List[str] = []
+    if not isinstance(trace, dict):
+        return [f"top level must be an object, got {type(trace).__name__}"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["missing/invalid 'traceEvents' (must be a list)"]
+    named_tids = set()
+    span_tids = set()
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: event must be an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            errors.append(f"{where}: unknown phase {ph!r} "
+                          f"(expected one of {sorted(_PHASES)})")
+            continue
+        for key in ("name", "pid", "tid"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        if ph == "M":
+            if ev.get("name") not in ("thread_name", "process_name"):
+                errors.append(f"{where}: metadata name must be "
+                              f"thread_name/process_name, got "
+                              f"{ev.get('name')!r}")
+            if not isinstance(ev.get("args", {}).get("name"), str):
+                errors.append(f"{where}: metadata needs args.name (str)")
+            elif ev.get("name") == "thread_name":
+                named_tids.add(ev.get("tid"))
+            continue
+        if not _num(ev.get("ts")) or ev["ts"] < 0:
+            errors.append(f"{where}: ts must be a non-negative number "
+                          f"(microseconds), got {ev.get('ts')!r}")
+        if ph == "X":
+            if not _num(ev.get("dur")) or ev["dur"] < 0:
+                errors.append(f"{where}: complete event needs "
+                              f"non-negative numeric dur, got "
+                              f"{ev.get('dur')!r}")
+            span_tids.add(ev.get("tid"))
+        elif ph == "i" and ev.get("s") not in ("t", "p", "g"):
+            errors.append(f"{where}: instant event needs scope s in "
+                          f"t/p/g, got {ev.get('s')!r}")
+    for tid in sorted(span_tids - named_tids, key=str):
+        errors.append(f"tid {tid} carries spans but has no thread_name "
+                      f"metadata — the track renders unnamed")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    if len(args) != 1:
+        print("usage: validate_trace.py TRACE_JSON", file=sys.stderr)
+        return 2
+    with open(args[0]) as f:
+        trace = json.load(f)
+    errors = validate(trace)
+    for e in errors:
+        print(f"{args[0]}: {e}", file=sys.stderr)
+    if not errors:
+        n = len(trace["traceEvents"])
+        print(f"{args[0]}: valid Chrome trace ({n} events)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
